@@ -1,0 +1,18 @@
+"""Paper Tab. 6: accuracy vs calibration batch size. COMQ's op count is
+independent of calibration size (only the one-time Gram pass scales)."""
+from benchmarks.common import PLAN, calib_tokens, eval_loss, timed, trained_model
+from repro.core import QuantSpec, materialize, quantize_model
+
+
+def run():
+    cfg, params = trained_model()
+    rows = [("t6/fp_baseline", 0.0, round(eval_loss(params, cfg), 4))]
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=3,
+                     order="greedy")
+    for n_tokens in (64, 128, 256, 512, 1024, 2048):
+        calib = calib_tokens(cfg, n_tokens=n_tokens)
+        (qp, _), us = timed(quantize_model, params, cfg, PLAN, calib, spec)
+        loss = eval_loss(materialize(qp, cfg), cfg)
+        rows.append((f"t6/comq_w4_calib{n_tokens}", round(us, 1),
+                     round(loss, 4)))
+    return rows

@@ -1,0 +1,16 @@
+"""Paper Tab. 7: accuracy vs sweep count K (expect saturation at K≈3-4)."""
+from benchmarks.common import PLAN, calib_tokens, eval_loss, trained_model
+from repro.core import QuantSpec, materialize, quantize_model
+
+
+def run():
+    cfg, params = trained_model()
+    calib = calib_tokens(cfg)
+    rows = [("t7/fp_baseline", 0.0, round(eval_loss(params, cfg), 4))]
+    for k in (1, 2, 3, 4, 5):
+        spec = QuantSpec(bits=4, granularity="per_layer", sweeps=k,
+                         order="greedy")
+        qp, _ = quantize_model(params, cfg, PLAN, calib, spec)
+        loss = eval_loss(materialize(qp, cfg), cfg)
+        rows.append((f"t7/comq_perlayer_w4_K{k}", 0.0, round(loss, 4)))
+    return rows

@@ -1,0 +1,17 @@
+"""Paper Tab. 10: λ-initialization ablation at 2 bits (λ=0.71 near-optimal
+in the paper; λ=1 over-spreads the grid at ultra-low bit-width)."""
+from benchmarks.common import PLAN, calib_tokens, eval_loss, trained_model
+from repro.core import QuantSpec, materialize, quantize_model
+
+
+def run():
+    cfg, params = trained_model()
+    calib = calib_tokens(cfg)
+    rows = [("t10/fp_baseline", 0.0, round(eval_loss(params, cfg), 4))]
+    for lam in (0.5, 0.71, 0.9, 1.0):
+        spec = QuantSpec(bits=2, granularity="per_channel", lam=lam,
+                         sweeps=3, order="greedy")
+        qp, _ = quantize_model(params, cfg, PLAN, calib, spec)
+        loss = eval_loss(materialize(qp, cfg), cfg)
+        rows.append((f"t10/comq_w2_lam{lam}", 0.0, round(loss, 4)))
+    return rows

@@ -1,0 +1,79 @@
+"""Shared benchmark machinery: a cached trained smoke model (the PTQ
+subject), eval metrics, timing."""
+from __future__ import annotations
+
+import os
+import pickle
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import RunConfig
+from repro.data import SyntheticLM
+from repro.models import BuildPlan, lm_loss
+from repro.train.trainer import Trainer
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache")
+PLAN = BuildPlan(remat=False)
+
+_MEM: Dict[str, Tuple] = {}
+
+
+def trained_model(arch: str = "h2o-danube-1.8b", steps: int = 80,
+                  seed: int = 0):
+    """Train (or load from cache) a reduced-config model on the structured
+    synthetic stream — the quantization subject for every quality table."""
+    key = f"{arch}_{steps}_{seed}"
+    if key in _MEM:
+        return _MEM[key]
+    cfg = get_smoke_config(arch)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, key + ".pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            params = pickle.load(f)
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+    else:
+        run_cfg = RunConfig(arch=arch, ckpt_dir=os.path.join(CACHE_DIR, key),
+                            ckpt_every=10_000, total_steps=steps,
+                            learning_rate=3e-3, warmup_steps=5,
+                            async_ckpt=False, seed=seed)
+        t = Trainer(cfg, PLAN, run_cfg)
+        out = t.run_loop(total_steps=steps, seq_len=64, global_batch=8)
+        params = out["state"]["params"]
+        with open(path, "wb") as f:
+            pickle.dump(jax.tree_util.tree_map(
+                lambda a: jax.device_get(a), params), f)
+    _MEM[key] = (cfg, params)
+    return cfg, params
+
+
+def eval_loss(params, cfg, plan=PLAN, batches: int = 4) -> float:
+    tot = 0.0
+    for i in range(batches):
+        d = SyntheticLM(cfg.vocab_size, seed=0).sample(8, 64, step=10_000 + i)
+        b = {"tokens": jnp.asarray(d["tokens"]),
+             "labels": jnp.asarray(d["labels"])}
+        tot += float(lm_loss(params, cfg, plan, b)[0])
+    return tot / batches
+
+
+def calib_tokens(cfg, n_tokens: int = 512, seed: int = 0):
+    seq = 64
+    batch = max(1, n_tokens // seq)
+    d = SyntheticLM(cfg.vocab_size, seed=0).sample(batch, seq, step=5_000)
+    return jnp.asarray(d["tokens"])
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0]) \
+        if jax.tree_util.tree_leaves(out) else None
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6   # µs

@@ -1,0 +1,41 @@
+"""Kernel-level microbenches: quant_matmul HBM-traffic advantage (the
+mechanism behind the decode-cell §Perf win) and solver-schedule comparison.
+Wall-times are CPU XLA (relative only); `derived` reports the analytic
+HBM-byte ratio that holds on TPU."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.kernels import ops
+
+
+def run():
+    rows = []
+    M, K, N = 32, 2048, 2048
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (M, K), jnp.bfloat16)
+    w = jax.random.normal(k2, (K, N), jnp.bfloat16)
+    u8 = jax.random.randint(k2, (K, N), 0, 256).astype(jnp.uint8)
+    scale = jnp.full((N,), 0.01)
+    z = jnp.full((N,), -128, jnp.int32)
+
+    dense = jax.jit(lambda a, b: a @ b)
+    _, us_dense = timed(dense, x, w, repeats=3)
+    rows.append(("kernel/dense_matmul_2048", round(us_dense, 1),
+                 K * N * 2))
+
+    qmm = jax.jit(lambda a, c, s, zz: ops.quant_matmul(a, c, s, zz, bits=8,
+                                                       mode="xla"))
+    _, us_q8 = timed(qmm, x, u8, scale, z, repeats=3)
+    rows.append(("kernel/quant_matmul_w8_2048", round(us_q8, 1), K * N))
+
+    from repro.core.quantizer import pack_int4
+    u4 = jax.random.randint(k2, (K, N), 0, 16).astype(jnp.uint8)
+    p4 = pack_int4(u4)
+    qmm4 = jax.jit(lambda a, c, s, zz: ops.quant_matmul(a, c, s, zz, bits=4,
+                                                        mode="xla"))
+    _, us_q4 = timed(qmm4, x, p4, scale, z, repeats=3)
+    rows.append(("kernel/quant_matmul_w4_2048", round(us_q4, 1), K * N // 2))
+    # derived column = weight bytes streamed from HBM: bf16 4x of int4
+    rows.append(("kernel/w4_weight_bytes_ratio_vs_bf16", 0.0, 4.0))
+    return rows

@@ -1,0 +1,42 @@
+"""Paper Tab. 2/5 analogue: full quantization — COMQ weights + uniform
+dynamic per-tensor activation quantization at the residual-stream block
+boundaries (a simplified stand-in for RepQ-ViT's reparameterized A-quant;
+the paper likewise plugs an external A-quant scheme into COMQ)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import PLAN, calib_tokens, eval_loss, trained_model
+from repro.core import QuantSpec, materialize, quantize_model
+
+
+def _act_quant_constrain(abits: int):
+    """Dynamic symmetric per-tensor A-quant (scale from the live absmax —
+    fully in-graph, so it composes with the scanned layer stack)."""
+    qmax = 2.0 ** (abits - 1) - 1
+
+    def constrain(x, kind):
+        if kind != "residual":
+            return x
+        x32 = x.astype(jnp.float32)
+        s = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-6) / qmax
+        q = jnp.clip(jnp.round(x32 / s), -qmax, qmax)
+        return (q * s).astype(x.dtype)
+
+    return constrain
+
+
+def run():
+    cfg, params = trained_model()
+    calib = calib_tokens(cfg)
+    fp = eval_loss(params, cfg)
+    rows = [("t2/fp_baseline", 0.0, round(fp, 4))]
+    for wbits, abits in ((4, 8), (4, 4), (2, 4)):
+        spec = QuantSpec(bits=wbits, granularity="per_channel",
+                         lam=0.9 if wbits > 2 else 0.71, sweeps=3,
+                         order="greedy")
+        qp, _ = quantize_model(params, cfg, PLAN, calib, spec)
+        mat = materialize(qp, cfg)
+        plan_aq = PLAN.replace(constrain=_act_quant_constrain(abits))
+        loss = eval_loss(mat, cfg, plan=plan_aq)
+        rows.append((f"t2/comq_w{wbits}a{abits}", 0.0, round(loss, 4)))
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Tab. 4/5 analogue: per-channel weight-only across methods/bits on a
+second architecture family (qwen2: GQA with qkv-bias)."""
+from benchmarks.common import PLAN, calib_tokens, eval_loss, trained_model
+from repro.core import QuantSpec, materialize, quantize_model
+
+
+def run():
+    cfg, params = trained_model("qwen2-7b")
+    calib = calib_tokens(cfg)
+    rows = [("t4/fp_baseline", 0.0, round(eval_loss(params, cfg), 4))]
+    for bits in (4, 3, 2):
+        for method in ("comq", "gptq", "rtn"):
+            spec = QuantSpec(bits=bits, granularity="per_channel",
+                             lam=0.9 if bits > 2 else 0.71, sweeps=3,
+                             order="greedy")
+            qp, _ = quantize_model(params, cfg, PLAN, calib, spec,
+                                   method=method)
+            loss = eval_loss(materialize(qp, cfg), cfg)
+            rows.append((f"t4/{method}_w{bits}", 0.0, round(loss, 4)))
+    return rows

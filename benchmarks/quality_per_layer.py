@@ -1,0 +1,20 @@
+"""Paper Tab. 3 analogue: *per-layer* (single shared scale) weight-only
+quantization — greedy vs cyclic COMQ (the paper's Ours vs Ours†)."""
+from benchmarks.common import PLAN, calib_tokens, eval_loss, trained_model
+from repro.core import QuantSpec, materialize, quantize_model
+
+
+def run():
+    cfg, params = trained_model()
+    calib = calib_tokens(cfg)
+    rows = [("t3/fp_baseline", 0.0, round(eval_loss(params, cfg), 4))]
+    for bits in (4, 3):
+        for order in ("greedy", "cyclic"):
+            spec = QuantSpec(bits=bits, granularity="per_layer", sweeps=3,
+                             order=order)
+            qp, _ = quantize_model(params, cfg, PLAN, calib, spec)
+            loss = eval_loss(materialize(qp, cfg), cfg)
+            tag = "" if order == "greedy" else "_cyclic"
+            rows.append((f"t3/comq_perlayer_w{bits}{tag}", 0.0,
+                         round(loss, 4)))
+    return rows

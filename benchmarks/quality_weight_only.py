@@ -1,0 +1,27 @@
+"""Paper Tab. 1 analogue: weight-only per-channel PTQ quality at 4/3/2 bits.
+
+The subject is a small LM trained on the structured synthetic stream; the
+metric is held-out eval loss (lower = better; the stand-in for ImageNet
+top-1 in this environment). Compares COMQ (greedy) vs RTN vs GPTQ."""
+import jax.numpy as jnp
+
+from benchmarks.common import PLAN, calib_tokens, eval_loss, timed, trained_model
+from repro.core import QuantSpec, materialize, quantize_model
+
+
+def run():
+    cfg, params = trained_model()
+    calib = calib_tokens(cfg)
+    fp = eval_loss(params, cfg)
+    rows = [("t1/fp_baseline", 0.0, round(fp, 4))]
+    for bits in (4, 3, 2):
+        for method in ("comq", "gptq", "rtn"):
+            spec = QuantSpec(bits=bits, granularity="per_channel",
+                             lam=0.9 if bits > 2 else 0.71, sweeps=3,
+                             order="greedy")
+            (qp, rep), us = timed(quantize_model, params, cfg, PLAN, calib,
+                                  spec, method=method)
+            loss = eval_loss(materialize(qp, cfg), cfg)
+            rows.append((f"t1/{method}_w{bits}", round(us, 1),
+                         round(loss, 4)))
+    return rows

@@ -1,0 +1,57 @@
+"""Systems table: the three-term roofline per (arch × shape × mesh) from
+the dry-run artifacts (launch/dryrun.py must have been run; cells without
+artifacts are skipped). `derived` column = dominant-term seconds."""
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.roofline.analysis import (CostTotals, roofline_terms, PEAK_FLOPS,
+                                     HBM_BW)
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch tokens."""
+    from repro.configs.base import SHAPES
+    cfg = get_config(arch)
+    s = SHAPES[shape_name]
+    n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    if s.kind == "train":
+        toks = s.global_batch * s.seq_len
+        return 6.0 * n * toks
+    if s.kind == "prefill":
+        return 2.0 * n * s.global_batch * s.seq_len
+    return 2.0 * n * s.global_batch  # decode: one token per sequence
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if "hlo" not in d or "error" in d:
+            continue
+        if d.get("overrides"):
+            continue  # baselines only; hillclimb variants live in §Perf
+        h = d["hlo"]
+        cost = CostTotals(flops=h["flops_per_device"],
+                          bytes_accessed=h["bytes_per_device"],
+                          collective_bytes=h["collective_bytes"])
+        chips = 512 if d["mesh"] == "2x16x16" else 256
+        t = roofline_terms(cost, n_chips=chips)
+        mf = model_flops(d["arch"], d["shape"])
+        useful = mf / chips / max(h["flops_per_device"], 1.0)
+        tag = f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}"
+        rows.append((tag + "/compute_s", 0.0, round(t["compute_s"], 6)))
+        rows.append((tag + "/memory_s", 0.0, round(t["memory_s"], 6)))
+        rows.append((tag + "/collective_s", 0.0,
+                     round(t["collective_s"], 6)))
+        rows.append((tag + "/dominant=" + t["dominant"], 0.0,
+                     round(t["bound_s"], 6)))
+        rows.append((tag + "/useful_flops_frac", 0.0, round(useful, 4)))
+        rows.append((tag + "/mem_gb_per_dev", 0.0,
+                     d["memory"]["per_device_total_gb"]))
+    return rows

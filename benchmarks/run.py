@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table (+ systems tables).
+
+    PYTHONPATH=src python -m benchmarks.run [--only t1,t9]
+
+Prints ``name,us_per_call,derived`` CSV. Quality tables train a cached
+small model on the structured synthetic stream and report held-out eval
+loss as the accuracy stand-in (no ImageNet in this container); systems
+tables read the dry-run artifacts.
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("t1_weight_only", "benchmarks.quality_weight_only"),
+    ("t2_full_quant", "benchmarks.quality_full_quant"),
+    ("t3_per_layer", "benchmarks.quality_per_layer"),
+    ("t4_per_channel", "benchmarks.quality_per_channel"),
+    ("t6_batchsize", "benchmarks.ablation_batchsize"),
+    ("t7_iterations", "benchmarks.ablation_iterations"),
+    ("t8_fig3_order", "benchmarks.ablation_order"),
+    ("t9_runtime", "benchmarks.runtime_compare"),
+    ("t10_lambda", "benchmarks.ablation_lambda"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated table keys (e.g. t1,t9,roofline)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if only and not any(key.startswith(o) for o in only):
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{key},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

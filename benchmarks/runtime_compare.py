@@ -1,0 +1,34 @@
+"""Paper Tab. 9: solver runtime — COMQ (backprop-free, no Hessian inverse)
+vs GPTQ (needs H⁻¹) vs RTN, on fixed-size layers. Also the blocked/panel
+schedule vs row-at-a-time (the TPU-shaped variant, DESIGN.md §3.2)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core import (QuantSpec, comq_quantize_blocked, comq_quantize_h,
+                        gptq_quantize, gram, rtn_quantize)
+
+
+def run():
+    rows = []
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=3,
+                     order="greedy")
+    spec_shared = QuantSpec(bits=4, granularity="per_channel", lam=0.9,
+                            sweeps=3, order="greedy_shared")
+    for (m, n) in ((256, 256), (512, 512), (1024, 1024)):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m))
+        x = jax.random.normal(k1, (2 * m, m))
+        w = jax.random.normal(k2, (m, n)) * 0.05
+        h = gram(x)
+        solvers = {
+            "rtn": jax.jit(lambda hh, ww: rtn_quantize(ww, spec, h=hh).q),
+            "gptq": jax.jit(lambda hh, ww: gptq_quantize(hh, ww, spec).q),
+            "comq": jax.jit(lambda hh, ww: comq_quantize_h(hh, ww, spec).q),
+            "comq_blocked": jax.jit(
+                lambda hh, ww: comq_quantize_blocked(hh, ww, spec_shared,
+                                                     block=128).q),
+        }
+        for name, fn in solvers.items():
+            _, us = timed(fn, h, w, repeats=2)
+            rows.append((f"t9/{name}_{m}x{n}", round(us, 1), m * n))
+    return rows

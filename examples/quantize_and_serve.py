@@ -1,0 +1,84 @@
+"""End-to-end driver (deliverable b): train a ~1M-param reduced config for
+a few hundred steps on the structured synthetic stream, quantize it with
+COMQ at 4 bits, write a packed quantized checkpoint, then serve batched
+requests from the quantized model — the full production workflow.
+
+    PYTHONPATH=src python examples/quantize_and_serve.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager, pack_tree, tree_bytes
+from repro.configs import get_smoke_config
+from repro.configs.base import RunConfig
+from repro.core import QuantSpec, materialize, quantize_model
+from repro.data import SyntheticLM
+from repro.models import BuildPlan, count_params, lm_loss
+from repro.serve.engine import Engine
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--workdir", default="/tmp/repro_e2e")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    plan = BuildPlan(remat=False)
+    print(f"[1/4] training {cfg.name} ({count_params(cfg):,} params) "
+          f"for {args.steps} steps")
+    run_cfg = RunConfig(arch=args.arch, ckpt_dir=args.workdir + "/ckpt",
+                        ckpt_every=100, total_steps=args.steps,
+                        learning_rate=3e-3, warmup_steps=10)
+    trainer = Trainer(cfg, plan, run_cfg)
+    out = trainer.run_loop(total_steps=args.steps, seq_len=64,
+                           global_batch=8)
+    params = out["state"]["params"]
+    print(f"      loss {out['metrics'][0]['loss']:.3f} -> "
+          f"{out['metrics'][-1]['loss']:.3f}")
+
+    print(f"[2/4] COMQ {args.bits}-bit per-channel quantization (greedy)")
+    calib = jnp.asarray(SyntheticLM(cfg.vocab_size, 0)
+                        .sample(8, 64, step=777)["tokens"])
+    spec = QuantSpec(bits=args.bits, granularity="per_channel", lam=0.9,
+                     sweeps=3, order="greedy")
+    t0 = time.time()
+    qparams, report = quantize_model(params, cfg, plan, calib, spec)
+    print(f"      {len(report.layers)} projections in {time.time()-t0:.1f}s;"
+          f" error vs RTN improved {report.total_improvement():.1%}")
+
+    print("[3/4] packed quantized checkpoint")
+    packed = pack_tree(qparams["__qlayers__"])
+    mgr = CheckpointManager(args.workdir + "/quant", keep=1)
+    mgr.save(0, packed, extra={"bits": args.bits})
+    dense_bytes = sum(l.size * l.dtype.itemsize
+                      for l in jax.tree_util.tree_leaves(params))
+    print(f"      {tree_bytes(packed):,} bytes vs {dense_bytes:,} dense "
+          f"({dense_bytes / tree_bytes(packed):.1f}x smaller)")
+
+    print("[4/4] serving batched requests from the quantized model")
+    mat = materialize(qparams, cfg)
+    data = SyntheticLM(cfg.vocab_size, 0).sample(4, 32, step=31337)
+    eng = Engine(mat, cfg, plan)
+    t0 = time.time()
+    outs = eng.generate_batch(np.asarray(data["tokens"]),
+                              max_new_tokens=16)
+    dt = time.time() - t0
+    ev = {"tokens": jnp.asarray(data["tokens"]),
+          "labels": jnp.asarray(data["labels"])}
+    print(f"      {outs.size} tokens in {dt:.1f}s "
+          f"({outs.size / dt:.1f} tok/s CPU)")
+    print(f"      fp-loss {float(lm_loss(params, cfg, plan, ev)[0]):.3f}  "
+          f"quant-loss {float(lm_loss(mat, cfg, plan, ev)[0]):.3f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Fault-tolerance demo: a training run is killed twice by an injected
+"node failure"; run_with_restarts resumes each time from the latest
+committed (atomic, async-written) checkpoint and finishes all steps.
+
+    PYTHONPATH=src python examples/train_resume.py
+"""
+import shutil
+
+from repro.ckpt import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.configs.base import RunConfig
+from repro.ft import run_with_restarts
+from repro.models import BuildPlan
+from repro.train.trainer import Trainer
+
+WORKDIR = "/tmp/repro_ft_demo"
+
+
+def main():
+    shutil.rmtree(WORKDIR, ignore_errors=True)
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    plan = BuildPlan(remat=False)
+    run_cfg = RunConfig(arch="h2o-danube-1.8b", ckpt_dir=WORKDIR,
+                        ckpt_every=5, total_steps=25, async_ckpt=True,
+                        learning_rate=3e-3, warmup_steps=3)
+    crashes = {"left": 2}
+
+    def bomb(step):
+        if step in (8, 17) and crashes["left"] > 0:
+            crashes["left"] -= 1
+            print(f"  !! injected node failure at step {step}")
+            raise RuntimeError("node failure")
+
+    attempts = {"n": 0}
+
+    def attempt(resume_step):
+        attempts["n"] += 1
+        print(f"attempt {attempts['n']}: resuming from "
+              f"{'scratch' if resume_step is None else f'step {resume_step}'}")
+        t = Trainer(cfg, plan, run_cfg, failure_hook=bomb)
+        out = t.run_loop(total_steps=25, seq_len=64, global_batch=8)
+        print(f"  finished at step {out['final_step']}, "
+              f"loss {out['metrics'][-1]['loss']:.3f}")
+        return out["final_step"]
+
+    def latest():
+        return CheckpointManager(WORKDIR).latest_step()
+
+    final = run_with_restarts(attempt, latest, max_restarts=4)
+    print(f"completed {final}/25 steps across {attempts['n']} attempts "
+          f"({2 - crashes['left']} injected failures survived)")
+
+
+if __name__ == "__main__":
+    main()

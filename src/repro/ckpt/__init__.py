@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import CheckpointManager  # noqa: F401
+from repro.ckpt.quantized import pack_tree, tree_bytes, unpack_tree  # noqa: F401

@@ -1,0 +1,60 @@
+"""Quantized checkpoint format: COMQ codes packed to their bit width.
+
+A quantized model checkpoint stores, per QTensor: packed codes (int4: two
+per byte), f32 scales and int32 zero-points — 4.25 bits/param at b=4 vs 16
+for bf16. `pack_tree`/`unpack_tree` convert between the runtime QTensor
+pytree and the storage form; CheckpointManager handles the IO.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import is_qtensor
+from repro.core.quantizer import pack_int4, unpack_int4
+
+
+def pack_tree(tree):
+    def walk(node):
+        if is_qtensor(node):
+            codes = node["codes"]
+            n_last = codes.shape[-1]
+            packed4 = (n_last % 2 == 0 and
+                       int(jnp.max(codes)) < 16)
+            out = dict(node)
+            if packed4:
+                out["codes"] = pack_int4(codes)
+                out["packed4"] = True
+                out["unpacked_last"] = n_last
+            return out
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+    return walk(tree)
+
+
+def unpack_tree(tree):
+    def walk(node):
+        if is_qtensor(node):
+            out = dict(node)
+            if out.pop("packed4", False):
+                out["codes"] = unpack_int4(node["codes"])
+                out.pop("unpacked_last", None)
+            return out
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+    return walk(tree)
+
+
+def tree_bytes(tree) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "size"))

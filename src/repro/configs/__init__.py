@@ -1,0 +1,75 @@
+"""Architecture registry.
+
+`get_config(arch)` returns the full published config; `get_smoke_config(arch)`
+returns a reduced same-family config for CPU smoke tests (small layers/width,
+few experts, tiny vocab) exercising the identical model code path.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.configs.base import (ALL_SHAPES, SHAPES, ModelConfig, RunConfig,
+                                ShapeConfig)
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def register_smoke(name: str):
+    def deco(fn):
+        _SMOKE[name] = fn
+        return fn
+    return deco
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch]()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _SMOKE:
+        raise KeyError(f"no smoke config for {arch!r}; known: {sorted(_SMOKE)}")
+    return _SMOKE[arch]()
+
+
+def list_archs():
+    return sorted(_REGISTRY)
+
+
+def shapes_for(cfg: ModelConfig):
+    """Which assigned shapes are runnable for this arch (skips recorded in
+    DESIGN.md §Arch-applicability)."""
+    out = []
+    for s in ALL_SHAPES:
+        if cfg.family == "encoder" and s.kind == "decode":
+            continue  # encoder-only: no autoregressive decode
+        if s.name == "long_500k" and not _subquadratic(cfg):
+            continue  # 500k decode needs bounded state
+        out.append(s)
+    return out
+
+
+def _subquadratic(cfg: ModelConfig) -> bool:
+    return bool(cfg.attn_free or cfg.ssm is not None or cfg.sliding_window)
+
+
+# import for registration side effects
+from repro.configs import (deepseek_67b, granite_moe_3b_a800m,  # noqa: E402,F401
+                           h2o_danube_1_8b, hymba_1_5b,
+                           llama4_maverick_400b_a17b,
+                           llama_3_2_vision_90b, mistral_large_123b,
+                           musicgen_large, qwen2_7b, rwkv6_7b, vit_base_paper)
+
+__all__ = [
+    "ModelConfig", "RunConfig", "ShapeConfig", "SHAPES", "ALL_SHAPES",
+    "get_config", "get_smoke_config", "list_archs", "shapes_for",
+]

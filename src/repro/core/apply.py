@@ -1,0 +1,156 @@
+"""Quantized parameter containers for the serving path.
+
+`QT` is a registered pytree node whose codes/scale/zero are array leaves
+and whose logical shape/bits are *static* aux data — so a params tree with
+QT leaves jits/shards/scans like any other, while the dequantization
+happens inside the compiled step (per layer, inside the scan body): HBM
+streams int4/int8 codes, not bf16 weights. This is what turns COMQ's 4-bit
+codes into a 4× reduction of the decode memory-roofline term (§Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pipeline import is_qtensor
+from repro.core.quantizer import pack_int4, unpack_int4
+
+Array = jax.Array
+
+
+class QT:
+    """Quantized tensor: codes (uint8, possibly int4-packed), per-channel
+    scale + zero-point; static logical shape."""
+
+    def __init__(self, codes, scale, z_lo, shape: Tuple[int, ...],
+                 bits: int):
+        self.codes = codes
+        self.scale = scale
+        self.z_lo = z_lo
+        self.shape = tuple(shape)
+        self.bits = int(bits)
+
+    def dequant(self, dtype=jnp.bfloat16) -> Array:
+        u = self.codes
+        if self.bits == 4:
+            u = unpack_int4(u)
+        s, z = self.scale, self.z_lo
+        if u.ndim == s.ndim + 1:   # per-channel scale over the last dim
+            s = s[..., None, :]
+            z = z[..., None, :]
+        q = u.astype(jnp.float32) + z.astype(jnp.float32)
+        w = q * s
+        # codes keep the logical rank (scan slicing drops leading dims, so
+        # `self.shape` is metadata only — u.shape IS the current shape)
+        return w.astype(dtype)
+
+
+def _qt_flatten(qt: QT):
+    return (qt.codes, qt.scale, qt.z_lo), (qt.shape, qt.bits)
+
+
+def _qt_unflatten(aux, children):
+    return QT(*children, shape=aux[0], bits=aux[1])
+
+
+jax.tree_util.register_pytree_node(QT, _qt_flatten, _qt_unflatten)
+
+
+def is_qt(x) -> bool:
+    return isinstance(x, QT)
+
+
+def dequantize_qt_tree(tree, dtype=jnp.bfloat16):
+    """Replace QT leaves with dense weights (called inside scan bodies)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.dequant(dtype) if is_qt(x) else x, tree,
+        is_leaf=is_qt)
+
+
+def fake_quantize_params(params, cfg, plan, bits: int = 4,
+                         quantize_embed: bool = True):
+    """Wrap every projection weight in a QT with RTN codes — the *layout*
+    transform used by the serving dry-run (real deployments load COMQ codes
+    from a quantized checkpoint; the compiled step is identical)."""
+    from repro.core.quantizer import init_per_channel, quantize_rtn
+
+    def to_qt(w):
+        shape = w.shape
+        lead = shape[:-2] if w.ndim > 2 else ()
+        w2 = w.reshape(-1, *shape[-2:]) if lead else w[None]
+        # per-channel over the last dim, batched over leading dims
+        def one(wl):
+            m = wl.reshape(-1, wl.shape[-1])
+            delta, z_lo, z_hi = init_per_channel(m.astype(jnp.float32),
+                                                 bits, 1.0)
+            q = quantize_rtn(m.astype(jnp.float32), delta, z_lo, z_hi)
+            u = (q - z_lo).astype(jnp.uint8)
+            return u, delta, z_lo
+        us, deltas, zs = jax.vmap(one)(w2)
+        if bits == 4:
+            us = pack_int4(us)
+        if not lead:
+            us, deltas, zs = us[0], deltas[0], zs[0]
+        else:
+            us = us.reshape(*lead, *us.shape[1:])
+            deltas = deltas.reshape(*lead, *deltas.shape[1:])
+            zs = zs.reshape(*lead, *zs.shape[1:])
+        return QT(us, deltas, zs, shape, bits)
+
+    quantizable = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                   "w_r", "w_k", "w_v", "w_g", "w_o", "w_in", "w_out",
+                   "w_xproj", "unembed"}
+    if quantize_embed:
+        quantizable = quantizable | {"embed"}
+
+    def walk(node, name=""):
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name) for v in node)
+        if name in quantizable and hasattr(node, "ndim") and node.ndim >= 2:
+            return to_qt(node)
+        return node
+
+    return walk(params)
+
+
+def qt_param_specs(qparams, dense_specs):
+    """Shardings for a QT-bearing tree from the dense param specs: codes
+    inherit the dense spec (same rank, packed last dim divides the same
+    way); scale/zero drop the last-dim axis (tiny)."""
+    from jax.sharding import PartitionSpec as P
+
+    flat_q, treedef = jax.tree_util.tree_flatten(qparams, is_leaf=is_qt)
+    flat_s = jax.tree_util.tree_leaves(dense_specs,
+                                       is_leaf=lambda x: isinstance(x, P))
+    out = []
+    i = 0
+    for leaf in flat_q:
+        spec = flat_s[i]
+        i += 1
+        if is_qt(leaf):
+            codes_rank = leaf.codes.ndim
+            # logical shape may have more dims than 2D-flattened codes
+            cs = _fit_spec(spec, codes_rank)
+            ss = _fit_spec(spec, leaf.scale.ndim, drop_last=True)
+            zs = _fit_spec(spec, leaf.z_lo.ndim, drop_last=True)
+            out.append(QT(cs, ss, zs, leaf.shape, leaf.bits))
+        else:
+            out.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _fit_spec(spec, rank, drop_last=False):
+    from jax.sharding import PartitionSpec as P
+    entries = list(spec)
+    if len(entries) > rank:
+        # collapse trailing entries (flattened dims): keep the first ones
+        entries = entries[:rank - 1] + [entries[-1]]
+    while len(entries) < rank:
+        entries.append(None)
+    if drop_last and entries:
+        entries[-1] = None
+    return P(*entries)

@@ -1,0 +1,77 @@
+"""Baselines the paper compares against (§4.2): RTN and a GPTQ/OBQ-style
+Hessian solver. Both share COMQ's grid initialization so comparisons
+isolate the *solver*, as in the paper's tables.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comq import QuantResult
+from repro.core.comq_hessian import _h_error, gram
+from repro.core.quantizer import (EPS, QuantSpec, init_per_channel,
+                                  init_per_layer, quantize_rtn)
+
+Array = jax.Array
+
+
+def rtn_quantize(w: Array, spec: QuantSpec,
+                 h: Optional[Array] = None) -> QuantResult:
+    """Round-to-nearest onto the COMQ grid (no data)."""
+    w = w.astype(jnp.float32)
+    if spec.granularity == "per_layer":
+        delta, z_lo, z_hi = init_per_layer(w, spec.bits)
+    else:
+        delta, z_lo, z_hi = init_per_channel(w, spec.bits, spec.lam)
+    q = quantize_rtn(w, delta, z_lo, z_hi)
+    err = (_h_error(h, w, q.astype(jnp.float32) * delta)
+           if h is not None else jnp.float32(0.0))
+    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi,
+                       errors=jnp.stack([err]))
+
+
+def gptq_quantize(h: Array, w: Array, spec: QuantSpec,
+                  damping: float = 0.01) -> QuantResult:
+    """GPTQ/OBQ baseline (Frantar & Alistarh): sequential rounding over the
+    input dimension with OBS error propagation through H⁻¹ (Cholesky form).
+
+    Unlike COMQ this needs the Hessian inverse and uses a *fixed* grid (no
+    δ-updates) — the paper's Tab. 4/9 comparison point.
+    """
+    h = h.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    m, n = w.shape
+    if spec.granularity == "per_layer":
+        delta, z_lo, z_hi = init_per_layer(w, spec.bits)
+    else:
+        delta, z_lo, z_hi = init_per_channel(w, spec.bits, spec.lam)
+
+    # dampen + handle dead features
+    diag = jnp.diag(h)
+    dead = diag <= EPS
+    h = h + jnp.diag(jnp.where(dead, 1.0, 0.0))
+    h = h + jnp.eye(m) * damping * jnp.mean(diag)
+    hinv = jnp.linalg.inv(h)
+
+    w0 = w
+
+    def step(i, carry):
+        w, q = carry
+        wi = w[i]                                          # (n,)
+        qi = jnp.clip(jnp.round(wi / delta),
+                      z_lo.astype(jnp.float32), z_hi.astype(jnp.float32))
+        err = (wi - qi * delta) / hinv[i, i]
+        # propagate to not-yet-quantized rows (> i); rows <= i are frozen
+        rows = jnp.arange(m)
+        mask = (rows > i).astype(jnp.float32)[:, None]
+        w = w - mask * hinv[:, i][:, None] * err[None, :]
+        q = q.at[i].set(qi)
+        return w, q
+
+    _, qf = jax.lax.fori_loop(0, m, step, (w, jnp.zeros_like(w)))
+    q = qf.astype(jnp.int32)
+    err = _h_error(h, w0, qf * delta)
+    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi,
+                       errors=jnp.stack([err]))

@@ -1,0 +1,44 @@
+"""Calibration: streaming accumulation of the Gram matrix H = XᵀX.
+
+At scale the features X are data-parallel across the mesh; `jnp` reductions
+over the sharded sample axis lower to one all-reduce of the (m, m) Gram
+block per layer — the only communication COMQ needs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class GramAccumulator:
+    """Streaming H = Σ XᵀX over calibration batches (f32)."""
+
+    def __init__(self, dim: int):
+        self.h = jnp.zeros((dim, dim), jnp.float32)
+        self.count = 0
+
+    def update(self, x: Array) -> "GramAccumulator":
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        self.h = self.h + x2.T @ x2
+        self.count += x2.shape[0]
+        return self
+
+    def value(self) -> Array:
+        return self.h
+
+
+def gram_from_tap(tap: Array) -> Array:
+    """(B, T, d) or (E, C, d) activation tap -> (d, d) Gram matrix.
+    For stacked-expert taps, call with tap[e]."""
+    x2 = tap.reshape(-1, tap.shape[-1]).astype(jnp.float32)
+    return x2.T @ x2
+
+
+def batched_gram(tap: Array) -> Array:
+    """(E, C, d) -> (E, d, d): per-expert Gram matrices in one einsum."""
+    t = tap.astype(jnp.float32)
+    return jnp.einsum("ecd,ecf->edf", t, t)

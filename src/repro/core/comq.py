@@ -1,0 +1,147 @@
+"""COMQ — coordinate-wise minimization of ‖X W_q − X W‖² (paper §3).
+
+This module is the *paper-faithful X-space solver*: it carries the residual
+U = X(W − W_q) in sample space and performs the vectorized row updates of
+eq. (6) (per-layer, Alg. 1) / eq. (9) (per-channel, Alg. 2), including the
+float initialization Q⁰ = W/δ⁰ ("becomes feasible after the 1st iteration")
+and the closed-form δ-updates eq. (7)/(10).
+
+Greedy order (§3.3) is exact and *per-column*: coordinates are visited in
+descending ‖w_i x_i‖ = ‖x_i‖·|w_i| order, realized with per-step gathers of
+X columns so all output columns still update in lockstep. Cyclic order is
+the index order. See core/comq_hessian.py for the H-space/blocked solvers
+used at scale (bit-identical, tested).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import (EPS, QuantSpec, dequantize, init_per_channel,
+                                  init_per_layer)
+
+Array = jax.Array
+
+
+@dataclass
+class QuantResult:
+    q: Array            # (m, n) int32 bit-codes in [z_lo, z_hi]
+    delta: Array        # scalar (per-layer) or (n,) (per-channel)
+    z_lo: Array
+    z_hi: Array
+    errors: Array       # (sweeps+1,) ‖X(W − W_q)‖ trajectory
+
+    @property
+    def w_q(self) -> Array:
+        return self.q.astype(jnp.float32) * self.delta
+
+
+# ---------------------------------------------------------------------------
+# update orders
+# ---------------------------------------------------------------------------
+
+def make_orders(order: str, x_col_norms: Array, w: Array) -> Array:
+    """Returns (m, n) int32: orders[t, j] = coordinate visited at step t in
+    column j. Greedy = descending ‖x_i‖·|w_ij| (paper §3.3)."""
+    m, n = w.shape
+    if order == "cyclic":
+        return jnp.broadcast_to(jnp.arange(m)[:, None], (m, n))
+    if order == "greedy":
+        keys = x_col_norms[:, None] * jnp.abs(w)          # (m, n)
+        return jnp.argsort(-keys, axis=0).astype(jnp.int32)
+    if order == "greedy_shared":
+        keys = x_col_norms * jnp.linalg.norm(w, axis=1)   # (m,) row norms
+        shared = jnp.argsort(-keys).astype(jnp.int32)
+        return jnp.broadcast_to(shared[:, None], (m, n))
+    raise ValueError(f"unknown order {order!r}")
+
+
+# ---------------------------------------------------------------------------
+# the coordinate-descent sweep (shared by per-layer / per-channel)
+# ---------------------------------------------------------------------------
+
+def _sweep(x: Array, u: Array, qf: Array, delta: Array, z_lo, z_hi,
+           orders: Array, xsq: Array):
+    """One full pass over all m coordinates (rows), vectorized over columns.
+
+    u: (N, n) residual X(W − δ·Q); qf: (m, n) codes (float during sweep 1).
+    delta/z_lo/z_hi: scalar or (n,). Returns updated (u, qf)."""
+    m, n = qf.shape
+    cols = jnp.arange(n)
+
+    def step(t, carry):
+        u, qf = carry
+        idx = orders[t]                                   # (n,)
+        xg = x[:, idx]                                    # (N, n) gather
+        qg = qf[idx, cols]                                # (n,)
+        xsq_g = xsq[idx]                                  # (n,)
+        denom = delta * xsq_g
+        # ⟨x_i, s_i⟩ / (δ‖x_i‖²) = ⟨x_i, u_j⟩/(δ‖x_i‖²) + q_old
+        ratio = jnp.sum(xg * u, axis=0) / jnp.where(denom > 0, denom, 1.0)
+        q_new = jnp.clip(jnp.round(ratio + qg),
+                         z_lo.astype(jnp.float32), z_hi.astype(jnp.float32))
+        q_new = jnp.where(xsq_g > EPS, q_new,
+                          jnp.clip(jnp.round(qg), z_lo.astype(jnp.float32),
+                                   z_hi.astype(jnp.float32)))
+        du = (q_new - qg) * delta                         # (n,)
+        u = u - xg * du[None, :]
+        qf = qf.at[idx, cols].set(q_new)
+        return u, qf
+
+    return jax.lax.fori_loop(0, m, step, (u, qf))
+
+
+def _delta_update_per_layer(x: Array, w: Array, qf: Array) -> Array:
+    xq = x @ qf
+    num = jnp.vdot(xq, x @ w)
+    den = jnp.vdot(xq, xq)
+    return jnp.where(den > EPS, num / den, 1.0)           # eq. (7)
+
+
+def _delta_update_per_channel(x: Array, w: Array, qf: Array) -> Array:
+    xq = x @ qf                                           # (N, n)
+    xw = x @ w
+    num = jnp.sum(xq * xw, axis=0)
+    den = jnp.sum(xq * xq, axis=0)
+    return jnp.where(den > EPS, num / den, 1.0)           # eq. (10)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def comq_quantize(x: Array, w: Array, spec: QuantSpec) -> QuantResult:
+    """Quantize one linear layer's weight w: (m, n) given features x: (N, m).
+
+    Follows Alg. 1 (per-layer) / Alg. 2 (per-channel) with K = spec.sweeps.
+    """
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    m, n = w.shape
+    if spec.granularity == "per_layer":
+        delta, z_lo, z_hi = init_per_layer(w, spec.bits)
+    else:
+        delta, z_lo, z_hi = init_per_channel(w, spec.bits, spec.lam)
+
+    xsq = jnp.sum(x * x, axis=0)                          # ‖x_i‖² (m,)
+    orders = make_orders(spec.order, jnp.sqrt(xsq), w)
+
+    qf = w / delta                                        # float Q⁰ = W/δ⁰
+    xw = x @ w
+    errs = [jnp.linalg.norm(xw - x @ (qf * delta))]
+
+    for _ in range(spec.sweeps):
+        u = xw - x @ (qf * delta)                         # U₀ = X(W − δQ)
+        u, qf = _sweep(x, u, qf, delta, z_lo, z_hi, orders, xsq)
+        if spec.granularity == "per_layer":
+            delta = _delta_update_per_layer(x, w, qf)
+        else:
+            delta = _delta_update_per_channel(x, w, qf)
+        errs.append(jnp.linalg.norm(xw - x @ (qf * delta)))
+
+    q = jnp.clip(jnp.round(qf), z_lo, z_hi).astype(jnp.int32)
+    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi,
+                       errors=jnp.stack(errs))

@@ -1,0 +1,203 @@
+"""COMQ in Gram/Hessian space — the at-scale solvers (DESIGN.md §3).
+
+Every COMQ quantity is a function of H = XᵀX (m×m) and W only:
+
+    ⟨x_i, s_ij⟩            = (H·R)_ij + (W_q)_ij · H_ii ,  R = W − W_q
+    ‖x_i‖²                 = H_ii
+    δ-update numerators     ⟨Xq_j, Xw_j⟩ = q_jᵀ H w_j
+    greedy keys            ‖x_i‖·|w_ij| = √H_ii · |w_ij|
+
+so the solve never touches the N×m calibration features after a single
+accumulation pass. Two implementations:
+
+* `comq_quantize_h`   — row-at-a-time, supports exact per-column greedy
+  order (gather-based), bit-identical to the X-space solver.
+* `comq_quantize_blocked` — panel/blocked updates: cross-panel residual
+  refresh is one dense (B×m)·(m×n) matmul (MXU work); the intra-panel
+  sequential sweep touches only H[blk,blk] + the Q panel (VMEM-resident in
+  the Pallas kernel `kernels/comq_panel.py`). Shared-order only — the panel
+  structure requires all columns to visit rows in the same order. Exactly
+  equals the row-at-a-time solver under the same shared order (tested).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comq import QuantResult, make_orders
+from repro.core.quantizer import (EPS, QuantSpec, init_per_channel,
+                                  init_per_layer)
+
+Array = jax.Array
+
+
+def gram(x: Array) -> Array:
+    x = x.astype(jnp.float32)
+    return x.T @ x
+
+
+def _h_error(h: Array, w: Array, wq: Array) -> Array:
+    """‖X(W − W_q)‖ from H: sqrt(tr(RᵀHR))."""
+    r = w - wq
+    val = jnp.sum(r * (h @ r))
+    return jnp.sqrt(jnp.maximum(val, 0.0))
+
+
+def _delta_update_h(h: Array, w: Array, qf: Array, per_layer: bool) -> Array:
+    hq = h @ qf
+    if per_layer:
+        num = jnp.sum(qf * (h @ w))
+        den = jnp.sum(qf * hq)
+        return jnp.where(den > EPS, num / den, 1.0)
+    num = jnp.sum(qf * (h @ w), axis=0)
+    den = jnp.sum(qf * hq, axis=0)
+    return jnp.where(den > EPS, num / den, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# row-at-a-time H-space sweep (exact per-column greedy supported)
+# ---------------------------------------------------------------------------
+
+def _sweep_h(h: Array, p: Array, qf: Array, delta: Array, z_lo, z_hi,
+             orders: Array, hdiag: Array):
+    """p: (m, n) maintained product H·R with R = W − δ·Q."""
+    m, n = qf.shape
+    cols = jnp.arange(n)
+
+    def step(t, carry):
+        p, qf = carry
+        idx = orders[t]                                   # (n,)
+        qg = qf[idx, cols]
+        hg = hdiag[idx]
+        denom = delta * hg
+        ratio = p[idx, cols] / jnp.where(denom > 0, denom, 1.0)
+        q_new = jnp.clip(jnp.round(ratio + qg),
+                         z_lo.astype(jnp.float32), z_hi.astype(jnp.float32))
+        q_new = jnp.where(hg > EPS, q_new,
+                          jnp.clip(jnp.round(qg), z_lo.astype(jnp.float32),
+                                   z_hi.astype(jnp.float32)))
+        du = (q_new - qg) * delta                         # ΔW_q row entries
+        p = p - h[:, idx] * du[None, :]                   # rank-1 per column
+        qf = qf.at[idx, cols].set(q_new)
+        return p, qf
+
+    return jax.lax.fori_loop(0, m, step, (p, qf))
+
+
+def comq_quantize_h(h: Array, w: Array, spec: QuantSpec,
+                    x_for_error: Optional[Array] = None) -> QuantResult:
+    """H-space COMQ. `h` = XᵀX. Bit-identical to comq.comq_quantize."""
+    h = h.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    m, n = w.shape
+    per_layer = spec.granularity == "per_layer"
+    if per_layer:
+        delta, z_lo, z_hi = init_per_layer(w, spec.bits)
+    else:
+        delta, z_lo, z_hi = init_per_channel(w, spec.bits, spec.lam)
+
+    hdiag = jnp.diag(h)
+    orders = make_orders(spec.order, jnp.sqrt(hdiag), w)
+    qf = w / delta
+    errs = [_h_error(h, w, qf * delta)]
+
+    for _ in range(spec.sweeps):
+        p = h @ (w - qf * delta)                          # H·R
+        p, qf = _sweep_h(h, p, qf, delta, z_lo, z_hi, orders, hdiag)
+        delta = _delta_update_h(h, w, qf, per_layer)
+        errs.append(_h_error(h, w, qf * delta))
+
+    q = jnp.clip(jnp.round(qf), z_lo, z_hi).astype(jnp.int32)
+    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi,
+                       errors=jnp.stack(errs))
+
+
+# ---------------------------------------------------------------------------
+# blocked / panel solver (the TPU-shaped schedule; shared order only)
+# ---------------------------------------------------------------------------
+
+def panel_sweep_ref(h_bb: Array, s0: Array, qf_b: Array, delta: Array,
+                    z_lo, z_hi, hdiag_b: Array):
+    """Reference intra-panel sweep (the Pallas kernel's oracle).
+
+    h_bb: (B, B) block of H; s0: (B, n) = (H·R)[blk] before the panel;
+    qf_b: (B, n) panel codes. Returns updated qf_b."""
+    B = qf_b.shape[0]
+
+    def step(t, carry):
+        s, qf_b = carry
+        qg = qf_b[t]
+        hg = hdiag_b[t]
+        denom = delta * hg
+        ratio = s[t] / jnp.where(denom > 0, denom, 1.0)
+        q_new = jnp.clip(jnp.round(ratio + qg),
+                         z_lo.astype(jnp.float32), z_hi.astype(jnp.float32))
+        q_new = jnp.where(hg > EPS, q_new,
+                          jnp.clip(jnp.round(qg), z_lo.astype(jnp.float32),
+                                   z_hi.astype(jnp.float32)))
+        du = (q_new - qg) * delta
+        s = s - h_bb[:, t][:, None] * du[None, :]
+        qf_b = qf_b.at[t].set(q_new)
+        return s, qf_b
+
+    _, qf_b = jax.lax.fori_loop(0, B, step, (s0, qf_b))
+    return qf_b
+
+
+def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
+                          block: int = 256,
+                          panel_fn=None) -> QuantResult:
+    """Blocked COMQ: cyclic or shared-greedy order. `panel_fn` defaults to
+    the pure-jnp panel sweep; the launcher swaps in the Pallas kernel."""
+    h = h.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    m, n = w.shape
+    per_layer = spec.granularity == "per_layer"
+    if per_layer:
+        delta, z_lo, z_hi = init_per_layer(w, spec.bits)
+    else:
+        delta, z_lo, z_hi = init_per_channel(w, spec.bits, spec.lam)
+
+    order_name = {"greedy": "greedy_shared"}.get(spec.order, spec.order)
+    hdiag0 = jnp.diag(h)
+    perm = make_orders(order_name, jnp.sqrt(hdiag0), w)[:, 0]   # shared (m,)
+    inv_perm = jnp.argsort(perm)
+    hp = h[perm][:, perm]
+    wp = w[perm]
+    hdiag = jnp.diag(hp)
+    panel_fn = panel_fn or panel_sweep_ref
+
+    # pad rows to a multiple of the panel size (H rows padded with zeros:
+    # zero-diagonal rows keep their code — no effect on real rows)
+    B = min(block, m)
+    m_pad = ((m + B - 1) // B) * B
+    if m_pad != m:
+        hp = jnp.pad(hp, ((0, m_pad - m), (0, m_pad - m)))
+        wp = jnp.pad(wp, ((0, m_pad - m), (0, 0)))
+        hdiag = jnp.pad(hdiag, (0, m_pad - m))
+    n_blocks = m_pad // B
+
+    qf = wp / delta
+    errs = [_h_error(hp[:m, :m], wp[:m], (qf * delta)[:m])]
+
+    for _ in range(spec.sweeps):
+        def body(b, qf):
+            r = wp - qf * delta
+            h_rows = jax.lax.dynamic_slice(hp, (b * B, 0), (B, m_pad))
+            s0 = h_rows @ r                                    # (B, n) MXU
+            h_bb = jax.lax.dynamic_slice(h_rows, (0, b * B), (B, B))
+            qf_b = jax.lax.dynamic_slice(qf, (b * B, 0), (B, n))
+            hd_b = jax.lax.dynamic_slice(hdiag, (b * B,), (B,))
+            qf_b = panel_fn(h_bb, s0, qf_b, delta, z_lo, z_hi, hd_b)
+            return jax.lax.dynamic_update_slice(qf, qf_b, (b * B, 0))
+        qf = jax.lax.fori_loop(0, n_blocks, body, qf)
+        delta = _delta_update_h(hp[:m, :m], wp[:m], qf[:m], per_layer)
+        errs.append(_h_error(hp[:m, :m], wp[:m], (qf * delta)[:m]))
+
+    q = jnp.clip(jnp.round(qf[:m]), z_lo, z_hi).astype(jnp.int32)
+    q = q[inv_perm]
+    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi,
+                       errors=jnp.stack(errs))

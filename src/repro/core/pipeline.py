@@ -1,0 +1,361 @@
+"""Whole-model COMQ: GPTQ-style sequential layer-by-layer quantization with
+*quantized propagation* — layer l+1 is calibrated on the activations
+produced by the already-quantized layers 1..l, so downstream layers absorb
+upstream quantization error (standard PTQ pipeline structure).
+
+The pipeline walks the stacked layer params, uses the model's activation
+taps (models/*.py `taps=` hooks) to get the exact input X of every
+projection, solves COMQ in H-space per projection, and returns a params
+pytree where quantized leaves are `QTensor` dicts.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibrate
+from repro.core.baselines import gptq_quantize, rtn_quantize
+from repro.core.comq_hessian import _h_error, comq_quantize_blocked, comq_quantize_h
+from repro.core.quantizer import QuantSpec
+from repro.models import transformer as tfm
+from repro.models.common import apply_norm, dtype_of
+
+Array = jax.Array
+
+# which tap feeds which weight leaf, per layer family
+DENSE_TAPS = {
+    ("attn", "wq"): "attn_in", ("attn", "wk"): "attn_in",
+    ("attn", "wv"): "attn_in", ("attn", "wo"): "wo_in",
+    ("mlp", "w_gate"): "mlp_in", ("mlp", "w_up"): "mlp_in",
+    ("mlp", "w_down"): "down_in",
+}
+MOE_TAPS = {
+    ("attn", "wq"): "attn_in", ("attn", "wk"): "attn_in",
+    ("attn", "wv"): "attn_in", ("attn", "wo"): "wo_in",
+    ("moe", "w_gate"): "expert_in", ("moe", "w_up"): "expert_in",
+    ("moe", "w_down"): "expert_down_in",
+}
+RWKV_TAPS = {
+    ("tm", "w_r"): "tm_r_in", ("tm", "w_k"): "tm_k_in",
+    ("tm", "w_v"): "tm_v_in", ("tm", "w_g"): "tm_g_in",
+    ("tm", "w_o"): "tm_o_in",
+    ("cm", "w_k"): "cm_k_in", ("cm", "w_r"): "cm_r_in",
+    ("cm", "w_v"): "cm_v_in",
+}
+SSM_EXTRA_TAPS = {
+    ("ssm", "w_in"): "ssm_in", ("ssm", "w_out"): "ssm_out_in",
+}
+CROSS_TAPS = {
+    ("xattn", "wq"): "xattn_q_in", ("xattn", "wo"): "xattn_wo_in",
+    ("mlp", "w_gate"): "mlp_in", ("mlp", "w_up"): "mlp_in",
+    ("mlp", "w_down"): "down_in",
+}
+
+
+def taps_for(cfg) -> Dict[Tuple[str, str], str]:
+    if cfg.attn_free:
+        return dict(RWKV_TAPS)
+    t = dict(MOE_TAPS if cfg.moe is not None else DENSE_TAPS)
+    if cfg.parallel_ssm_heads:
+        t.update(SSM_EXTRA_TAPS)
+    return t
+
+
+def is_qtensor(leaf) -> bool:
+    return isinstance(leaf, dict) and leaf.get("__qtensor__", False) is True
+
+
+def make_qtensor(q: Array, delta: Array, z_lo: Array, shape) -> dict:
+    """Codes stored offset-binary (q - z_lo ∈ [0, 2^b-1]) as uint8 so any
+    zero-point fits; dequant restores W_q = δ·(u + z)."""
+    u = (q - z_lo).astype(jnp.uint8)
+    return {"__qtensor__": True, "codes": u,
+            "scale": jnp.asarray(delta, jnp.float32),
+            "z_lo": jnp.asarray(z_lo, jnp.int32),
+            "shape": tuple(int(s) for s in shape)}
+
+
+def dequant_qtensor(t: dict, dtype=jnp.float32) -> Array:
+    q = t["codes"].astype(jnp.int32) + t["z_lo"]
+    w2d = q.astype(jnp.float32) * t["scale"]
+    return w2d.reshape(t["shape"]).astype(dtype)
+
+
+def dequantize_tree(tree):
+    """Replace every QTensor leaf with its dequantized dense weight."""
+    def walk(node):
+        if is_qtensor(node):
+            return dequant_qtensor(node)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+    return walk(tree)
+
+
+@dataclass
+class LayerReport:
+    layer: int
+    name: str
+    err_before: float     # ‖X(W - RTN(W))‖ on the COMQ grid init
+    err_after: float      # ‖X(W - W_q)‖ after COMQ
+    seconds: float
+
+
+@dataclass
+class QuantReport:
+    layers: List[LayerReport] = field(default_factory=list)
+
+    def total_improvement(self) -> float:
+        b = sum(r.err_before for r in self.layers)
+        a = sum(r.err_after for r in self.layers)
+        return (b - a) / max(b, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# solver dispatch
+# ---------------------------------------------------------------------------
+
+def solve(h: Array, w2d: Array, spec: QuantSpec, method: str = "comq",
+          block: int = 256):
+    if method == "comq":
+        return comq_quantize_h(h, w2d, spec)
+    if method == "comq_blocked":
+        return comq_quantize_blocked(h, w2d, spec, block=block)
+    if method == "rtn":
+        return rtn_quantize(w2d, spec, h=h)
+    if method == "gptq":
+        return gptq_quantize(h, w2d, spec)
+    raise ValueError(f"unknown method {method!r}")
+
+
+def _quantize_leaf(w: Array, tap: Array, spec: QuantSpec, method: str,
+                   per_expert: bool = False):
+    """w: any-rank weight; 2D view (in, out...) flattened appropriately.
+
+    Attention weights (d, H, hd) flatten to (d, H*hd); wo (H, hd, d) to
+    (H*hd, d); MoE (E, d, f) are solved per-expert with per-expert Grams.
+    Returns (qtensor, err_before, err_after)."""
+    shape = w.shape
+    if per_expert:
+        # stacked experts: (E, d, f) with tap (E, C, d)
+        hs = calibrate.batched_gram(tap)                 # (E, d, d)
+
+        def one(h_e, w_e):
+            r = solve(h_e, w_e, spec, method)
+            rt = rtn_quantize(w_e, spec, h=h_e)
+            return (r.q, r.delta, r.z_lo, r.errors[-1], rt.errors[-1])
+
+        q, delta, z_lo, ea, eb = jax.vmap(one)(hs, w.astype(jnp.float32))
+        # reshape per-expert scale/zero to broadcast against (E, m, n)
+        delta_b = (jnp.asarray(delta, jnp.float32)[:, None, :]
+                   if delta.ndim == 2
+                   else jnp.asarray(delta, jnp.float32)[:, None, None])
+        z_b = (z_lo[:, None, :] if z_lo.ndim == 2 else z_lo[:, None, None])
+        qt = make_qtensor(q, delta_b, z_b, shape)
+        return qt, float(jnp.sum(eb)), float(jnp.sum(ea))
+
+    # general: the weight's input dim must match the tap's feature dim
+    m = tap.shape[-1]
+    if w.ndim == 2:
+        w2d = w
+    elif w.ndim == 3 and shape[0] == m:            # (d, H, hd)
+        w2d = w.reshape(m, shape[1] * shape[2])
+    elif w.ndim == 3 and shape[0] * shape[1] == m:  # (H, hd, d)
+        w2d = w.reshape(m, shape[2])
+    else:
+        raise ValueError(f"cannot 2D-ify weight {shape} for tap dim {m}")
+
+    h = calibrate.gram_from_tap(tap)
+    r = solve(h, w2d, spec, method)
+    rt = rtn_quantize(w2d, spec, h=h)
+    qt = make_qtensor(r.q, r.delta, r.z_lo, shape)
+    return qt, float(rt.errors[-1]), float(r.errors[-1])
+
+
+# ---------------------------------------------------------------------------
+# the sequential pipeline
+# ---------------------------------------------------------------------------
+
+def _tree_slice(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _tree_set(tree, i, sub):
+    return jax.tree_util.tree_map(lambda a, s: a.at[i].set(s), tree, sub)
+
+
+def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
+                   method: str = "comq",
+                   vision_embeds: Optional[Array] = None,
+                   quantize_unembed: bool = False):
+    """Quantize all projection weights of an LM. `tokens`: (B, T) calib batch.
+
+    Returns (qparams, QuantReport). qparams has QTensor leaves; use
+    `dequantize_tree` (or the quantized serving path) to run it.
+    """
+    from repro.models.model import embed_tokens, _vlm_group_counts
+    report = QuantReport()
+    cd = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params, cfg, plan, tokens)
+    qparams = jax.tree_util.tree_map(lambda a: a, params)  # shallow copy
+    tapmap = taps_for(cfg)
+
+    layer_full_j = jax.jit(
+        lambda lp, x, st: _layer_with_taps(lp, x, st, cfg, plan))
+
+    if cfg.family == "vlm":
+        return _quantize_vlm(params, cfg, plan, x, spec, method,
+                             vision_embeds, report)
+
+    init_states = None
+    if cfg.attn_free:
+        from repro.models.rwkv import init_rwkv_state
+        init_states = init_rwkv_state(x.shape[0], cfg)
+    elif cfg.parallel_ssm_heads:
+        from repro.models.ssm import init_ssm_state
+        init_states = init_ssm_state(x.shape[0], cfg)
+
+    state = init_states
+    for l in range(cfg.n_layers):
+        lp = _tree_slice(params["layers"], l)
+        t0 = time.time()
+        _, taps, _ = layer_full_j(lp, x, state)
+        lp_q = dict(lp)
+        for (mod, leaf), tapname in tapmap.items():
+            if mod not in lp or leaf not in lp[mod]:
+                continue
+            qt, eb, ea = _quantize_leaf(lp[mod][leaf], taps[tapname], spec,
+                                        method,
+                                        per_expert=tapname.startswith("expert"))
+            lp_q = _set_nested(lp_q, mod, leaf, qt)
+            report.layers.append(LayerReport(l, f"{mod}.{leaf}", eb, ea,
+                                             time.time() - t0))
+        # propagate through the *quantized* layer
+        lp_deq = dequantize_tree(lp_q)
+        x, _, state = layer_full_j(lp_deq, x, state)
+        qparams = _store_layer(qparams, l, lp_q)
+
+    if quantize_unembed and "unembed" in params:
+        xn = apply_norm(params["final_norm"], x, cfg)
+        qt, eb, ea = _quantize_leaf(params["unembed"], xn, spec, method)
+        qparams["unembed"] = qt
+        report.layers.append(LayerReport(-1, "unembed", eb, ea, 0.0))
+    return qparams, report
+
+
+def _set_nested(lp, mod, leaf, value):
+    lp = dict(lp)
+    lp[mod] = dict(lp[mod])
+    lp[mod][leaf] = value
+    return lp
+
+
+def _store_layer(qparams, l, lp_q):
+    """Store per-layer QTensors under a side table (stacked storage would
+    force all layers to share scales)."""
+    qparams = dict(qparams)
+    table = dict(qparams.get("__qlayers__", {}))
+    table[str(l)] = lp_q
+    qparams["__qlayers__"] = table
+    return qparams
+
+
+def _layer_with_taps(lp, x, state, cfg, plan):
+    taps: Dict[str, Array] = {}
+    rwkv_state = state if cfg.attn_free else None
+    ssm_state = state if cfg.parallel_ssm_heads else None
+    y, _, _, new_state = tfm.layer_full(lp, x, cfg, plan, False,
+                                        rwkv_state=rwkv_state,
+                                        ssm_state=ssm_state, taps=taps)
+    return y, taps, new_state
+
+
+def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds, report):
+    from repro.models.model import _vlm_group_counts
+    g, spg = _vlm_group_counts(cfg)
+    cd = x.dtype
+    ve = jnp.einsum("bnv,vd->bnd", vision_embeds.astype(cd),
+                    params["vision_proj"].astype(cd))
+    qparams = dict(params)
+    table = {}
+    for gi in range(g):
+        for si in range(spg):
+            lp = _tree_slice(_tree_slice(params["groups"]["self"], gi), si)
+            taps: Dict[str, Array] = {}
+            y, _, _, _ = tfm.layer_full(lp, x, cfg, plan, False, taps=taps)
+            lp_q = dict(lp)
+            for (mod, leaf), tapname in DENSE_TAPS.items():
+                if mod not in lp or leaf not in lp[mod]:
+                    continue
+                qt, eb, ea = _quantize_leaf(lp[mod][leaf], taps[tapname],
+                                            spec, method)
+                lp_q = _set_nested(lp_q, mod, leaf, qt)
+                report.layers.append(
+                    LayerReport(gi * (spg + 1) + si, f"{mod}.{leaf}", eb, ea, 0.0))
+            x, _, _, _ = tfm.layer_full(dequantize_tree(lp_q), x, cfg, plan,
+                                        False)
+            table[f"self_{gi}_{si}"] = lp_q
+        cp = _tree_slice(params["groups"]["cross"], gi)
+        taps = {}
+        vkv = tfm.vision_kv_for_layer(cp, ve)
+        _ = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps)
+        cp_q = dict(cp)
+        for (mod, leaf), tapname in CROSS_TAPS.items():
+            if mod not in cp or leaf not in cp[mod]:
+                continue
+            qt, eb, ea = _quantize_leaf(cp[mod][leaf], taps[tapname], spec,
+                                        method)
+            cp_q = _set_nested(cp_q, mod, leaf, qt)
+            report.layers.append(
+                LayerReport(gi * (spg + 1) + spg, f"cross.{mod}.{leaf}",
+                            eb, ea, 0.0))
+        x = tfm.cross_layer_full(dequantize_tree(cp_q), x, cfg, plan, vkv)
+        table[f"cross_{gi}"] = cp_q
+    qparams["__qlayers__"] = table
+    return qparams, report
+
+
+# ---------------------------------------------------------------------------
+# materialize a runnable dequantized model
+# ---------------------------------------------------------------------------
+
+def materialize(qparams, cfg) -> Any:
+    """Fold the __qlayers__ side table back into stacked dense params."""
+    params = {k: v for k, v in qparams.items() if k != "__qlayers__"}
+    table = qparams.get("__qlayers__", {})
+    if not table:
+        return params
+    if cfg.family == "vlm":
+        from repro.models.model import _vlm_group_counts
+        g, spg = _vlm_group_counts(cfg)
+        self_p = params["groups"]["self"]
+        cross_p = params["groups"]["cross"]
+        for gi in range(g):
+            for si in range(spg):
+                deq = dequantize_tree(table[f"self_{gi}_{si}"])
+                self_p = jax.tree_util.tree_map(
+                    lambda a, s: a.at[gi, si].set(s.astype(a.dtype)),
+                    self_p, deq)
+            deq = dequantize_tree(table[f"cross_{gi}"])
+            cross_p = jax.tree_util.tree_map(
+                lambda a, s: a.at[gi].set(s.astype(a.dtype)), cross_p, deq)
+        params = dict(params)
+        params["groups"] = {"self": self_p, "cross": cross_p}
+        return params
+    layers = params["layers"]
+    for key, lp_q in table.items():
+        l = int(key)
+        deq = dequantize_tree(lp_q)
+        layers = jax.tree_util.tree_map(
+            lambda a, s: a.at[l].set(s.astype(a.dtype)), layers, deq)
+    params = dict(params)
+    params["layers"] = layers
+    if is_qtensor(params.get("unembed", None)):
+        params["unembed"] = dequant_qtensor(params["unembed"])
+    return params

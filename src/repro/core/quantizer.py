@@ -1,0 +1,95 @@
+"""Uniform quantization grids, scale/zero-point initialization, packing.
+
+The paper's setting (§3): b-bit *asymmetric uniform* quantization with
+bit-code set S = {z, z+1, ..., z + 2^b - 1} and decomposition W_q = δ·Q.
+
+* per-layer  (Alg. 1): one shared δ; init δ⁰ = mean_j ‖w_j‖∞ / 2^{b-1},
+  z = -2^{b-1} (symmetric code range around zero).
+* per-channel (Alg. 2): δ_j = λ·(max w_j - min w_j)/(2^b - 1), λ ≤ 1
+  (Tab. 10 ablation), z_j = round(min w_j / δ_j).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+EPS = 1e-12
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    bits: int = 4
+    granularity: str = "per_channel"      # per_channel | per_layer
+    lam: float = 1.0                      # λ init shrink (per-channel)
+    sweeps: int = 3                       # K in the paper (Tab. 7: 3-4 best)
+    order: str = "greedy"                 # greedy | cyclic
+
+    @property
+    def n_levels(self) -> int:
+        return 2 ** self.bits
+
+
+def init_per_layer(w: Array, bits: int) -> Tuple[Array, Array, Array]:
+    """Returns (delta0 scalar, z_lo scalar, z_hi scalar)."""
+    col_inf = jnp.max(jnp.abs(w), axis=0)             # ‖w_j‖∞ per column
+    delta0 = jnp.mean(col_inf) / (2.0 ** (bits - 1))
+    delta0 = jnp.maximum(delta0, EPS)
+    z = -(2 ** (bits - 1))
+    return delta0, jnp.int32(z), jnp.int32(z + 2 ** bits - 1)
+
+
+def init_per_channel(w: Array, bits: int, lam: float
+                     ) -> Tuple[Array, Array, Array]:
+    """Returns (delta0 (n,), z_lo (n,), z_hi (n,)) for w: (m, n)."""
+    wmax = jnp.max(w, axis=0)
+    wmin = jnp.min(w, axis=0)
+    delta0 = lam * (wmax - wmin) / (2.0 ** bits - 1.0)
+    delta0 = jnp.maximum(delta0, EPS)
+    z_lo = jnp.round(wmin / delta0).astype(jnp.int32)
+    return delta0, z_lo, z_lo + 2 ** bits - 1
+
+
+def quantize_rtn(w: Array, delta: Array, z_lo: Array, z_hi: Array) -> Array:
+    """Round-to-nearest onto the grid (baseline + COMQ initialization)."""
+    q = jnp.round(w / delta)
+    return jnp.clip(q, z_lo, z_hi).astype(jnp.int32)
+
+
+def dequantize(q: Array, delta: Array) -> Array:
+    return q.astype(jnp.float32) * delta
+
+
+# ---------------------------------------------------------------------------
+# storage: offset-binary codes (codes - z_lo in [0, 2^b-1]) packed for HBM
+# ---------------------------------------------------------------------------
+
+def to_unsigned(q: Array, z_lo: Array) -> Array:
+    return (q - z_lo).astype(jnp.uint8)
+
+
+def from_unsigned(u: Array, z_lo: Array) -> Array:
+    return u.astype(jnp.int32) + z_lo
+
+
+def pack_int4(u: Array) -> Array:
+    """Pack uint4 codes (last dim even) into uint8 pairs: low nibble first."""
+    assert u.shape[-1] % 2 == 0, "pack_int4 needs even last dim"
+    lo = u[..., 0::2].astype(jnp.uint8)
+    hi = u[..., 1::2].astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_int4(b: Array) -> Array:
+    lo = b & jnp.uint8(0x0F)
+    hi = (b >> 4) & jnp.uint8(0x0F)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*b.shape[:-1], b.shape[-1] * 2)
+
+
+def reconstruction_error(x: Array, w: Array, w_q: Array) -> Array:
+    """‖X W_q − X W‖_F — the paper's layer-wise objective (Fig. 3 metric)."""
+    return jnp.linalg.norm(x @ (w_q - w))

@@ -1,0 +1,2 @@
+from repro.ft.watchdog import (Heartbeat, RecoveryPlan, StragglerEvent,  # noqa: F401
+                               Watchdog, plan_recovery, run_with_restarts)

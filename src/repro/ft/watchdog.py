@@ -1,0 +1,118 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, restart policy.
+
+On a real multi-host cluster each host runs a `Heartbeat` (a periodically
+touched file per host on shared storage) and the trainer's `Watchdog`
+tracks per-step wall times. Policies:
+
+* **straggler**: a step slower than `straggler_factor` × the EMA step time
+  raises a `StragglerEvent` (logged; the launcher's response at scale is to
+  checkpoint + evict the slow host — here we surface and count them).
+* **dead host**: a heartbeat older than `dead_after_s` marks the host dead;
+  `plan_recovery` returns the restart decision (resume step, healthy hosts).
+* **restart**: `run_with_restarts` wraps a train function and restarts it
+  from the latest committed checkpoint up to `max_restarts` times —
+  exercised by tests/test_fault_tolerance.py with injected failures.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class StragglerEvent:
+    step: int
+    seconds: float
+    ema: float
+
+
+class Watchdog:
+    def __init__(self, straggler_factor: float = 3.0, ema_decay: float = 0.9,
+                 warmup_steps: int = 3):
+        self.factor = straggler_factor
+        self.decay = ema_decay
+        self.warmup = warmup_steps
+        self.ema: Optional[float] = None
+        self.count = 0
+        self.events: List[StragglerEvent] = []
+        self._t0: Optional[float] = None
+
+    def step_start(self):
+        self._t0 = time.time()
+
+    def step_end(self, step: int) -> Optional[StragglerEvent]:
+        dt = time.time() - self._t0
+        self.count += 1
+        ev = None
+        if self.ema is not None and self.count > self.warmup \
+                and dt > self.factor * self.ema:
+            ev = StragglerEvent(step, dt, self.ema)
+            self.events.append(ev)
+        self.ema = dt if self.ema is None else \
+            self.decay * self.ema + (1 - self.decay) * dt
+        return ev
+
+
+class Heartbeat:
+    """File-based host liveness (shared-filesystem clusters)."""
+
+    def __init__(self, directory: str, host_id: int):
+        self.path = os.path.join(directory, f"heartbeat_{host_id}")
+        os.makedirs(directory, exist_ok=True)
+        self.host_id = host_id
+
+    def beat(self, step: int):
+        with open(self.path, "w") as f:
+            json.dump({"step": step, "time": time.time()}, f)
+
+    @staticmethod
+    def alive_hosts(directory: str, dead_after_s: float = 60.0) -> Dict[int, Dict]:
+        out = {}
+        now = time.time()
+        if not os.path.isdir(directory):
+            return out
+        for name in os.listdir(directory):
+            if not name.startswith("heartbeat_"):
+                continue
+            try:
+                with open(os.path.join(directory, name)) as f:
+                    info = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+            if now - info.get("time", 0) <= dead_after_s:
+                out[int(name.split("_")[1])] = info
+        return out
+
+
+@dataclass
+class RecoveryPlan:
+    resume_step: Optional[int]
+    healthy_hosts: List[int]
+    lost_hosts: List[int]
+
+
+def plan_recovery(heartbeat_dir: str, expected_hosts: int,
+                  latest_ckpt_step: Optional[int],
+                  dead_after_s: float = 60.0) -> RecoveryPlan:
+    alive = Heartbeat.alive_hosts(heartbeat_dir, dead_after_s)
+    healthy = sorted(alive)
+    lost = [h for h in range(expected_hosts) if h not in alive]
+    return RecoveryPlan(resume_step=latest_ckpt_step, healthy_hosts=healthy,
+                        lost_hosts=lost)
+
+
+def run_with_restarts(train_fn: Callable[[Optional[int]], int],
+                      latest_step_fn: Callable[[], Optional[int]],
+                      max_restarts: int = 3) -> int:
+    """train_fn(resume_step) -> final step; raises on (injected) failure."""
+    attempts = 0
+    while True:
+        try:
+            return train_fn(latest_step_fn())
+        except RuntimeError:
+            attempts += 1
+            if attempts > max_restarts:
+                raise

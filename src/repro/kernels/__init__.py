@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for COMQ's compute hot-spots.
+
+- quant_matmul:  dequant-fused GEMM over COMQ int4/int8 codes (serving)
+- comq_panel:    in-VMEM sequential coordinate sweep (quantization solve)
+- flash_attention: block-causal flash with GQA index maps (train/prefill)
+
+Each <name>.py holds the pl.pallas_call + BlockSpec; ops.py the jit'd
+wrappers; ref.py the pure-jnp oracles used by the shape/dtype sweep tests.
+"""

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: intra-panel COMQ coordinate sweep (DESIGN.md §3.2).
+
+The blocked COMQ solver (core/comq_hessian.py) reduces each panel's cross-
+panel residual refresh to a dense MXU matmul; what remains is the strictly
+sequential B-step sweep that only touches
+
+    H[blk, blk]  (B×B)   +   S = (H·R)[blk]  (B×n)   +   the Q panel (B×n)
+
+— a working set small enough to pin entirely in VMEM. The kernel runs the
+B-step `fori_loop` in-register per column tile; the column grid dimension is
+embarrassingly parallel (per-channel COMQ columns are independent given δ,
+paper eq. (3)).
+
+Per-program VMEM at B=256, cn=256: H_bb 256 KiB + 2×(S,Q) 512 KiB ≈ 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quantizer import EPS
+
+Array = jax.Array
+
+
+def _kernel(h_bb_ref, s_ref, qf_ref, delta_ref, zlo_ref, zhi_ref, hd_ref,
+            out_ref, *, panel: int):
+    h_bb = h_bb_ref[...]                      # (B, B)
+    s = s_ref[...]                            # (B, cn)
+    qf = qf_ref[...]                          # (B, cn)
+    delta = delta_ref[...][0]                 # (cn,)
+    z_lo = zlo_ref[...][0]
+    z_hi = zhi_ref[...][0]
+    hdiag = hd_ref[...][:, 0]                 # (B,)
+
+    def step(t, carry):
+        s, qf = carry
+        qg = jax.lax.dynamic_index_in_dim(qf, t, 0, keepdims=False)
+        hg = jax.lax.dynamic_index_in_dim(hdiag, t, 0, keepdims=False)
+        st = jax.lax.dynamic_index_in_dim(s, t, 0, keepdims=False)
+        denom = delta * hg
+        ratio = st / jnp.where(denom > 0, denom, 1.0)
+        q_new = jnp.clip(jnp.round(ratio + qg), z_lo, z_hi)
+        q_new = jnp.where(hg > EPS, q_new, jnp.clip(jnp.round(qg), z_lo, z_hi))
+        du = (q_new - qg) * delta
+        hcol = jax.lax.dynamic_index_in_dim(h_bb, t, 1, keepdims=False)
+        s = s - hcol[:, None] * du[None, :]
+        qf = jax.lax.dynamic_update_index_in_dim(qf, q_new, t, 0)
+        return s, qf
+
+    _, qf = jax.lax.fori_loop(0, panel, step, (s, qf))
+    out_ref[...] = qf
+
+
+def comq_panel_pallas(h_bb: Array, s0: Array, qf: Array, delta: Array,
+                      z_lo: Array, z_hi: Array, hdiag: Array, *,
+                      col_block: int = 256, interpret: bool = False) -> Array:
+    """Drop-in replacement for core.comq_hessian.panel_sweep_ref.
+
+    h_bb: (B, B); s0/qf: (B, n); delta/z_lo/z_hi: (n,) or scalar;
+    hdiag: (B,). Returns updated qf (B, n)."""
+    B, n = qf.shape
+    delta = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n,))
+    z_lo = jnp.broadcast_to(jnp.asarray(z_lo, jnp.float32), (n,))
+    z_hi = jnp.broadcast_to(jnp.asarray(z_hi, jnp.float32), (n,))
+    cn = min(col_block, n)
+    while n % cn:
+        cn //= 2
+    grid = (n // cn,)
+    return pl.pallas_call(
+        functools.partial(_kernel, panel=B),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, B), lambda j: (0, 0)),
+            pl.BlockSpec((B, cn), lambda j: (0, j)),
+            pl.BlockSpec((B, cn), lambda j: (0, j)),
+            pl.BlockSpec((1, cn), lambda j: (0, j)),
+            pl.BlockSpec((1, cn), lambda j: (0, j)),
+            pl.BlockSpec((1, cn), lambda j: (0, j)),
+            pl.BlockSpec((B, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, cn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, n), jnp.float32),
+        interpret=interpret,
+    )(h_bb.astype(jnp.float32), s0.astype(jnp.float32),
+      qf.astype(jnp.float32), delta.reshape(1, n), z_lo.reshape(1, n),
+      z_hi.reshape(1, n), hdiag.astype(jnp.float32).reshape(B, 1))
+
+
+def panel_fn_interpret(h_bb, s0, qf, delta, z_lo, z_hi, hdiag):
+    """panel_fn adapter for comq_quantize_blocked (interpret mode)."""
+    return comq_panel_pallas(h_bb, s0, qf, delta,
+                             z_lo.astype(jnp.float32),
+                             z_hi.astype(jnp.float32), hdiag, interpret=True)

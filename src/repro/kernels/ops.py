@@ -1,0 +1,74 @@
+"""jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+On TPU the real kernels run; on CPU (this container) `interpret=True`
+executes the kernel body for correctness tests, and the `xla` mode uses the
+pure-jnp oracle (what the dry-run lowers — Pallas does not lower to the
+host platform). Mode resolution: explicit arg > REPRO_KERNEL_MODE env >
+backend default.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.comq_panel import comq_panel_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+Array = jax.Array
+
+
+def resolve_mode(mode: Optional[str] = None) -> str:
+    if mode:
+        return mode
+    env = os.environ.get("REPRO_KERNEL_MODE")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "mode", "out_dtype"))
+def quant_matmul(x: Array, codes_u: Array, scale: Array, z_lo: Array, *,
+                 bits: int = 8, mode: Optional[str] = None,
+                 out_dtype=jnp.float32) -> Array:
+    """Y = X · (scale ⊙ (codes + z)).  codes packed two-per-byte if bits=4."""
+    mode = resolve_mode(mode)
+    if mode == "xla":
+        u = codes_u
+        if bits == 4:
+            from repro.core.quantizer import unpack_int4
+            u = unpack_int4(codes_u)
+        return ref.quant_matmul_ref(x, u, scale, z_lo, out_dtype=out_dtype)
+    return quant_matmul_pallas(x, codes_u, scale, z_lo, bits=bits,
+                               out_dtype=out_dtype,
+                               interpret=(mode == "interpret"))
+
+
+def comq_panel(h_bb: Array, s0: Array, qf: Array, delta: Array, z_lo: Array,
+               z_hi: Array, hdiag: Array, *, mode: Optional[str] = None
+               ) -> Array:
+    mode = resolve_mode(mode)
+    if mode == "xla":
+        return ref.comq_panel_ref(h_bb, s0, qf, delta, z_lo, z_hi, hdiag)
+    return comq_panel_pallas(h_bb, s0, qf, delta,
+                             jnp.asarray(z_lo, jnp.float32),
+                             jnp.asarray(z_hi, jnp.float32), hdiag,
+                             interpret=(mode == "interpret"))
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int = 0, mode: Optional[str] = None) -> Array:
+    mode = resolve_mode(mode)
+    if mode == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal,
+                                       window=window).astype(q.dtype)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=(mode == "interpret"))

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: dequant-fused GEMM for COMQ-quantized weights.
+
+Y = X · W_q with W_q = diag-free per-channel form scale[n]·(u[k,n] + z[n]).
+The zero-point term factors out of the contraction:
+
+    Y[m,n] = scale[n]·( Σ_k X[m,k]·u[k,n]  +  z[n]·Σ_k X[m,k] )
+
+so the kernel streams uint8 codes HBM→VMEM (4×/8× less HBM traffic than
+bf16 weights — this is what moves the decode roofline, EXPERIMENTS.md
+§Perf), widens them to bf16 *in VMEM*, runs the MXU dot, and applies
+scale/zero in the epilogue on the last K step. int4 codes arrive packed
+two-per-byte along N and are unpacked in-register.
+
+Grid: (M/bm, N/bn, K/bk), K innermost (sequential accumulation into a VMEM
+f32 scratch). Block sizes default to MXU-aligned (128, 128, 512).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(x_ref, u_ref, scale_ref, z_ref, o_ref, acc_ref, rsum_ref, *,
+            n_k: int, packed: bool, out_dtype):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        rsum_ref[...] = jnp.zeros_like(rsum_ref)
+
+    x = x_ref[...]                                    # (bm, bk)
+    u = u_ref[...]                                    # (bk, bn) or (bk, bn//2)
+    if packed:
+        lo = (u & jnp.uint8(0x0F)).astype(jnp.uint8)
+        hi = ((u >> 4) & jnp.uint8(0x0F)).astype(jnp.uint8)
+        u = jnp.stack([lo, hi], axis=-1).reshape(u.shape[0], u.shape[1] * 2)
+    xw = x.astype(jnp.bfloat16)
+    uw = u.astype(jnp.bfloat16)
+    acc_ref[...] += jax.lax.dot(xw, uw,
+                                preferred_element_type=jnp.float32)
+    rsum_ref[...] += jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+
+    @pl.when(ki == n_k - 1)
+    def _epilogue():
+        scale = scale_ref[...].astype(jnp.float32)    # (1, bn)
+        z = z_ref[...].astype(jnp.float32)            # (1, bn)
+        y = acc_ref[...] * scale + rsum_ref[...] * (scale * z)
+        o_ref[...] = y.astype(out_dtype)
+
+
+def quant_matmul_pallas(x: Array, codes_u: Array, scale: Array, z_lo: Array,
+                        *, bits: int = 8, bm: int = 128, bn: int = 128,
+                        bk: int = 512, out_dtype=jnp.float32,
+                        interpret: bool = False) -> Array:
+    """x: (M, K) float; codes_u: (K, N) uint8 (bits=8) or (K, N//2) packed
+    (bits=4); scale/z_lo: (N,). Returns (M, N)."""
+    M, K = x.shape
+    packed = bits == 4
+    N = codes_u.shape[1] * (2 if packed else 1)
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"shape ({M},{K},{N}) not divisible by blocks ({bm},{bk},{bn})"
+    n_k = K // bk
+    un = bn // 2 if packed else bn
+
+    scale2 = scale.reshape(1, N).astype(jnp.float32)
+    z2 = z_lo.reshape(1, N).astype(jnp.float32)
+
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, packed=packed,
+                          out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, un), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[
+            _vmem((bm, bn), jnp.float32),
+            _vmem((bm, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, codes_u, scale2, z2)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

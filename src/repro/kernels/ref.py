@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quant_matmul_ref(x: Array, codes_u: Array, scale: Array, z_lo: Array,
+                     out_dtype=jnp.float32) -> Array:
+    """x: (M, K); codes_u: (K, N) uint8 offset-binary; scale/z_lo: (N,).
+
+    Y = X · W_q,  W_q[k, n] = scale[n] · (codes_u[k, n] + z_lo[n]).
+    """
+    w = (codes_u.astype(jnp.float32) + z_lo.astype(jnp.float32)) * scale
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)
+
+
+def comq_panel_ref(h_bb: Array, s0: Array, qf: Array, delta: Array,
+                   z_lo: Array, z_hi: Array, hdiag: Array) -> Array:
+    """Intra-panel COMQ sweep oracle — delegates to the core reference."""
+    from repro.core.comq_hessian import panel_sweep_ref
+    return panel_sweep_ref(h_bb, s0, qf, delta, z_lo, z_hi, hdiag)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+                        window: int = 0) -> Array:
+    """q: (BH, Tq, hd); k/v: (BH_kv, Tk, hd) with BH % BH_kv == 0 (GQA).
+
+    Plain softmax attention oracle in f32.
+    """
+    g = q.shape[0] // k.shape[0]
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.einsum("btk,bsk->bts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    Tq, Tk = q.shape[1], k.shape[1]
+    if causal:
+        qpos = jnp.arange(Tq)[:, None]
+        kpos = jnp.arange(Tk)[None, :]
+        mask = qpos >= kpos
+        if window > 0:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsk->btk", p, v.astype(jnp.float32))

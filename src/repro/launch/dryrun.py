@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh and record memory/cost/collective stats.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline via repro.roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, shapes_for
+from repro.dist.sharding import (batch_dim_spec, cache_specs,
+                                 input_batch_specs, make_constrain, named,
+                                 param_specs, dp_size, tp_size)
+from repro.launch.mesh import make_production_mesh
+from repro.models import BuildPlan
+from repro.models.model import (decode_step, init_cache, init_params,
+                                input_specs, prefill)
+from repro.optim import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+BIG_ARCHES_INT8_OPT = {"llama4-maverick-400b-a17b", "mistral-large-123b",
+                       "llama-3.2-vision-90b", "deepseek-67b"}
+
+
+def default_microbatches(gb: int, dp: int, per_shard: int = 2) -> int:
+    local = max(gb // dp, 1)
+    return max(1, local // per_shard)
+
+
+def build_plan(cfg, mesh, shape, overrides) -> BuildPlan:
+    seq_shard = overrides.get("seq_shard")
+    if seq_shard is None:
+        seq_shard = (shape.kind == "train" and cfg.family != "encoder"
+                     and shape.seq_len % tp_size(mesh) == 0)
+    constrain = make_constrain(
+        mesh, shape.global_batch, seq_shard=seq_shard,
+        block_gather=overrides.get("block_gather", False),
+        ffn_shard=overrides.get("ffn_shard", False))
+    return BuildPlan(
+        tp=tp_size(mesh),
+        attn_block_size=overrides.get("attn_block_size", 512),
+        moe_token_chunk=overrides.get("moe_token_chunk", 4096),
+        remat=(shape.kind == "train"),
+        cache_quant=bool(overrides.get("cache_quant", False)),
+        constrain=constrain,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    overrides = overrides or {}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = build_plan(cfg, mesh, shape, overrides)
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(
+        lambda k: init_params(k, cfg, plan), jax.random.PRNGKey(0))
+    if shape.kind != "train":
+        # serving runs from a bf16 inference checkpoint (f32 master is a
+        # training-only artifact)
+        params_shape = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32 else s, params_shape)
+    pspecs = param_specs(params_shape, mesh)
+    qbits = overrides.get("quantized_bits", 0)
+    if qbits and shape.kind != "train":
+        # COMQ-quantized serving: weights stream as int4/int8 codes and
+        # dequantize per layer inside the scan body (core/apply.py)
+        from repro.core.apply import fake_quantize_params, qt_param_specs
+        dense_specs = pspecs
+        params_shape = jax.eval_shape(
+            lambda p: fake_quantize_params(p, cfg, plan, bits=qbits),
+            params_shape)
+        pspecs = qt_param_specs(params_shape, dense_specs)
+    specs = input_specs(cfg, shape, plan)
+    bspecs = input_batch_specs(
+        {k: v for k, v in specs.items() if k != "cache"}, mesh,
+        shape.global_batch)
+
+    with mesh:
+        if shape.kind == "train":
+            moment_dtype = overrides.get(
+                "moment_dtype",
+                "int8" if arch in BIG_ARCHES_INT8_OPT else "float32")
+            adamw_cfg = AdamWConfig(moment_dtype=moment_dtype)
+            from repro.configs.base import RunConfig
+            run_cfg = RunConfig(
+                arch=arch, shape=shape_name,
+                microbatches=overrides.get(
+                    "microbatches",
+                    default_microbatches(shape.global_batch, dp_size(mesh))))
+            step_fn = make_train_step(cfg, plan, run_cfg, adamw_cfg)
+            state_shape = jax.eval_shape(
+                lambda ps: init_train_state(ps, adamw_cfg), params_shape)
+            ospecs = _opt_specs(state_shape, pspecs)
+            in_shardings = (named(mesh, ospecs), named(mesh, bspecs))
+            out_shardings = (named(mesh, ospecs),
+                             named(mesh, jax.tree_util.tree_map(
+                                 lambda *_: P(), {"loss": 0, "grad_norm": 0,
+                                                  "lr": 0, "step": 0})))
+            lowered = jax.jit(step_fn, in_shardings=in_shardings,
+                              out_shardings=out_shardings,
+                              donate_argnums=(0,)).lower(
+                state_shape, {k: specs[k] for k in bspecs})
+        elif shape.kind == "prefill":
+            b = batch_dim_spec(mesh, shape.global_batch)
+            cache_shape = jax.eval_shape(
+                lambda: init_cache(cfg, plan, shape.global_batch,
+                                   shape.seq_len))
+            cspecs = cache_specs(cache_shape, mesh, shape.global_batch)
+
+            def prefill_fn(params, tokens, vision_embeds=None):
+                return prefill(params, cfg, plan, tokens,
+                               vision_embeds=vision_embeds)
+
+            args = [params_shape, specs["tokens"]]
+            in_sh = [named(mesh, pspecs), named(mesh, bspecs["tokens"])]
+            if "vision_embeds" in specs:
+                args.append(specs["vision_embeds"])
+                in_sh.append(named(mesh, bspecs["vision_embeds"]))
+            out_sh = (NamedSharding(mesh, P(b, "model")),
+                      _prefill_cache_shardings(cfg, plan, shape, mesh))
+            lowered = jax.jit(prefill_fn, in_shardings=tuple(in_sh),
+                              out_shardings=out_sh).lower(*args)
+        else:  # decode
+            b = batch_dim_spec(mesh, shape.global_batch)
+            cache_shape = specs["cache"]
+            cspecs = cache_specs(cache_shape, mesh, shape.global_batch)
+
+            def serve_step(params, cache, tokens, pos):
+                return decode_step(params, cfg, plan, cache, tokens, pos)
+
+            in_sh = (named(mesh, pspecs), named(mesh, cspecs),
+                     named(mesh, bspecs["tokens"]),
+                     NamedSharding(mesh, P()))
+            out_sh = (NamedSharding(mesh, P(b, "model")),
+                      named(mesh, cspecs))
+            lowered = jax.jit(serve_step, in_shardings=in_sh,
+                              out_shardings=out_sh,
+                              donate_argnums=(1,)).lower(
+                params_shape, cache_shape, specs["tokens"], specs["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "overrides": overrides,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "per_device_total_gb": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30,
+                3),
+        },
+        "xla_cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed") if k in cost},
+    }
+    # roofline terms from the compiled HLO (trip-count aware)
+    try:
+        from repro.roofline.analysis import analyze_compiled
+        result["hlo"] = analyze_compiled(compiled)
+    except Exception as e:  # keep the dry-run result even if parsing fails
+        result["hlo_error"] = f"{type(e).__name__}: {e}"
+    return result
+
+
+def _opt_specs(state_shape, pspecs):
+    """Build shardings for the whole train state from the param specs.
+    int8 moment dicts ({"q","scale"}) inherit the param's spec."""
+    from jax.sharding import PartitionSpec as PS
+
+    def moment_spec(ps, leaf):
+        if isinstance(leaf, dict):
+            # the blockwise scale shrinks the last dim ~256×: replicate it
+            # on that axis (tiny) so divisibility never constrains specs
+            scale_spec = PS(*ps[:-1], None) if len(ps) else ps
+            return {"q": ps, "scale": scale_spec}
+        return ps
+
+    is_enc = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    m = state_shape["opt"]["m"]
+    flat_p = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, PS))
+    flat_m = jax.tree_util.tree_leaves(m, is_leaf=is_enc)
+    mspecs = [moment_spec(ps, lf) for ps, lf in zip(flat_p, flat_m)]
+    mdef = jax.tree_util.tree_structure(m, is_leaf=is_enc)
+    mspec = jax.tree_util.tree_unflatten(mdef, mspecs)
+    return {"params": pspecs,
+            "opt": {"step": PS(), "m": mspec, "v": mspec}}
+
+
+def _prefill_cache_shardings(cfg, plan, shape, mesh):
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, plan, shape.global_batch, shape.seq_len))
+    return named(mesh, cache_specs(cache_shape, mesh, shape.global_batch))
+
+
+def run_cell(arch, shape_name, multi_pod, overrides=None, out_dir=OUT_DIR):
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    try:
+        res = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                         overrides=overrides)
+        status = "ok"
+    except Exception as e:
+        res = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+        status = "FAIL"
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if not (overrides or {}) else "__" + "_".join(
+        f"{k}-{v}" for k, v in sorted(overrides.items()))
+    with open(os.path.join(out_dir, tag + suffix + ".json"), "w") as f:
+        json.dump(res, f, indent=1)
+    mem = res.get("memory", {}).get("per_device_total_gb", "-")
+    print(f"[{status}] {tag} mem/dev={mem}GB "
+          f"compile={res.get('compile_s', '-')}s", flush=True)
+    if status == "FAIL":
+        print(res["error"], flush=True)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    ap.add_argument("--override", action="append", default=[],
+                    help="key=value (int/bool/str) plan overrides")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        if v in ("true", "false"):
+            v = v == "true"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    if args.all:
+        cells = []
+        for arch in list_archs():
+            cfg = get_config(arch)
+            if cfg.family == "encoder":
+                continue  # paper's own arch: separate smoke/bench path
+            for s in shapes_for(cfg):
+                cells.append((arch, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for mp in meshes:
+        for arch, shape_name in cells:
+            run_cell(arch, shape_name, mp, overrides or None, args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

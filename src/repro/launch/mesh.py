@@ -1,0 +1,33 @@
+"""Production mesh builders. Functions (not module constants) so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod; multi-pod adds a leading pod axis (2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) > n:
+        import numpy as np
+        from jax.sharding import Mesh
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+    raise RuntimeError(
+        f"need {n} devices for mesh {shape}, have {len(devices)} — the "
+        f"dry-run entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
+        f"device_count=512 before importing jax")
+
+
+def make_smoke_mesh():
+    """Single-device mesh with the same axis names (CPU tests)."""
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

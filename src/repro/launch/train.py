@@ -1,0 +1,61 @@
+"""End-to-end training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --smoke \
+        --steps 50 --batch 8 --seq 128
+
+`--smoke` runs the reduced config on local devices (CPU-runnable); the full
+configs are exercised via the dry-run (launch/dryrun.py). On a real cluster
+this same entrypoint runs under `jax.distributed.initialize()` with the
+production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import RunConfig
+from repro.models import BuildPlan
+from repro.optim import AdamWConfig
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "int8"])
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    plan = BuildPlan(remat=args.remat)
+    run_cfg = RunConfig(arch=args.arch, microbatches=args.microbatches,
+                        learning_rate=args.lr, total_steps=args.steps,
+                        warmup_steps=max(args.steps // 10, 1),
+                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, plan, run_cfg,
+                      adamw_cfg=AdamWConfig(moment_dtype=args.moment_dtype))
+    out = trainer.run_loop(total_steps=args.steps, seq_len=args.seq,
+                           global_batch=args.batch)
+    losses = [m["loss"] for m in out["metrics"]]
+    print(json.dumps({
+        "arch": cfg.name, "steps": out["final_step"],
+        "first_loss": round(losses[0], 4), "last_loss": round(losses[-1], 4),
+        "stragglers": len(trainer.watchdog.events),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Shared model building blocks: initializers, norms, RoPE, activations.
+
+All models are pure-functional pytrees (nested dicts of jnp arrays). Layer
+stacks are *stacked along a leading L axis* and executed with `lax.scan`,
+which keeps HLO size independent of depth (critical for the 88-95 layer
+dry-run configs compiled on a single CPU core).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def dtype_of(name: str):
+    return DTYPES[name]
+
+
+# ---------------------------------------------------------------------------
+# initializers (create stacked params directly: leading dims = layer axes)
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, shape: Sequence[int], scale: float | None = None,
+               dtype=jnp.float32) -> Array:
+    """Truncated-normal fan-in init. `shape[:-2]` are stacking dims."""
+    fan_in = shape[-2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: Array, shape: Sequence[int], dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32) -> Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32) -> Array:
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key: Array, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, weight: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: Array, weight: Array, bias: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_params(key, cfg, shape_prefix=()) -> dict:
+    d = cfg.d_model
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": ones_init(key, (*shape_prefix, d))}
+    return {"scale": ones_init(key, (*shape_prefix, d)),
+            "bias": zeros_init(key, (*shape_prefix, d))}
+
+
+def apply_norm(params: dict, x: Array, cfg) -> Array:
+    if "bias" in params:
+        return layernorm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rmsnorm(x, params["scale"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE — interleaved-pair formulation.
+#
+# We use the interleaved (GPT-NeoX "rotate pairs (2i, 2i+1)") layout rather
+# than the rotate-half layout: pairs are *adjacent*, so the head_dim axis can
+# be sharded into contiguous chunks (any multiple of 2) without crossing
+# shard boundaries. This is what lets the KV cache shard on head_dim when
+# n_kv_heads < model-axis size (see dist/sharding.py).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name in ("silu", "swish"):
+        return jax.nn.silu
+    if name in ("gelu", "gelu_mlp"):
+        return jax.nn.gelu
+    if name == "relu_sq":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m

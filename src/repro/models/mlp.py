@@ -1,0 +1,36 @@
+"""Feed-forward blocks: gated (llama-style), plain (musicgen/ViT), and the
+RWKV squared-relu channel mix lives in rwkv.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Array, act_fn, dense_init
+
+
+def init_mlp(key: Array, cfg, stack=()) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu_mlp":   # plain 2-matrix MLP
+        return {"w_up": dense_init(ks[0], (*stack, d, f)),
+                "w_down": dense_init(ks[1], (*stack, f, d))}
+    return {"w_gate": dense_init(ks[0], (*stack, d, f)),
+            "w_up": dense_init(ks[1], (*stack, d, f)),
+            "w_down": dense_init(ks[2], (*stack, f, d))}
+
+
+def apply_mlp(p: dict, x: Array, cfg, taps=None, constrain=None) -> Array:
+    cd = x.dtype
+    act = act_fn(cfg.act)
+    if "w_gate" in p:
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(cd))
+        u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(cd))
+        h = act(g) * u
+    else:
+        h = act(jnp.einsum("btd,df->btf", x, p["w_up"].astype(cd)))
+    if constrain is not None:
+        h = constrain(h, "ffn_hidden")
+    if taps is not None:
+        taps["mlp_in"] = x        # feeds w_gate / w_up
+        taps["down_in"] = h       # feeds w_down
+    return jnp.einsum("btf,fd->btd", h, p["w_down"].astype(cd))

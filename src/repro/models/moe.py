@@ -1,0 +1,122 @@
+"""Mixture-of-experts layer with static shapes and expert parallelism.
+
+Dispatch is GShard-style (one-hot capacity buckets) but *chunked over the
+token axis with `lax.scan`* so the dispatch/combine tensors stay small; the
+expert GEMMs are batched einsums over the (padded) expert axis, which shards
+cleanly across the model mesh axis (EP). Tokens overflowing an expert's
+capacity are dropped (contribute zero) — standard for static-shape MoE.
+
+Expert count is padded to a multiple of the TP degree (granite 40 -> 48 on a
+16-way axis); padded experts get -inf router logits so no token routes there.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Array, act_fn, dense_init
+
+
+def init_moe(key: Array, cfg, n_experts_padded: int, stack=()) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    e = n_experts_padded
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (*stack, d, e), scale=0.02),
+        "w_gate": dense_init(ks[1], (*stack, e, d, f)),
+        "w_up": dense_init(ks[2], (*stack, e, d, f)),
+        "w_down": dense_init(ks[3], (*stack, e, f, d)),
+    }
+
+
+def _route(logits: Array, n_real: int, top_k: int):
+    """logits: (N, Ep). Returns (weights, ids): (N, k)."""
+    e_pad = logits.shape[-1]
+    if n_real < e_pad:
+        neg = jnp.full((e_pad - n_real,), -1e30, logits.dtype)
+        logits = logits.at[..., n_real:].set(neg) if hasattr(logits, "at") else logits
+    w, ids = jax.lax.top_k(logits, top_k)
+    w = jax.nn.softmax(w.astype(jnp.float32), axis=-1)
+    return w, ids
+
+
+def _dispatch_chunk(x: Array, p: dict, cfg, n_real: int, capacity: int) -> Tuple[Array, Array]:
+    """x: (N, d) one token chunk -> (y (N, d), aux_loss scalar)."""
+    cd = x.dtype
+    N, d = x.shape
+    e_pad = p["router"].shape[-1]
+    k = cfg.moe.top_k
+    logits = jnp.einsum("nd,de->ne", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    weights, ids = _route(logits, n_real, k)             # (N, k)
+
+    # position of each (token, slot) within its expert's capacity bucket
+    onehot = jax.nn.one_hot(ids, e_pad, dtype=jnp.int32)       # (N, k, E)
+    flat = onehot.reshape(N * k, e_pad)
+    pos_in_e = jnp.cumsum(flat, axis=0) - flat                 # (N*k, E)
+    pos = (pos_in_e * flat).sum(-1).reshape(N, k)              # (N, k)
+    keep = pos < capacity
+
+    # dispatch tensor (N, k, E, C) is never materialized: build (N, E*C)
+    slot = ids * capacity + pos                                # (N, k)
+    slot = jnp.where(keep, slot, e_pad * capacity)             # overflow bin
+    disp = jax.nn.one_hot(slot, e_pad * capacity + 1, dtype=cd)[..., :-1]
+    disp = disp.reshape(N, k, e_pad, capacity)
+
+    xb = jnp.einsum("nkec,nd->ecd", disp, x)                   # (E, C, d)
+    act = act_fn(cfg.act)
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", xb, p["w_gate"].astype(cd))
+        u = jnp.einsum("ecd,edf->ecf", xb, p["w_up"].astype(cd))
+        h = act(g) * u
+    else:
+        h = act(jnp.einsum("ecd,edf->ecf", xb, p["w_up"].astype(cd)))
+    yb = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cd))  # (E, C, d)
+
+    comb = disp * weights.astype(cd)[:, :, None, None]
+    y = jnp.einsum("nkec,ecd->nd", comb, yb)
+
+    # load-balance aux loss (Switch-style)
+    me = jnp.mean(jax.nn.softmax(logits, -1), axis=0)          # (E,)
+    ce = jnp.mean(onehot.sum(1).astype(jnp.float32), axis=0)
+    aux = e_pad * jnp.sum(me * ce)
+    return y, aux, (xb, h)
+
+
+def apply_moe(p: dict, x: Array, cfg, n_experts_padded: int,
+              token_chunk: int = 4096, taps=None) -> Tuple[Array, Array]:
+    """x: (B, T, d) -> (y, aux_loss). Token axis chunked with lax.scan."""
+    B, T, d = x.shape
+    n_real = cfg.moe.n_experts
+    flat = x.reshape(B * T, d)
+    N = flat.shape[0]
+    chunk = min(token_chunk, N)
+    while N % chunk:
+        chunk //= 2
+    n_chunks = N // chunk
+    capacity = max(8, int(chunk * cfg.moe.top_k * cfg.moe.capacity_factor
+                          / max(cfg.moe.n_experts, 1)))
+
+    if taps is not None:
+        # calibration path: single pass, keep the routed expert buffers
+        y, a, (xb, h) = _dispatch_chunk(flat, p, cfg, n_real,
+                                        max(8, int(N * cfg.moe.top_k *
+                                                   cfg.moe.capacity_factor /
+                                                   max(cfg.moe.n_experts, 1))))
+        taps["router_in"] = x
+        taps["expert_in"] = xb          # (E, C, d): feeds w_gate/w_up
+        taps["expert_down_in"] = h      # (E, C, f): feeds w_down
+        return y.reshape(B, T, d), a
+
+    def step(aux, xc):
+        y, a, _ = _dispatch_chunk(xc, p, cfg, n_real, capacity)
+        return aux + a, y
+
+    # remat each chunk: the (chunk, k, E, C) dispatch one-hots would
+    # otherwise be saved across all chunks for the backward pass
+    step = jax.checkpoint(step)
+    aux, ys = jax.lax.scan(step, jnp.float32(0.0),
+                           flat.reshape(n_chunks, chunk, d))
+    return ys.reshape(B, T, d), aux / n_chunks

@@ -1,0 +1,196 @@
+"""RWKV6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+The wkv recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+                    o_t = r_t (diag(u) k_t v_t^T + S_{t-1})
+is evaluated in *chunked matrix form*: within a chunk of size 16 the
+pairwise decay factors exp(L_{t-1} - L_s) are factored into r̃ = r*exp(L)
+and k̃ = k*exp(-L) (safe in f32 because chunk length × |log w| is bounded —
+log-decay is clamped to [-5, 0], which only affects decays that zero the
+state within one chunk anyway). Cross-chunk state is carried by `lax.scan`.
+This turns the sequential recurrence into MXU matmuls — the TPU adaptation
+of the CUDA wkv kernel (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Array, dense_init, zeros_init
+
+WKV_CHUNK = 16
+LOGW_MIN = -5.0
+
+
+class RWKVState(NamedTuple):
+    x_tm: Array      # (B, 1, d) previous token for time-mix shift
+    x_cm: Array      # (B, 1, d) previous token for channel-mix shift
+    s: Array         # (B, H, hd, hd) wkv state (k-major, v-minor)
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    hd = cfg.rwkv.head_dim
+    h = d // hd
+    return d, h, hd
+
+
+def init_time_mix(key: Array, cfg, stack=()) -> dict:
+    d, h, hd = _dims(cfg)
+    r = cfg.rwkv
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_base": zeros_init(ks[0], (*stack, d)) + 0.5,
+        "w1_ts": dense_init(ks[1], (*stack, d, 5 * r.token_shift_lora)),
+        "w2_ts": dense_init(ks[2], (*stack, 5, r.token_shift_lora, d)),
+        "mu_rkvwg": zeros_init(ks[3], (*stack, 5, d)) + 0.5,
+        "w_r": dense_init(ks[4], (*stack, d, d)),
+        "w_k": dense_init(ks[5], (*stack, d, d)),
+        "w_v": dense_init(ks[6], (*stack, d, d)),
+        "w_g": dense_init(ks[7], (*stack, d, d)),
+        "w0_decay": zeros_init(ks[8], (*stack, d)) - 4.0,
+        "w1_decay": dense_init(ks[9], (*stack, d, r.decay_lora)),
+        "w2_decay": dense_init(ks[10], (*stack, r.decay_lora, d)),
+        "u_bonus": zeros_init(ks[11], (*stack, d)),
+        "ln_w": zeros_init(key, (*stack, d)) + 1.0,      # per-head groupnorm
+        "w_o": dense_init(key, (*stack, d, d)),
+    }
+
+
+def init_channel_mix(key: Array, cfg, stack=()) -> dict:
+    d = cfg.d_model
+    f = cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "mu_k": zeros_init(ks[0], (*stack, d)) + 0.5,
+        "mu_r": zeros_init(ks[1], (*stack, d)) + 0.5,
+        "w_k": dense_init(ks[2], (*stack, d, f)),
+        "w_v": dense_init(ks[3], (*stack, f, d)),
+        "w_r": dense_init(key, (*stack, d, d)),
+    }
+
+
+def init_rwkv_state(batch: int, cfg, dtype=jnp.float32) -> RWKVState:
+    d, h, hd = _dims(cfg)
+    return RWKVState(x_tm=jnp.zeros((batch, 1, d), dtype),
+                     x_cm=jnp.zeros((batch, 1, d), dtype),
+                     s=jnp.zeros((batch, h, hd, hd), dtype))
+
+
+def _token_shift(x: Array, x_prev: Array) -> Array:
+    """shifted[t] = x[t-1], with x_prev filling slot 0. x: (B, T, d)."""
+    return jnp.concatenate([x_prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: dict, x: Array, xx: Array):
+    """Data-dependent lerp -> the five mixed inputs (r,k,v,w,g)."""
+    B, T, d = x.shape
+    base = x + xx * p["mu_base"].astype(x.dtype)
+    h1 = jnp.einsum("btd,df->btf", base, p["w1_ts"].astype(x.dtype))
+    h1 = jnp.tanh(h1).reshape(B, T, 5, -1)
+    lora = jnp.einsum("btgf,gfd->btgd", h1, p["w2_ts"].astype(x.dtype))
+    mix = p["mu_rkvwg"].astype(x.dtype)[None, None] + lora       # (B,T,5,d)
+    return [x + xx * mix[:, :, i] for i in range(5)]
+
+
+def _wkv_chunk(r: Array, k: Array, v: Array, logw: Array, u: Array,
+               s0: Array):
+    """One chunk. r/k/v/logw: (B, C, H, hd) f32; u: (H, hd); s0: (B,H,hd,hd).
+    Returns (out (B,C,H,hd), s_end)."""
+    B, C, H, hd = r.shape
+    L = jnp.cumsum(logw, axis=1)                       # inclusive
+    Lprev = L - logw                                   # exclusive
+    r_t = r * jnp.exp(Lprev)
+    k_t = k * jnp.exp(-L)
+    att = jnp.einsum("bchk,bshk->bhcs", r_t, k_t)      # (B,H,C,C)
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    att = jnp.where(tri[None, None], att, 0.0)
+    diag = jnp.einsum("bchk,bchk->bhc", r, u[None, None] * k)
+    out = jnp.einsum("bhcs,bshk->bchk", att, v)
+    out = out + diag.transpose(0, 2, 1)[..., None] * v
+    out = out + jnp.einsum("bchk,bhkv->bchv", r_t, s0)
+    k_end = k * jnp.exp(L[:, -1:] - L)                 # decay to chunk end
+    s_end = jnp.exp(L[:, -1])[..., None] * s0 + \
+        jnp.einsum("bchk,bchv->bhkv", k_end, v)
+    return out, s_end
+
+
+def apply_time_mix(p: dict, x: Array, cfg, state: RWKVState, taps=None
+                   ) -> Tuple[Array, Array, Array]:
+    """x: (B, T, d) -> (out, new_x_prev, new_s)."""
+    d, H, hd = _dims(cfg)
+    B, T, _ = x.shape
+    cd = x.dtype
+    x_prev = state.x_tm
+    xx = _token_shift(x, x_prev) - x
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xx)
+    if taps is not None:
+        taps["tm_r_in"], taps["tm_k_in"] = xr, xk
+        taps["tm_v_in"], taps["tm_g_in"] = xv, xg
+    r = jnp.einsum("btd,de->bte", xr, p["w_r"].astype(cd))
+    k = jnp.einsum("btd,de->bte", xk, p["w_k"].astype(cd))
+    v = jnp.einsum("btd,de->bte", xv, p["w_v"].astype(cd))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["w_g"].astype(cd)))
+    decay_lora = jnp.einsum("btf,fd->btd",
+                            jnp.tanh(jnp.einsum("btd,df->btf", xw,
+                                                p["w1_decay"].astype(cd))),
+                            p["w2_decay"].astype(cd))
+    logw = -jnp.exp(jnp.clip(
+        p["w0_decay"].astype(jnp.float32) + decay_lora.astype(jnp.float32),
+        -8.0, 1.61))                                   # log-decay in (-5, 0)
+    logw = jnp.clip(logw, LOGW_MIN, -1e-6)
+
+    def heads(a):
+        return a.reshape(B, T, H, hd).astype(jnp.float32)
+
+    r, k, v, logw = heads(r), heads(k), heads(v), heads(logw)
+    u = p["u_bonus"].reshape(H, hd).astype(jnp.float32)
+
+    C = WKV_CHUNK if T % WKV_CHUNK == 0 and T >= WKV_CHUNK else 1
+    n_chunks = T // C
+
+    def step(s, args):
+        rc, kc, vc, wc = args
+        out, s_new = _wkv_chunk(rc, kc, vc, wc, u, s)
+        return s_new, out
+
+    if T > 1:   # remat chunks (don't stack intra-chunk decay matrices)
+        step = jax.checkpoint(step)
+
+    def chunked(a):
+        return a.reshape(B, n_chunks, C, H, hd).transpose(1, 0, 2, 3, 4)
+
+    s_fin, outs = jax.lax.scan(step, state.s.astype(jnp.float32),
+                               (chunked(r), chunked(k), chunked(v),
+                                chunked(logw)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, d)
+
+    # per-head group norm, gate, out-projection
+    oh = out.reshape(B, T, H, hd)
+    var = jnp.var(oh, axis=-1, keepdims=True)
+    mean = jnp.mean(oh, axis=-1, keepdims=True)
+    oh = (oh - mean) * jax.lax.rsqrt(var + 1e-5)
+    out = (oh.reshape(B, T, d) * p["ln_w"].astype(jnp.float32))
+    out = (out.astype(cd) * g)
+    if taps is not None:
+        taps["tm_o_in"] = out
+    out = jnp.einsum("btd,de->bte", out, p["w_o"].astype(cd))
+    new_x_prev = x[:, -1:].astype(state.x_tm.dtype)
+    return out, new_x_prev, s_fin.astype(state.s.dtype)
+
+
+def apply_channel_mix(p: dict, x: Array, cfg, x_prev: Array, taps=None
+                      ) -> Tuple[Array, Array]:
+    cd = x.dtype
+    xx = _token_shift(x, x_prev) - x
+    xk = x + xx * p["mu_k"].astype(cd)
+    xr = x + xx * p["mu_r"].astype(cd)
+    k = jnp.einsum("btd,df->btf", xk, p["w_k"].astype(cd))
+    ksq = jnp.square(jax.nn.relu(k))
+    if taps is not None:
+        taps["cm_k_in"], taps["cm_r_in"] = xk, xr
+        taps["cm_v_in"] = ksq
+    v = jnp.einsum("btf,fd->btd", ksq, p["w_v"].astype(cd))
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["w_r"].astype(cd)))
+    return r * v, x[:, -1:].astype(x_prev.dtype)

@@ -1,0 +1,136 @@
+"""Mamba-style selective SSM head (hymba's parallel-SSM branch).
+
+Training/prefill uses a *chunked* linear recurrence: an outer `lax.scan`
+over token chunks carries the (d_inner, state) hidden state, and within a
+chunk the diagonal recurrence h_t = a_t*h_{t-1} + b_t is solved with
+`lax.associative_scan` (log-depth, parallel — TPU friendly). Decode is the
+single-step recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Array, dense_init, ones_init, zeros_init
+
+
+class SSMState(NamedTuple):
+    h: Array        # (B, d_inner, N)
+    conv: Array     # (B, conv_w-1, d_inner) trailing inputs for causal conv
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    dt_rank = cfg.ssm.dt_rank or max(1, math.ceil(d / 16))
+    return d, di, cfg.ssm.state_dim, dt_rank, cfg.ssm.conv_width
+
+
+def init_ssm(key: Array, cfg, stack=()) -> dict:
+    d, di, n, dt_rank, cw = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    a = jnp.tile(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), (di, 1))
+    a = jnp.broadcast_to(a, (*stack, di, n))
+    return {
+        "w_in": dense_init(ks[0], (*stack, d, 2 * di)),
+        "conv_w": dense_init(ks[1], (*stack, cw, di), scale=1.0 / math.sqrt(cw)),
+        "conv_b": zeros_init(ks[2], (*stack, di)),
+        "w_xproj": dense_init(ks[3], (*stack, di, dt_rank + 2 * n)),
+        "w_dt": dense_init(ks[4], (*stack, dt_rank, di)),
+        "b_dt": ones_init(ks[5], (*stack, di)) * -4.6,   # softplus^-1(0.01)
+        "a_log": a,
+        "d_skip": ones_init(ks[6], (*stack, di)),
+        "w_out": dense_init(ks[7], (*stack, di, d)),
+    }
+
+
+def init_ssm_state(batch: int, cfg, dtype=jnp.float32) -> SSMState:
+    d, di, n, _, cw = _dims(cfg)
+    return SSMState(h=jnp.zeros((batch, di, n), dtype),
+                    conv=jnp.zeros((batch, cw - 1, di), dtype))
+
+
+def _causal_conv(p: dict, xi: Array, conv_state: Array) -> Tuple[Array, Array]:
+    """Depthwise causal conv over T via static shifts. xi: (B, T, di)."""
+    cw = p["conv_w"].shape[0]
+    ext = jnp.concatenate([conv_state.astype(xi.dtype), xi], axis=1)
+    out = jnp.zeros_like(xi)
+    T = xi.shape[1]
+    for w in range(cw):
+        out = out + ext[:, w:w + T, :] * p["conv_w"][w].astype(xi.dtype)
+    out = out + p["conv_b"].astype(xi.dtype)
+    new_state = ext[:, -(cw - 1):, :].astype(conv_state.dtype)
+    return out, new_state
+
+
+def _selective_terms(p: dict, xi: Array, cfg):
+    """xi: (B, T, di) post-conv. Returns a_t, b_t: (B, T, di, N), skip y0."""
+    d, di, n, dt_rank, _ = _dims(cfg)
+    xdbc = jnp.einsum("btd,dr->btr", xi, p["w_xproj"].astype(xi.dtype))
+    dt_raw, b_in, c_in = jnp.split(xdbc, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt_raw, p["w_dt"].astype(xi.dtype))
+        .astype(jnp.float32) + p["b_dt"].astype(jnp.float32))        # (B,T,di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                     # (di, N)
+    a_t = jnp.exp(dt[..., None] * a)                                 # (B,T,di,N)
+    bx = (dt * xi.astype(jnp.float32))[..., None] * \
+        b_in.astype(jnp.float32)[:, :, None, :]                      # (B,T,di,N)
+    return a_t, bx, c_in.astype(jnp.float32)
+
+
+def _scan_chunk(a: Array, b: Array, h0: Array):
+    """Solve h_t = a_t h_{t-1} + b_t over axis 1 given h0. Returns (h, h_T)."""
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+    a_acc, b_acc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = a_acc * h0[:, None] + b_acc
+    return h, h[:, -1]
+
+
+def apply_ssm(p: dict, x: Array, cfg, state: SSMState,
+              chunk: int = 1024, taps=None) -> Tuple[Array, SSMState]:
+    """x: (B, T, d) -> (y (B, T, d), new_state)."""
+    d, di, n, _, _ = _dims(cfg)
+    B, T, _ = x.shape
+    cd = x.dtype
+    if taps is not None:
+        taps["ssm_in"] = x
+    xz = jnp.einsum("btd,de->bte", x, p["w_in"].astype(cd))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = _causal_conv(p, xi, state.conv)
+    xi = jax.nn.silu(xi)
+
+    C = min(chunk, T)
+    while T % C:
+        C //= 2
+    n_chunks = T // C
+
+    def step(h, args):
+        xi_c, = args
+        a_t, b_t, c_in = _selective_terms(p, xi_c, cfg)
+        h_seq, h_new = _scan_chunk(a_t, b_t, h)
+        y = jnp.einsum("btdn,btn->btd", h_seq, c_in)                 # (B,C,di)
+        return h_new, y
+
+    if T > 1:   # remat chunks: don't stack (B,C,di,N) terms across chunks
+        step = jax.checkpoint(step)
+    xi_chunks = xi.reshape(B, n_chunks, C, di).transpose(1, 0, 2, 3)
+    h_final, ys = jax.lax.scan(step, state.h.astype(jnp.float32), (xi_chunks,))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, di)
+    y = y + p["d_skip"].astype(jnp.float32) * xi.astype(jnp.float32)
+    y = (y.astype(cd) * jax.nn.silu(z))
+    if taps is not None:
+        taps["ssm_out_in"] = y
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"].astype(cd))
+    return out, SSMState(h=h_final.astype(state.h.dtype), conv=conv_state)
+
+
+def decode_ssm(p: dict, x: Array, cfg, state: SSMState) -> Tuple[Array, SSMState]:
+    """Single-token step. x: (B, 1, d)."""
+    y, new_state = apply_ssm(p, x, cfg, state, chunk=1)
+    return y, new_state

@@ -1,0 +1,265 @@
+"""Decoder/encoder stack assembly.
+
+All homogeneous stacks are `lax.scan` over layer-stacked params (HLO size is
+depth-independent). The VLM stack (llama-3.2-vision) scans over *groups* of
+(`every`-1 self layers + 1 gated cross-attn layer), with an inner scan over
+the self layers — params are stacked (G, every-1, ...) and (G, ...).
+
+A `BuildPlan` carries mesh-derived static facts (TP padding) and an optional
+`constrain(x, kind)` callback used by the launcher to pin intermediate
+shardings (residual stream, logits, caches) without the model importing any
+mesh code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (KVCache, cache_insert, cache_prefill,
+                                    decode_attend, flash_attention,
+                                    head_to_kv_map, init_kv_cache,
+                                    out_project, qkv_project)
+from repro.models.common import (Array, apply_norm, apply_rope, dense_init,
+                                 norm_params, pad_to_multiple, zeros_init)
+
+
+def _ident_constrain(x, kind):
+    return x
+
+
+@dataclass(frozen=True)
+class BuildPlan:
+    tp: int = 1
+    attn_block_size: int = 512
+    moe_token_chunk: int = 4096
+    remat: bool = True
+    cache_dtype: Any = jnp.bfloat16
+    cache_quant: bool = False    # int8 KV cache (per-entry absmax scales)
+    # prefill cache capacity (0 -> prompt length); serving engines set
+    # prompt+max_new so decode can continue without ring eviction
+    prefill_cache_len: int = 0
+    constrain: Callable[[Array, str], Array] = _ident_constrain
+
+    def heads_padded(self, cfg) -> int:
+        return pad_to_multiple(cfg.n_heads, self.tp)
+
+    def experts_padded(self, cfg) -> int:
+        if cfg.moe is None:
+            return 0
+        return pad_to_multiple(cfg.moe.n_experts, self.tp)
+
+    def vocab_padded(self, cfg) -> int:
+        """Vocab rows padded so TP sharding divides (and int8-moment blocks
+        align); padded logit columns are masked to -inf in unembed()."""
+        if self.tp <= 1:
+            return cfg.vocab_size
+        return pad_to_multiple(cfg.vocab_size, 256)
+
+    def replace(self, **kw) -> "BuildPlan":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(key: Array, cfg, plan: BuildPlan, stack=()) -> dict:
+    ks = jax.random.split(key, 6)
+    hp = plan.heads_padded(cfg)
+    p: Dict[str, Any] = {"ln1": norm_params(ks[0], cfg, stack)}
+    if cfg.attn_free:   # rwkv6
+        p["tm"] = rwkv_mod.init_time_mix(ks[1], cfg, stack)
+        p["ln2"] = norm_params(ks[2], cfg, stack)
+        p["cm"] = rwkv_mod.init_channel_mix(ks[3], cfg, stack)
+        return p
+    p["attn"] = attn_mod.init_attn(ks[1], cfg, hp, stack)
+    if cfg.parallel_ssm_heads:
+        p["ssm"] = ssm_mod.init_ssm(ks[2], cfg, stack)
+    p["ln2"] = norm_params(ks[3], cfg, stack)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(ks[4], cfg, plan.experts_padded(cfg), stack)
+    else:
+        p["mlp"] = mlp_mod.init_mlp(ks[4], cfg, stack)
+    return p
+
+
+def init_cross_layer(key: Array, cfg, plan: BuildPlan, stack=()) -> dict:
+    ks = jax.random.split(key, 6)
+    hp = plan.heads_padded(cfg)
+    return {
+        "ln1": norm_params(ks[0], cfg, stack),
+        "xattn": attn_mod.init_attn(ks[1], cfg, hp, stack, kv_in=cfg.d_model),
+        "gate_attn": zeros_init(ks[2], (*stack,)),
+        "ln2": norm_params(ks[3], cfg, stack),
+        "mlp": mlp_mod.init_mlp(ks[4], cfg, stack),
+        "gate_mlp": zeros_init(ks[5], (*stack,)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# layer application (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _self_attention_full(p, x, cfg, plan, make_cache: bool, taps=None):
+    hp = plan.heads_padded(cfg)
+    hmap = head_to_kv_map(cfg.n_heads, hp, cfg.n_kv_heads)
+    q, k, v = qkv_project(p["attn"], x)
+    if cfg.causal:
+        B, T = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    o = flash_attention(q, k, v, hmap, causal=cfg.causal,
+                        window=cfg.sliding_window,
+                        block_size=plan.attn_block_size)
+    if taps is not None:
+        taps["attn_in"] = x                   # feeds wq / wk / wv
+        taps["wo_in"] = o.reshape(*o.shape[:2], -1)   # feeds wo (Hp*hd, d)
+    cache = None
+    if make_cache:
+        B, T = x.shape[:2]
+        # SWA: always allocate the full window so decode can continue past
+        # the prompt without evicting in-window entries.
+        if cfg.sliding_window:
+            clen = cfg.sliding_window
+        else:
+            clen = max(plan.prefill_cache_len, T)
+        cache = init_kv_cache(B, clen, cfg.n_kv_heads,
+                              cfg.resolved_head_dim, plan.cache_dtype,
+                              quantized=plan.cache_quant)
+        cache = cache_prefill(cache, k, v)
+        cache = plan.constrain(cache, "kv_cache")
+    return attn_mod.out_project(p["attn"], o), cache
+
+
+def layer_full(p: dict, x: Array, cfg, plan: BuildPlan, make_cache: bool,
+               rwkv_state=None, ssm_state=None, taps=None):
+    """One layer over a full sequence. Returns (x, cache_out, aux, states)."""
+    aux = jnp.float32(0.0)
+    x = plan.constrain(x, "block_in")   # Megatron-SP gather (no-op w/o SP)
+    if cfg.attn_free:
+        h, new_tm, new_s = rwkv_mod.apply_time_mix(
+            p["tm"], apply_norm(p["ln1"], x, cfg), cfg, rwkv_state, taps=taps)
+        x = x + h
+        h, new_cm = rwkv_mod.apply_channel_mix(
+            p["cm"], apply_norm(p["ln2"], x, cfg), cfg, rwkv_state.x_cm,
+            taps=taps)
+        x = x + h
+        new_state = rwkv_mod.RWKVState(new_tm, new_cm, new_s)
+        return x, None, aux, new_state
+
+    xn = apply_norm(p["ln1"], x, cfg)
+    a_out, cache = _self_attention_full(p, xn, cfg, plan, make_cache, taps)
+    new_ssm = None
+    if cfg.parallel_ssm_heads:
+        s_out, new_ssm = ssm_mod.apply_ssm(p["ssm"], xn, cfg, ssm_state,
+                                           taps=taps)
+        a_out = 0.5 * (a_out + s_out)
+    x = x + a_out
+    xn = apply_norm(p["ln2"], x, cfg)
+    if cfg.moe is not None:
+        m_out, aux = moe_mod.apply_moe(p["moe"], xn, cfg,
+                                       plan.experts_padded(cfg),
+                                       plan.moe_token_chunk, taps=taps)
+    else:
+        m_out = mlp_mod.apply_mlp(p["mlp"], xn, cfg, taps=taps,
+                                  constrain=plan.constrain)
+    x = x + m_out
+    return x, cache, aux, new_ssm
+
+
+def cross_layer_full(p: dict, x: Array, cfg, plan: BuildPlan,
+                     vision_kv: Tuple[Array, Array], taps=None) -> Array:
+    hp = plan.heads_padded(cfg)
+    hmap = head_to_kv_map(cfg.n_heads, hp, cfg.n_kv_heads)
+    xn = apply_norm(p["ln1"], x, cfg)
+    cd = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", xn, p["xattn"]["wq"].astype(cd))
+    k, v = vision_kv
+    o = attn_mod._dense_attention(q, k.astype(cd), v.astype(cd), hmap,
+                                  causal=False, window=0)
+    if taps is not None:
+        taps["xattn_q_in"] = xn
+        taps["xattn_wo_in"] = o.reshape(*o.shape[:2], -1)
+    x = x + jnp.tanh(p["gate_attn"]).astype(cd) * attn_mod.out_project(
+        p["xattn"], o)
+    xn = apply_norm(p["ln2"], x, cfg)
+    x = x + jnp.tanh(p["gate_mlp"]).astype(cd) * mlp_mod.apply_mlp(
+        p["mlp"], xn, cfg, taps=taps)
+    return x
+
+
+def vision_kv_for_layer(p_cross: dict, vision_embeds: Array):
+    """Precompute cross-attn K/V from projected vision embeddings."""
+    cd = vision_embeds.dtype
+    k = jnp.einsum("bnd,dhk->bnhk", vision_embeds, p_cross["xattn"]["wk"].astype(cd))
+    v = jnp.einsum("bnd,dhk->bnhk", vision_embeds, p_cross["xattn"]["wv"].astype(cd))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# layer application (single-token decode)
+# ---------------------------------------------------------------------------
+
+def layer_decode(p: dict, x: Array, cfg, plan: BuildPlan, kv_cache, pos,
+                 rwkv_state=None, ssm_state=None, vision_kv=None,
+                 is_cross: bool = False):
+    """x: (B, 1, d). Returns (x, new_kv_cache, new_rwkv, new_ssm)."""
+    if cfg.attn_free:
+        h, new_tm, new_s = rwkv_mod.apply_time_mix(
+            p["tm"], apply_norm(p["ln1"], x, cfg), cfg, rwkv_state)
+        x = x + h
+        h, new_cm = rwkv_mod.apply_channel_mix(
+            p["cm"], apply_norm(p["ln2"], x, cfg), cfg, rwkv_state.x_cm)
+        x = x + h
+        return x, None, rwkv_mod.RWKVState(new_tm, new_cm, new_s), None
+
+    if is_cross:
+        hp = plan.heads_padded(cfg)
+        hmap = head_to_kv_map(cfg.n_heads, hp, cfg.n_kv_heads)
+        xn = apply_norm(p["ln1"], x, cfg)
+        cd = x.dtype
+        q = jnp.einsum("btd,dhk->bthk", xn, p["xattn"]["wq"].astype(cd))
+        k, v = vision_kv
+        o = attn_mod._dense_attention(q, k.astype(cd), v.astype(cd), hmap,
+                                      causal=False, window=0)
+        x = x + jnp.tanh(p["gate_attn"]).astype(cd) * attn_mod.out_project(
+            p["xattn"], o)
+        xn = apply_norm(p["ln2"], x, cfg)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(cd) * mlp_mod.apply_mlp(
+            p["mlp"], xn, cfg)
+        return x, kv_cache, None, None
+
+    hp = plan.heads_padded(cfg)
+    hmap = head_to_kv_map(cfg.n_heads, hp, cfg.n_kv_heads)
+    xn = apply_norm(p["ln1"], x, cfg)
+    q, k, v = qkv_project(p["attn"], xn)
+    B = x.shape[0]
+    posb = jnp.broadcast_to(pos[None], (B, 1))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    kv_cache = cache_insert(kv_cache, k, v, pos)
+    o = decode_attend(q, kv_cache, hmap, pos=pos, window=cfg.sliding_window)
+    a_out = attn_mod.out_project(p["attn"], o)
+    new_ssm = None
+    if cfg.parallel_ssm_heads:
+        s_out, new_ssm = ssm_mod.decode_ssm(p["ssm"], xn, cfg, ssm_state)
+        a_out = 0.5 * (a_out + s_out)
+    x = x + a_out
+    xn = apply_norm(p["ln2"], x, cfg)
+    if cfg.moe is not None:
+        m_out, _ = moe_mod.apply_moe(p["moe"], xn, cfg,
+                                     plan.experts_padded(cfg),
+                                     plan.moe_token_chunk)
+    else:
+        m_out = mlp_mod.apply_mlp(p["mlp"], xn, cfg)
+    return x + m_out, kv_cache, None, new_ssm

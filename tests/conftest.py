@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests are documented to run as `PYTHONPATH=src pytest tests/`; make the
+# import work regardless of invocation directory.
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, os.path.abspath(_SRC))
+
+# NOTE: do NOT set XLA_FLAGS here — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 host devices
+# (multi-device tests spawn subprocesses instead).

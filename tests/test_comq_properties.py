@@ -1,0 +1,79 @@
+"""Property-based tests (hypothesis) for COMQ invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import QuantSpec, comq_quantize, comq_quantize_h, gram
+from repro.core.quantizer import (init_per_channel, pack_int4, quantize_rtn,
+                                  unpack_int4)
+
+_dims = st.tuples(st.integers(8, 48), st.integers(4, 24), st.integers(2, 6))
+
+
+@settings(max_examples=12, deadline=None)
+@given(_dims, st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 3, 4]))
+def test_error_never_worse_than_rtn_on_same_grid(dims, seed, bits):
+    """COMQ starts from the RTN grid init; coordinate descent + δ-updates
+    can only improve the reconstruction error (monotone argmin steps)."""
+    m, n, _ = dims
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed % (2 ** 31)))
+    x = jax.random.normal(k1, (2 * m, m))
+    w = jax.random.normal(k2, (m, n)) * 0.1
+    spec = QuantSpec(bits=bits, granularity="per_channel", lam=1.0,
+                     sweeps=3, order="greedy")
+    r = comq_quantize(x, w, spec)
+    delta, z_lo, z_hi = init_per_channel(w, bits, 1.0)
+    rtn_w = quantize_rtn(w, delta, z_lo, z_hi).astype(jnp.float32) * delta
+    e_rtn = float(jnp.linalg.norm(x @ (rtn_w - w)))
+    e_comq = float(r.errors[-1])
+    assert e_comq <= e_rtn * 1.001 + 1e-5
+
+
+@settings(max_examples=12, deadline=None)
+@given(_dims, st.integers(0, 2 ** 31 - 1),
+       st.floats(0.25, 4.0, allow_nan=False))
+def test_scale_equivariance(dims, seed, c):
+    """COMQ(c·W) == c·COMQ(W) for per-channel grids (δ scales linearly,
+    codes are identical)."""
+    m, n, _ = dims
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed % (2 ** 31)))
+    x = jax.random.normal(k1, (2 * m, m))
+    w = jax.random.normal(k2, (m, n)) * 0.1
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
+                     order="cyclic")
+    r1 = comq_quantize(x, w, spec)
+    r2 = comq_quantize(x, w * c, spec)
+    assert bool(jnp.all(r1.q == r2.q))
+    np.testing.assert_allclose(np.asarray(r2.delta),
+                               np.asarray(r1.delta) * c, rtol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 32), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(rows, halfcols, seed):
+    rng = np.random.RandomState(seed % (2 ** 31))
+    u = jnp.asarray(rng.randint(0, 16, size=(rows, 2 * halfcols)),
+                    jnp.uint8)
+    assert bool(jnp.all(unpack_int4(pack_int4(u)) == u))
+
+
+@settings(max_examples=8, deadline=None)
+@given(_dims, st.integers(0, 2 ** 31 - 1))
+def test_permutation_invariance_of_objective(dims, seed):
+    """Permuting input features (rows of W, correspondingly H) must not
+    change the achieved reconstruction error for cyclic order solved in
+    the permuted space."""
+    m, n, _ = dims
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed % (2 ** 31)), 3)
+    x = jax.random.normal(k1, (2 * m, m))
+    w = jax.random.normal(k2, (m, n)) * 0.1
+    perm = jax.random.permutation(k3, m)
+    h = gram(x)
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
+                     order="greedy")
+    r1 = comq_quantize_h(h, w, spec)
+    r2 = comq_quantize_h(h[perm][:, perm], w[perm], spec)
+    # greedy order is permutation-covariant => identical codes up to perm
+    inv = jnp.argsort(perm)
+    assert bool(jnp.all(r1.q == r2.q[inv]))

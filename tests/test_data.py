@@ -1,0 +1,34 @@
+"""Data pipeline: determinism, structure (learnability signal), resume."""
+import numpy as np
+
+from repro.data import ShardedLoader, SyntheticLM, batches
+
+
+def test_deterministic_and_resumable():
+    g1 = batches(1000, 4, 32, seed=0)
+    g2 = batches(1000, 4, 32, seed=0)
+    b1, b2 = next(g1), next(g2)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # resume from step 3 reproduces the 4th batch (g1 already consumed b1)
+    g3 = batches(1000, 4, 32, seed=0, start_step=3)
+    for _ in range(2):
+        next(g1)
+    np.testing.assert_array_equal(next(g1)["tokens"], next(g3)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    b = SyntheticLM(500, seed=1).sample(2, 16)
+    assert b["tokens"].shape == (2, 16) and b["labels"].shape == (2, 16)
+    # stream has Markov structure: many labels equal token + topic offset
+    diffs = (b["labels"] - b["tokens"]) % 500
+    common = np.bincount(diffs.ravel()).max() / diffs.size
+    assert common > 0.3
+
+
+def test_sharded_loader_prefetch_and_state():
+    loader = ShardedLoader(1000, 8, 16, seed=0)
+    b1 = next(loader)
+    assert b1["tokens"].shape == (8, 16)
+    st = loader.state()
+    assert st["step"] >= 1
+    loader.close()

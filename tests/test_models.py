@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (deliverable f): reduced configs of every
+assigned arch run one forward/train step on CPU, assert output shapes and
+finiteness; plus decode-vs-forward consistency and causality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs, shapes_for, get_config
+from repro.models import (BuildPlan, count_params, decode_step, forward,
+                          init_cache, init_params, input_specs, lm_loss,
+                          prefill)
+
+PLAN = BuildPlan(remat=False)
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, T=32):
+    tokens = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            KEY, (B, cfg.cross_attn.n_vision_tokens,
+                  cfg.cross_attn.vision_dim), jnp.bfloat16)
+    if cfg.family == "encoder":
+        batch = {"embeds": jax.random.normal(KEY, (B, 197, cfg.d_model),
+                                             jnp.bfloat16),
+                 "labels": jnp.zeros((B,), jnp.int32)}
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(KEY, cfg, PLAN)
+    batch = _batch(cfg)
+    loss, metrics = lm_loss(params, cfg, PLAN, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    # one gradient step must produce finite grads of the right structure
+    grads = jax.grad(lambda p: lm_loss(p, cfg, PLAN, batch)[0])(params)
+    gn = sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+    assert jnp.isfinite(gn), f"{arch}: non-finite grads"
+    if cfg.family != "encoder":
+        logits, aux, _ = forward(params, cfg, PLAN, batch["tokens"],
+                                 vision_embeds=batch.get("vision_embeds"))
+        assert logits.shape == (*batch["tokens"].shape, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", [a for a in list_archs()
+                                  if get_smoke_config(a).family != "encoder"])
+def test_decode_matches_forward(arch):
+    """prefill(T) + decode(T..T+2) logits must match the full forward pass —
+    validates KV caches, ring buffers, SSM/RWKV state carries."""
+    cfg = get_smoke_config(arch).replace(compute_dtype="float32")
+    if cfg.moe is not None:
+        # capacity-based MoE drops depend on chunk composition; make the
+        # smoke config drop-free so prefill/decode are exactly comparable
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=1.2 * cfg.moe.n_experts
+            / max(cfg.moe.top_k, 1)))
+    plan = BuildPlan(remat=False, cache_dtype=jnp.float32,
+                     prefill_cache_len=32)
+    params = init_params(KEY, cfg, plan)
+    B, T = 2, 24
+    tokens = jax.random.randint(KEY, (B, T + 2), 0, cfg.vocab_size)
+    ve = None
+    if cfg.family == "vlm":
+        ve = jax.random.normal(KEY, (B, cfg.cross_attn.n_vision_tokens,
+                                     cfg.cross_attn.vision_dim), jnp.float32)
+    full_logits, _, _ = forward(params, cfg, plan, tokens, vision_embeds=ve)
+
+    last, cache = prefill(params, cfg, plan, tokens[:, :T], vision_embeds=ve)
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(full_logits[:, T - 1]),
+                               rtol=2e-3, atol=2e-3)
+    lg, cache = decode_step(params, cfg, plan, cache, tokens[:, T:T + 1],
+                            jnp.int32(T))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full_logits[:, T]),
+                               rtol=2e-3, atol=2e-3)
+    lg, cache = decode_step(params, cfg, plan, cache, tokens[:, T + 1:T + 2],
+                            jnp.int32(T + 1))
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full_logits[:, T + 1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["mistral-large-123b", "h2o-danube-1.8b",
+                                  "rwkv6-7b", "hymba-1.5b"])
+def test_causality(arch):
+    """Changing future tokens must not change past logits."""
+    cfg = get_smoke_config(arch).replace(compute_dtype="float32")
+    plan = BuildPlan(remat=False)
+    params = init_params(KEY, cfg, plan)
+    B, T = 1, 16
+    t1 = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+    t2 = t1.at[:, T - 1].set((t1[:, T - 1] + 7) % cfg.vocab_size)
+    l1, _, _ = forward(params, cfg, plan, t1)
+    l2, _, _ = forward(params, cfg, plan, t2)
+    np.testing.assert_allclose(np.asarray(l1[:, : T - 1]),
+                               np.asarray(l2[:, : T - 1]), rtol=1e-5,
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(l1[:, T - 1]), np.asarray(l2[:, T - 1]))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_count_matches_analytic(arch):
+    cfg = get_smoke_config(arch)
+    n = count_params(cfg)
+    assert n == cfg.param_count()
+    if cfg.moe is not None:
+        assert cfg.active_param_count() < n
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_shapes_and_specs(arch):
+    """The FULL configs are only exercised via eval_shape (no allocation):
+    params build, input specs exist for every runnable shape."""
+    cfg = get_config(arch)
+    plan = BuildPlan(tp=16)
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg, plan),
+                            jax.random.PRNGKey(0))
+    total = sum(int(np.prod(x.shape))
+                for x in jax.tree_util.tree_leaves(shapes))
+    assert total > 0.5 * cfg.param_count()  # padding may add a few %
+    for s in shapes_for(cfg):
+        specs = input_specs(cfg, s, plan)
+        assert "tokens" in specs or cfg.family == "encoder"
+
+
+def test_sliding_window_restricts_attention():
+    cfg = get_smoke_config("h2o-danube-1.8b").replace(
+        compute_dtype="float32")
+    plan = BuildPlan(remat=False)
+    params = init_params(KEY, cfg, plan)
+    B, T = 1, 64
+    w = cfg.sliding_window
+    assert w < T
+    t1 = jax.random.randint(KEY, (B, T), 0, cfg.vocab_size)
+    # change a token far outside the window of the last position
+    t2 = t1.at[:, 0].set((t1[:, 0] + 3) % cfg.vocab_size)
+    l1, _, _ = forward(params, cfg, plan, t1)
+    l2, _, _ = forward(params, cfg, plan, t2)
+    # last-position logits see only the last `w` tokens: token 0 is outside
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,114 @@
+"""Roofline HLO parser: trip-count handling validated against unrolled
+references; collective-byte counting on a sharded compile (subprocess)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import (hlo_cost, parse_hlo, roofline_terms,
+                                     CostTotals)
+
+
+def _compile_text(f, *specs):
+    return jax.jit(f).lower(*specs).compile().as_text()
+
+
+def test_scan_flops_match_unrolled():
+    def body(c, _):
+        return jnp.tanh(c @ c), None
+
+    def f_scan(x):
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    def f_unroll(x):
+        for _ in range(10):
+            x, _ = body(x, None)
+        return x
+
+    spec = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cs = hlo_cost(_compile_text(f_scan, spec))
+    cu = hlo_cost(_compile_text(f_unroll, spec))
+    expected = 10 * 2 * 128 ** 3
+    assert 0.9 < cs.flops / cu.flops < 1.1
+    assert 0.9 < cs.flops / expected < 1.15
+
+
+def test_nested_scan_trip_multiplication():
+    def inner(c, _):
+        return jnp.tanh(c @ c), None
+
+    def outer(c, _):
+        c, _ = jax.lax.scan(inner, c, None, length=4)
+        return c, None
+
+    def f(x):
+        return jax.lax.scan(outer, x, None, length=3)[0]
+
+    spec = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = hlo_cost(_compile_text(f, spec))
+    expected = 3 * 4 * 2 * 64 ** 3
+    assert 0.9 < c.flops / expected < 1.2, c.flops / expected
+
+
+def test_dot_flops_with_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+    c = hlo_cost(_compile_text(f, a, b))
+    expected = 2 * 4 * 32 * 64 * 16
+    assert 0.9 < c.flops / expected < 1.2
+
+
+def test_roofline_terms_math():
+    c = CostTotals(flops=197e12, bytes_accessed=819e9,
+                   collective_bytes={"all-gather": 200e9})
+    t = roofline_terms(c, n_chips=256)
+    assert abs(t["compute_s"] - 1.0) < 1e-6
+    assert abs(t["memory_s"] - 1.0) < 1e-6
+    assert abs(t["collective_s"] - 1.0) < 1e-6
+    assert t["dominant"] in ("compute", "memory", "collective")
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, %r)
+    import jax, jax.numpy as jnp, json
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.roofline.analysis import hlo_cost
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    with mesh:
+        c = jax.jit(f, in_shardings=(NamedSharding(mesh, P("data", "model")),
+                                     NamedSharding(mesh, P("model", None))),
+                    out_shardings=NamedSharding(mesh, P("data", None))
+                    ).lower(a, b).compile()
+    cost = hlo_cost(c.as_text())
+    print(json.dumps({"flops": cost.flops,
+                      "coll": cost.collective_bytes}))
+""")
+
+
+def test_collective_bytes_on_sharded_compile():
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+    out = subprocess.run([sys.executable, "-c", _SUBPROC % src_dir],
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    data = json.loads(out.stdout.strip().splitlines()[-1])
+    # per-device dot: (128, 64) @ (64, 256) = 2*128*64*256
+    assert 0.9 < data["flops"] / (2 * 128 * 64 * 256) < 1.3
+    # contraction over the sharded dim => all-reduce of the (128, 256) out
+    assert "all-reduce" in data["coll"]
+    assert data["coll"]["all-reduce"] >= 128 * 256 * 4
