@@ -38,4 +38,22 @@ def run():
     rows.append(("kernel/quant_matmul_w4_2048", round(us_q4, 1), K * N // 2))
     # derived column = weight bytes streamed from HBM: bf16 4x of int4
     rows.append(("kernel/w4_weight_bytes_ratio_vs_bf16", 0.0, 4.0))
+
+    # fused panel sweep (lazy ΔW-emitting form, DESIGN.md §3.2): the jnp
+    # oracle timing tracks the schedule's sequential cost per panel
+    from repro.core.comq_hessian import panel_sweep_dq_ref
+    B, n = 128, 512
+    kh, ks, kq = jax.random.split(jax.random.PRNGKey(1), 3)
+    hb = jax.random.normal(kh, (B, B))
+    h_bb = hb @ hb.T + jnp.eye(B) * B
+    s0 = jax.random.normal(ks, (B, n))
+    qf = jax.random.normal(kq, (B, n))
+    delta = jnp.full((n,), 0.05)
+    zlo = jnp.full((n,), -8.0)
+    zhi = jnp.full((n,), 7.0)
+    sweep = jax.jit(lambda s, q: panel_sweep_dq_ref(
+        h_bb, s, q, delta, zlo, zhi, jnp.diag(h_bb))[0])
+    _, us_panel = timed(sweep, s0, qf, repeats=3)
+    rows.append(("kernel/comq_panel_dq_sweep_128x512", round(us_panel, 1),
+                 B * n))
     return rows

@@ -1,13 +1,18 @@
 """Benchmark harness — one module per paper table (+ systems tables).
 
-    PYTHONPATH=src python -m benchmarks.run [--only t1,t9]
+    PYTHONPATH=src python -m benchmarks.run [--only t1,t9] [--json PATH]
 
 Prints ``name,us_per_call,derived`` CSV. Quality tables train a cached
 small model on the structured synthetic stream and report held-out eval
 loss as the accuracy stand-in (no ImageNet in this container); systems
 tables read the dry-run artifacts.
+
+``--json PATH`` additionally writes the rows as a JSON object — the
+BENCH_*.json files checked in at the repo root track the perf trajectory
+(solver schedule + fused-tap ratios) across PRs.
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -30,11 +35,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated table keys (e.g. t1,t9,roofline)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to PATH as JSON (BENCH_*.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
     failures = 0
+    collected = {}
     for key, modname in MODULES:
         if only and not any(key.startswith(o) for o in only):
             continue
@@ -42,10 +50,15 @@ def main() -> None:
             mod = __import__(modname, fromlist=["run"])
             for name, us, derived in mod.run():
                 print(f"{name},{us},{derived}", flush=True)
+                collected[name] = {"us_per_call": us, "derived": derived}
         except Exception as e:
             failures += 1
             print(f"{key},ERROR,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(collected, f, indent=1, sort_keys=True)
+            f.write("\n")
     if failures:
         sys.exit(1)
 

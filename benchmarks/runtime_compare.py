@@ -1,6 +1,12 @@
 """Paper Tab. 9: solver runtime — COMQ (backprop-free, no Hessian inverse)
-vs GPTQ (needs H⁻¹) vs RTN, on fixed-size layers. Also the blocked/panel
-schedule vs row-at-a-time (the TPU-shaped variant, DESIGN.md §3.2)."""
+vs GPTQ (needs H⁻¹) vs RTN, on fixed-size layers. Also the solver-schedule
+A/B rows tracked in BENCH_*.json from PR 1 on (DESIGN.md §3.3):
+
+* solver/blocked_trailing_vs_refresh — per-sweep wall time of the
+  trailing-update blocked schedule; `derived` = refresh/trailing speedup.
+* solver/fused_shared_tap_vs_separate — one fused [wq|wk|wv] solve (shared
+  Gram) vs three per-leaf solves with per-leaf Grams; `derived` = speedup.
+"""
 import jax
 import jax.numpy as jnp
 
@@ -23,12 +29,50 @@ def run():
         solvers = {
             "rtn": jax.jit(lambda hh, ww: rtn_quantize(ww, spec, h=hh).q),
             "gptq": jax.jit(lambda hh, ww: gptq_quantize(hh, ww, spec).q),
-            "comq": jax.jit(lambda hh, ww: comq_quantize_h(hh, ww, spec).q),
-            "comq_blocked": jax.jit(
-                lambda hh, ww: comq_quantize_blocked(hh, ww, spec_shared,
-                                                     block=128).q),
+            "comq": lambda hh, ww: comq_quantize_h(hh, ww, spec).q,
+            "comq_blocked": lambda hh, ww: comq_quantize_blocked(
+                hh, ww, spec_shared, block=128).q,
         }
         for name, fn in solvers.items():
             _, us = timed(fn, h, w, repeats=2)
             rows.append((f"t9/{name}_{m}x{n}", round(us, 1), m * n))
+
+    # --- schedule A/B: trailing-update vs legacy per-panel refresh --------
+    for (m, n) in ((512, 512), (1024, 1024)):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m))
+        h = gram(jax.random.normal(k1, (2 * m, m)))
+        w = jax.random.normal(k2, (m, n)) * 0.05
+        _, us_t = timed(lambda: comq_quantize_blocked(
+            h, w, spec_shared, block=128).q, repeats=3)
+        _, us_r = timed(lambda: comq_quantize_blocked(
+            h, w, spec_shared, block=128, schedule="refresh").q, repeats=3)
+        per_sweep = us_t / spec_shared.sweeps
+        rows.append((f"solver/blocked_trailing_per_sweep_{m}x{n}",
+                     round(per_sweep, 1), round(us_t, 1)))
+        rows.append((f"solver/blocked_trailing_vs_refresh_{m}x{n}",
+                     round(us_t, 1), round(us_r / us_t, 3)))
+
+    # --- fused shared-tap solve vs per-leaf solves ------------------------
+    m, n = 512, 512
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    tap = jax.random.normal(k1, (4, 256, m))
+    wqkv = [jax.random.normal(jax.random.fold_in(k2, i), (m, n)) * 0.05
+            for i in range(3)]
+    wcat = jnp.concatenate(wqkv, axis=1)
+
+    def fused():
+        h = gram(tap.reshape(-1, m))
+        return comq_quantize_h(h, wcat, spec).q
+
+    def separate():
+        qs = []
+        for wl in wqkv:                     # per-leaf Gram + solve (pre-PR1)
+            h = gram(tap.reshape(-1, m))
+            qs.append(comq_quantize_h(h, wl, spec).q)
+        return qs[-1]
+
+    _, us_f = timed(fused, repeats=2)
+    _, us_s = timed(separate, repeats=2)
+    rows.append((f"solver/fused_shared_tap_vs_separate_{m}x3x{n}",
+                 round(us_f, 1), round(us_s / us_f, 3)))
     return rows

@@ -42,3 +42,29 @@ def batched_gram(tap: Array) -> Array:
     """(E, C, d) -> (E, d, d): per-expert Gram matrices in one einsum."""
     t = tap.astype(jnp.float32)
     return jnp.einsum("ecd,ecf->edf", t, t)
+
+
+class TapGramCache:
+    """One Gram per activation tap: weight leaves sharing a tap (wq/wk/wv on
+    attn_in, w_gate/w_up on mlp_in or expert_in) reuse the same H instead of
+    re-accumulating it per leaf — for the dense transformer family this cuts
+    Gram matmuls per layer from 7 (one per leaf) to 4 (one per tap).
+
+    Scope one instance per layer: taps are recomputed from the quantized
+    stream every layer, so cached Grams must not outlive them."""
+
+    def __init__(self):
+        self._grams: Dict[str, Array] = {}
+        self.computed = 0      # instrumentation: # of Gram matmuls issued
+
+    def gram(self, name: str, tap: Array) -> Array:
+        if name not in self._grams:
+            self._grams[name] = gram_from_tap(tap)
+            self.computed += 1
+        return self._grams[name]
+
+    def batched(self, name: str, tap: Array) -> Array:
+        if name not in self._grams:
+            self._grams[name] = batched_gram(tap)
+            self.computed += 1
+        return self._grams[name]

@@ -113,13 +113,7 @@ def _delta_update_per_channel(x: Array, w: Array, qf: Array) -> Array:
 # entry point
 # ---------------------------------------------------------------------------
 
-def comq_quantize(x: Array, w: Array, spec: QuantSpec) -> QuantResult:
-    """Quantize one linear layer's weight w: (m, n) given features x: (N, m).
-
-    Follows Alg. 1 (per-layer) / Alg. 2 (per-channel) with K = spec.sweeps.
-    """
-    x = x.astype(jnp.float32)
-    w = w.astype(jnp.float32)
+def _comq_x_core(x: Array, w: Array, *, spec: QuantSpec):
     m, n = w.shape
     if spec.granularity == "per_layer":
         delta, z_lo, z_hi = init_per_layer(w, spec.bits)
@@ -143,5 +137,18 @@ def comq_quantize(x: Array, w: Array, spec: QuantSpec) -> QuantResult:
         errs.append(jnp.linalg.norm(xw - x @ (qf * delta)))
 
     q = jnp.clip(jnp.round(qf), z_lo, z_hi).astype(jnp.int32)
-    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi,
-                       errors=jnp.stack(errs))
+    return q, delta, z_lo, z_hi, jnp.stack(errs)
+
+
+_comq_x_jit = jax.jit(_comq_x_core, static_argnames=("spec",))
+
+
+def comq_quantize(x: Array, w: Array, spec: QuantSpec) -> QuantResult:
+    """Quantize one linear layer's weight w: (m, n) given features x: (N, m).
+
+    Follows Alg. 1 (per-layer) / Alg. 2 (per-channel) with K = spec.sweeps.
+    The multi-sweep solve runs as one jitted program per (shape, spec).
+    """
+    q, delta, z_lo, z_hi, errs = _comq_x_jit(
+        x.astype(jnp.float32), w.astype(jnp.float32), spec=spec)
+    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi, errors=errs)

@@ -12,12 +12,24 @@ accumulation pass. Two implementations:
 
 * `comq_quantize_h`   — row-at-a-time, supports exact per-column greedy
   order (gather-based), bit-identical to the X-space solver.
-* `comq_quantize_blocked` — panel/blocked updates: cross-panel residual
-  refresh is one dense (B×m)·(m×n) matmul (MXU work); the intra-panel
-  sequential sweep touches only H[blk,blk] + the Q panel (VMEM-resident in
-  the Pallas kernel `kernels/comq_panel.py`). Shared-order only — the panel
-  structure requires all columns to visit rows in the same order. Exactly
-  equals the row-at-a-time solver under the same shared order (tested).
+* `comq_quantize_blocked` — panel/blocked updates with a *trailing-update*
+  schedule (DESIGN.md §3.3): the product P = H·R is maintained across the
+  whole solve and each solved panel contributes one rank-B dense matmul
+  `P -= H[:, blk] @ ΔW_blk` (MXU work) — no per-panel residual
+  materialization, no per-sweep H·R refresh. With HW = H·W precomputed
+  once, the δ-updates and error evaluations are elementwise reads of the
+  maintained P, eliminating their per-sweep (m, m)·(m, n) matmuls too.
+  The intra-panel sequential sweep touches only H[blk,blk] + the Q panel
+  (VMEM-resident in the Pallas kernel `kernels/comq_panel.py`). Shared-order
+  only — the panel structure requires all columns to visit rows in the same
+  order. Exactly equals the row-at-a-time solver under the same shared
+  order (tested). `schedule="refresh"` keeps the legacy per-panel-refresh
+  schedule for A/B benchmarking (benchmarks/runtime_compare.py).
+
+Both solvers run as a single jitted program per (shape, spec) — the multi-
+sweep driver is `jax.jit`-compiled with the permuted/padded operands donated
+on accelerator backends, so per-leaf solves in the whole-model pipeline pay
+one dispatch instead of eager op-by-op dispatch.
 """
 from __future__ import annotations
 
@@ -87,11 +99,7 @@ def _sweep_h(h: Array, p: Array, qf: Array, delta: Array, z_lo, z_hi,
     return jax.lax.fori_loop(0, m, step, (p, qf))
 
 
-def comq_quantize_h(h: Array, w: Array, spec: QuantSpec,
-                    x_for_error: Optional[Array] = None) -> QuantResult:
-    """H-space COMQ. `h` = XᵀX. Bit-identical to comq.comq_quantize."""
-    h = h.astype(jnp.float32)
-    w = w.astype(jnp.float32)
+def _comq_h_core(h: Array, w: Array, *, spec: QuantSpec):
     m, n = w.shape
     per_layer = spec.granularity == "per_layer"
     if per_layer:
@@ -111,8 +119,21 @@ def comq_quantize_h(h: Array, w: Array, spec: QuantSpec,
         errs.append(_h_error(h, w, qf * delta))
 
     q = jnp.clip(jnp.round(qf), z_lo, z_hi).astype(jnp.int32)
-    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi,
-                       errors=jnp.stack(errs))
+    return q, delta, z_lo, z_hi, jnp.stack(errs)
+
+
+_comq_h_jit = partial(jax.jit, static_argnames=("spec",))(_comq_h_core)
+
+
+def comq_quantize_h(h: Array, w: Array, spec: QuantSpec,
+                    x_for_error: Optional[Array] = None) -> QuantResult:
+    """H-space COMQ. `h` = XᵀX. Bit-identical to comq.comq_quantize.
+
+    The whole multi-sweep solve runs as one jitted program (cached per
+    shape and spec), so repeated per-leaf solves pay a single dispatch."""
+    q, delta, z_lo, z_hi, errs = _comq_h_jit(
+        h.astype(jnp.float32), w.astype(jnp.float32), spec=spec)
+    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi, errors=errs)
 
 
 # ---------------------------------------------------------------------------
@@ -121,37 +142,156 @@ def comq_quantize_h(h: Array, w: Array, spec: QuantSpec,
 
 def panel_sweep_ref(h_bb: Array, s0: Array, qf_b: Array, delta: Array,
                     z_lo, z_hi, hdiag_b: Array):
-    """Reference intra-panel sweep (the Pallas kernel's oracle).
+    """Reference intra-panel sweep (the Pallas kernel's oracle)."""
+    qf_b, _ = panel_sweep_dq_ref(h_bb, s0, qf_b, delta, z_lo, z_hi, hdiag_b)
+    return qf_b
+
+
+def panel_sweep_dq_ref(h_bb: Array, s0: Array, qf_b: Array, delta: Array,
+                       z_lo, z_hi, hdiag_b: Array):
+    """Reference intra-panel sweep emitting the scaled code delta (the
+    Pallas kernel's oracle, kernels/comq_panel.py::comq_panel_dq_pallas).
 
     h_bb: (B, B) block of H; s0: (B, n) = (H·R)[blk] before the panel;
-    qf_b: (B, n) panel codes. Returns updated qf_b."""
+    qf_b: (B, n) panel codes. Returns (qf_b', ΔW) with ΔW = (qf_b' − qf_b)·δ
+    so the caller's trailing update is a single dense matmul.
+
+    The sweep is *lazy*: instead of eagerly rank-1-updating all B rows of S
+    after every step (B·n writes per step), it accumulates the scaled deltas
+    ΔW and materializes each step's row as one (1×B)·(B×n) matvec
+    s_t = s0[t] − h_bb[t, :]·ΔW — same FLOPs, a fraction of the memory
+    traffic (n writes per step), and ΔW falls out for free."""
     B = qf_b.shape[0]
 
     def step(t, carry):
-        s, qf_b = carry
+        qf_b, du = carry
         qg = qf_b[t]
         hg = hdiag_b[t]
+        st = s0[t] - h_bb[t, :] @ du          # rows ≥ t of du are still 0
         denom = delta * hg
-        ratio = s[t] / jnp.where(denom > 0, denom, 1.0)
+        ratio = st / jnp.where(denom > 0, denom, 1.0)
         q_new = jnp.clip(jnp.round(ratio + qg),
                          z_lo.astype(jnp.float32), z_hi.astype(jnp.float32))
         q_new = jnp.where(hg > EPS, q_new,
                           jnp.clip(jnp.round(qg), z_lo.astype(jnp.float32),
                                    z_hi.astype(jnp.float32)))
-        du = (q_new - qg) * delta
-        s = s - h_bb[:, t][:, None] * du[None, :]
+        du = du.at[t].set((q_new - qg) * delta)
         qf_b = qf_b.at[t].set(q_new)
-        return s, qf_b
+        return qf_b, du
 
-    _, qf_b = jax.lax.fori_loop(0, B, step, (s0, qf_b))
-    return qf_b
+    return jax.lax.fori_loop(0, B, step, (qf_b, jnp.zeros_like(qf_b)))
+
+
+def _panel_and_dq(panel_fn, h_bb, s0, qf_b, delta, z_lo, z_hi, hd_b):
+    """Normalize panel_fn output to (qf_b', ΔW): fused kernels return the
+    scaled delta directly; legacy single-output panel_fns get it computed
+    here (one extra elementwise pass over the panel)."""
+    out = panel_fn(h_bb, s0, qf_b, delta, z_lo, z_hi, hd_b)
+    if isinstance(out, tuple):
+        return out
+    return out, (out - qf_b) * delta
+
+
+def _blocked_core(hp: Array, wp: Array, hdiag: Array, delta, z_lo, z_hi, *,
+                  spec: QuantSpec, m: int, block: int, panel_fn, schedule: str):
+    """Jitted multi-sweep blocked solve over permuted/padded operands.
+
+    trailing (default): P = H·R is maintained exactly across sweeps — each
+    panel solve is followed by one rank-B dense matmul P -= H[:, blk] @ ΔW.
+    Between sweeps, H·Q is recovered elementwise from (HW − P)/δ so the
+    δ-update and the error trajectory cost no matmuls at all.
+
+    refresh: the legacy schedule — every panel recomputes the full residual
+    product s0 = H[blk, :]·(W − δQ), and δ-updates/errors each pay another
+    (m, m)·(m, n) matmul per sweep. Kept for A/B benchmarking.
+    """
+    per_layer = spec.granularity == "per_layer"
+    m_pad, n = wp.shape
+    B = block
+    n_blocks = m_pad // B
+    qf = wp / delta
+
+    if schedule == "trailing":
+        hw = hp @ wp                                       # H·W, once
+        p = hp @ (wp - qf * delta)                         # P⁰ = H·R⁰
+
+        def h_err(p, qf, delta):
+            # ‖XR‖ = sqrt(tr(RᵀHR)) = sqrt(Σ R⊙P); padded rows of H are
+            # zero, so P's padded rows vanish and the sum is exact.
+            r = wp - qf * delta
+            return jnp.sqrt(jnp.maximum(jnp.sum(r * p), 0.0))
+
+        errs = [h_err(p, qf, delta)]
+        for _ in range(spec.sweeps):
+            def body(b, carry):
+                p, qf = carry
+                s0 = jax.lax.dynamic_slice(p, (b * B, 0), (B, n))
+                h_cols = jax.lax.dynamic_slice(hp, (0, b * B), (m_pad, B))
+                h_bb = jax.lax.dynamic_slice(h_cols, (b * B, 0), (B, B))
+                qf_b = jax.lax.dynamic_slice(qf, (b * B, 0), (B, n))
+                hd_b = jax.lax.dynamic_slice(hdiag, (b * B,), (B,))
+                qf_b, dq = _panel_and_dq(panel_fn, h_bb, s0, qf_b, delta,
+                                         z_lo, z_hi, hd_b)
+                p = p - h_cols @ dq                        # rank-B trailing
+                qf = jax.lax.dynamic_update_slice(qf, qf_b, (b * B, 0))
+                return p, qf
+
+            p, qf = jax.lax.fori_loop(0, n_blocks, body, (p, qf))
+            # δ-update from the maintained P: H·Q = (HW − P)/δ, elementwise
+            safe = jnp.where(jnp.abs(delta) > EPS, delta, 1.0)
+            hq = (hw - p) / safe
+            if per_layer:
+                num = jnp.sum(qf * hw)
+                den = jnp.sum(qf * hq)
+            else:
+                num = jnp.sum(qf * hw, axis=0)
+                den = jnp.sum(qf * hq, axis=0)
+            delta = jnp.where(den > EPS, num / den, 1.0)
+            p = hw - delta * hq                            # rescale P to δ'
+            errs.append(h_err(p, qf, delta))
+    elif schedule == "refresh":
+        errs = [_h_error(hp[:m, :m], wp[:m], (qf * delta)[:m])]
+        for _ in range(spec.sweeps):
+            def body(b, qf):
+                r = wp - qf * delta
+                h_rows = jax.lax.dynamic_slice(hp, (b * B, 0), (B, m_pad))
+                s0 = h_rows @ r                            # (B, n) MXU
+                h_bb = jax.lax.dynamic_slice(h_rows, (0, b * B), (B, B))
+                qf_b = jax.lax.dynamic_slice(qf, (b * B, 0), (B, n))
+                hd_b = jax.lax.dynamic_slice(hdiag, (b * B,), (B,))
+                qf_b, _ = _panel_and_dq(panel_fn, h_bb, s0, qf_b, delta,
+                                        z_lo, z_hi, hd_b)
+                return jax.lax.dynamic_update_slice(qf, qf_b, (b * B, 0))
+
+            qf = jax.lax.fori_loop(0, n_blocks, body, qf)
+            delta = _delta_update_h(hp[:m, :m], wp[:m], qf[:m], per_layer)
+            errs.append(_h_error(hp[:m, :m], wp[:m], (qf * delta)[:m]))
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    q = jnp.clip(jnp.round(qf[:m]), z_lo, z_hi).astype(jnp.int32)
+    return q, delta, jnp.stack(errs)
+
+
+_BLOCK_STATICS = ("spec", "m", "block", "panel_fn", "schedule")
+_blocked_jit = partial(jax.jit, static_argnames=_BLOCK_STATICS)(_blocked_core)
+# donating the permuted/padded operands lets XLA reuse their buffers for the
+# maintained P / HW products; CPU has no donation support, so gate on backend
+_blocked_jit_donate = partial(jax.jit, static_argnames=_BLOCK_STATICS,
+                              donate_argnums=(0, 1))(_blocked_core)
 
 
 def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
-                          block: int = 256,
-                          panel_fn=None) -> QuantResult:
+                          block: int = 256, panel_fn=None,
+                          schedule: str = "trailing") -> QuantResult:
     """Blocked COMQ: cyclic or shared-greedy order. `panel_fn` defaults to
-    the pure-jnp panel sweep; the launcher swaps in the Pallas kernel."""
+    the pure-jnp fused panel sweep; the launcher swaps in the Pallas kernel
+    (kernels/comq_panel.py::panel_fn_dq_interpret or the compiled variant).
+
+    `schedule` picks the cross-panel update strategy ("trailing" maintains
+    P = H·R with rank-B updates; "refresh" recomputes it per panel — see
+    DESIGN.md §3.3 for the FLOP accounting). Both produce identical codes.
+    """
     h = h.astype(jnp.float32)
     w = w.astype(jnp.float32)
     m, n = w.shape
@@ -168,7 +308,7 @@ def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
     hp = h[perm][:, perm]
     wp = w[perm]
     hdiag = jnp.diag(hp)
-    panel_fn = panel_fn or panel_sweep_ref
+    panel_fn = panel_fn or panel_sweep_dq_ref
 
     # pad rows to a multiple of the panel size (H rows padded with zeros:
     # zero-diagonal rows keep their code — no effect on real rows)
@@ -178,26 +318,10 @@ def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
         hp = jnp.pad(hp, ((0, m_pad - m), (0, m_pad - m)))
         wp = jnp.pad(wp, ((0, m_pad - m), (0, 0)))
         hdiag = jnp.pad(hdiag, (0, m_pad - m))
-    n_blocks = m_pad // B
 
-    qf = wp / delta
-    errs = [_h_error(hp[:m, :m], wp[:m], (qf * delta)[:m])]
-
-    for _ in range(spec.sweeps):
-        def body(b, qf):
-            r = wp - qf * delta
-            h_rows = jax.lax.dynamic_slice(hp, (b * B, 0), (B, m_pad))
-            s0 = h_rows @ r                                    # (B, n) MXU
-            h_bb = jax.lax.dynamic_slice(h_rows, (0, b * B), (B, B))
-            qf_b = jax.lax.dynamic_slice(qf, (b * B, 0), (B, n))
-            hd_b = jax.lax.dynamic_slice(hdiag, (b * B,), (B,))
-            qf_b = panel_fn(h_bb, s0, qf_b, delta, z_lo, z_hi, hd_b)
-            return jax.lax.dynamic_update_slice(qf, qf_b, (b * B, 0))
-        qf = jax.lax.fori_loop(0, n_blocks, body, qf)
-        delta = _delta_update_h(hp[:m, :m], wp[:m], qf[:m], per_layer)
-        errs.append(_h_error(hp[:m, :m], wp[:m], (qf * delta)[:m]))
-
-    q = jnp.clip(jnp.round(qf[:m]), z_lo, z_hi).astype(jnp.int32)
+    core = (_blocked_jit if jax.default_backend() == "cpu"
+            else _blocked_jit_donate)
+    q, delta, errs = core(hp, wp, hdiag, delta, z_lo, z_hi, spec=spec, m=m,
+                          block=B, panel_fn=panel_fn, schedule=schedule)
     q = q[inv_perm]
-    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi,
-                       errors=jnp.stack(errs))
+    return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi, errors=errs)

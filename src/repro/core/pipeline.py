@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import calibrate
 from repro.core.baselines import gptq_quantize, rtn_quantize
-from repro.core.comq_hessian import _h_error, comq_quantize_blocked, comq_quantize_h
+from repro.core.comq_hessian import comq_quantize_blocked, comq_quantize_h
 from repro.core.quantizer import QuantSpec
 from repro.models import transformer as tfm
 from repro.models.common import apply_norm, dtype_of
@@ -118,7 +118,7 @@ class QuantReport:
 
 
 # ---------------------------------------------------------------------------
-# solver dispatch
+# solver dispatch + shared-tap fused solves
 # ---------------------------------------------------------------------------
 
 def solve(h: Array, w2d: Array, spec: QuantSpec, method: str = "comq",
@@ -134,48 +134,168 @@ def solve(h: Array, w2d: Array, spec: QuantSpec, method: str = "comq",
     raise ValueError(f"unknown method {method!r}")
 
 
-def _quantize_leaf(w: Array, tap: Array, spec: QuantSpec, method: str,
-                   per_expert: bool = False):
-    """w: any-rank weight; 2D view (in, out...) flattened appropriately.
+def _fusable(spec: QuantSpec, method: str) -> bool:
+    """True when leaves sharing a tap can be solved as one column-
+    concatenated matrix with results identical to per-leaf solves.
 
-    Attention weights (d, H, hd) flatten to (d, H*hd); wo (H, hd, d) to
-    (H*hd, d); MoE (E, d, f) are solved per-expert with per-expert Grams.
-    Returns (qtensor, err_before, err_after)."""
-    shape = w.shape
-    if per_expert:
-        # stacked experts: (E, d, f) with tap (E, C, d)
-        hs = calibrate.batched_gram(tap)                 # (E, d, d)
+    Per-channel grids have column-wise δ/zero-points, and per-channel COMQ
+    columns are independent given δ (paper eq. (3)) — so fusion is exact
+    whenever the visit order is also per-column (cyclic, exact greedy).
+    Shared-order solvers (greedy_shared; blocked's shared greedy) derive the
+    order from *all* columns, so fusing would change it."""
+    if spec.granularity != "per_channel":
+        return False
+    if method == "comq_blocked":
+        return spec.order == "cyclic"
+    if method in ("rtn", "gptq"):
+        return True
+    return spec.order in ("cyclic", "greedy")
 
-        def one(h_e, w_e):
-            r = solve(h_e, w_e, spec, method)
-            rt = rtn_quantize(w_e, spec, h=h_e)
-            return (r.q, r.delta, r.z_lo, r.errors[-1], rt.errors[-1])
 
-        q, delta, z_lo, ea, eb = jax.vmap(one)(hs, w.astype(jnp.float32))
-        # reshape per-expert scale/zero to broadcast against (E, m, n)
-        delta_b = (jnp.asarray(delta, jnp.float32)[:, None, :]
-                   if delta.ndim == 2
-                   else jnp.asarray(delta, jnp.float32)[:, None, None])
-        z_b = (z_lo[:, None, :] if z_lo.ndim == 2 else z_lo[:, None, None])
-        qt = make_qtensor(q, delta_b, z_b, shape)
-        return qt, float(jnp.sum(eb)), float(jnp.sum(ea))
-
-    # general: the weight's input dim must match the tap's feature dim
-    m = tap.shape[-1]
+def _w2d(w: Array, m: int) -> Array:
+    """2D view (m, cols) of an any-rank weight against tap feature dim m:
+    attention (d, H, hd) flattens to (d, H·hd); wo (H, hd, d) to (H·hd, d)."""
     if w.ndim == 2:
-        w2d = w
-    elif w.ndim == 3 and shape[0] == m:            # (d, H, hd)
-        w2d = w.reshape(m, shape[1] * shape[2])
-    elif w.ndim == 3 and shape[0] * shape[1] == m:  # (H, hd, d)
-        w2d = w.reshape(m, shape[2])
-    else:
-        raise ValueError(f"cannot 2D-ify weight {shape} for tap dim {m}")
+        return w
+    if w.ndim == 3 and w.shape[0] == m:
+        return w.reshape(m, w.shape[1] * w.shape[2])
+    if w.ndim == 3 and w.shape[0] * w.shape[1] == m:
+        return w.reshape(m, w.shape[2])
+    raise ValueError(f"cannot 2D-ify weight {w.shape} for tap dim {m}")
 
-    h = calibrate.gram_from_tap(tap)
-    r = solve(h, w2d, spec, method)
-    rt = rtn_quantize(w2d, spec, h=h)
-    qt = make_qtensor(r.q, r.delta, r.z_lo, shape)
-    return qt, float(rt.errors[-1]), float(r.errors[-1])
+
+@jax.jit
+def _col_err2(h: Array, w: Array, wq: Array) -> Array:
+    """Per-column squared reconstruction error Σ_i R⊙(HR): lets one fused
+    H·R matmul attribute exact per-leaf errors after a concatenated solve."""
+    r = w - wq
+    return jnp.sum(r * (h @ r), axis=0)
+
+
+def _norm_of(e2_slice: Array) -> float:
+    return float(jnp.sqrt(jnp.maximum(jnp.sum(e2_slice), 0.0)))
+
+
+def _expert_norm_sum(e2: Array) -> float:
+    """(E, cols) per-column err² -> sum over experts of per-expert norms,
+    matching the historical per-leaf MoE reporting."""
+    return float(jnp.sum(jnp.sqrt(jnp.maximum(jnp.sum(e2, axis=1), 0.0))))
+
+
+def _solve_group(ws, h: Array, spec: QuantSpec, method: str,
+                 block: int = 256):
+    """Solve the weight leaves `ws` (all calibrated by the same Gram h).
+
+    When exact (see _fusable), the leaves are solved as one column-
+    concatenated [w_a|w_b|…] matrix — one solver invocation and one grid
+    init per tap instead of one per leaf — then split back per leaf.
+    Returns [(qtensor, err_before, err_after, seconds), ...]."""
+    m = h.shape[0]
+    w2ds = [_w2d(w, m) for w in ws]
+
+    if len(ws) > 1 and _fusable(spec, method):
+        t0 = time.time()
+        wcat = jnp.concatenate([w.astype(jnp.float32) for w in w2ds], axis=1)
+        r = solve(h, wcat, spec, method, block=block)
+        e2_after = _col_err2(h, wcat, r.q.astype(jnp.float32) * r.delta)
+        rt = rtn_quantize(wcat, spec)
+        e2_before = _col_err2(h, wcat, rt.q.astype(jnp.float32) * rt.delta)
+        secs = (time.time() - t0) / len(ws)
+        out, lo = [], 0
+        for w, w2d in zip(ws, w2ds):
+            hi = lo + w2d.shape[1]
+            qt = make_qtensor(r.q[:, lo:hi], r.delta[lo:hi], r.z_lo[lo:hi],
+                              w.shape)
+            out.append((qt, _norm_of(e2_before[lo:hi]),
+                        _norm_of(e2_after[lo:hi]), secs))
+            lo = hi
+        return out
+
+    out = []
+    for w, w2d in zip(ws, w2ds):
+        t0 = time.time()
+        r = solve(h, w2d, spec, method, block=block)
+        rt = rtn_quantize(w2d, spec, h=h)
+        qt = make_qtensor(r.q, r.delta, r.z_lo, w.shape)
+        out.append((qt, float(rt.errors[-1]), float(r.errors[-1]),
+                    time.time() - t0))
+    return out
+
+
+def _expert_qtensor(q, delta, z_lo, shape):
+    """Per-expert scale/zero reshaped to broadcast against (E, m, n)."""
+    delta_b = (jnp.asarray(delta, jnp.float32)[:, None, :]
+               if delta.ndim == 2
+               else jnp.asarray(delta, jnp.float32)[:, None, None])
+    z_b = (z_lo[:, None, :] if z_lo.ndim == 2 else z_lo[:, None, None])
+    return make_qtensor(q, delta_b, z_b, shape)
+
+
+def _solve_group_experts(ws, hs: Array, spec: QuantSpec, method: str):
+    """Stacked-expert leaves (E, d, f_k) sharing per-expert Grams hs
+    (E, d, d): vmapped per-expert solves, column-fused across leaves when
+    exact. Returns [(qtensor, err_before, err_after, seconds), ...]."""
+
+    def one(h_e, w_e):
+        r = solve(h_e, w_e, spec, method)
+        rt = rtn_quantize(w_e, spec)
+        e2a = _col_err2(h_e, w_e, r.q.astype(jnp.float32) * r.delta)
+        e2b = _col_err2(h_e, w_e, rt.q.astype(jnp.float32) * rt.delta)
+        return r.q, r.delta, r.z_lo, e2a, e2b
+
+    if len(ws) > 1 and _fusable(spec, method):
+        t0 = time.time()
+        wcat = jnp.concatenate([w.astype(jnp.float32) for w in ws], axis=-1)
+        q, delta, z_lo, e2a, e2b = jax.vmap(one)(hs, wcat)
+        secs = (time.time() - t0) / len(ws)
+        out, lo = [], 0
+        for w in ws:
+            hi = lo + w.shape[-1]
+            qt = _expert_qtensor(q[:, :, lo:hi], delta[:, lo:hi],
+                                 z_lo[:, lo:hi], w.shape)
+            out.append((qt, _expert_norm_sum(e2b[:, lo:hi]),
+                        _expert_norm_sum(e2a[:, lo:hi]), secs))
+            lo = hi
+        return out
+
+    out = []
+    for w in ws:
+        t0 = time.time()
+        q, delta, z_lo, e2a, e2b = jax.vmap(one)(hs, w.astype(jnp.float32))
+        qt = _expert_qtensor(q, delta, z_lo, w.shape)
+        out.append((qt, _expert_norm_sum(e2b), _expert_norm_sum(e2a),
+                    time.time() - t0))
+    return out
+
+
+def _quantize_layer_leaves(lp, taps, tapmap, spec: QuantSpec, method: str,
+                           report: "QuantReport", layer_idx: int,
+                           prefix: str = ""):
+    """Quantize every mapped leaf of one layer, grouped by activation tap:
+    each tap's Gram is computed once (TapGramCache) and leaves sharing it
+    are solved fused when exact. Returns the layer params with QTensor
+    leaves; appends per-leaf LayerReports (seconds timed per solve)."""
+    cache = calibrate.TapGramCache()
+    groups: Dict[str, List[Tuple[str, str]]] = {}
+    for (mod, leaf), tapname in tapmap.items():
+        if mod not in lp or leaf not in lp[mod]:
+            continue
+        groups.setdefault(tapname, []).append((mod, leaf))
+
+    lp_q = dict(lp)
+    for tapname, entries in groups.items():
+        ws = [lp[mod][leaf] for mod, leaf in entries]
+        if tapname.startswith("expert"):
+            hs = cache.batched(tapname, taps[tapname])
+            results = _solve_group_experts(ws, hs, spec, method)
+        else:
+            h = cache.gram(tapname, taps[tapname])
+            results = _solve_group(ws, h, spec, method)
+        for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
+            lp_q = _set_nested(lp_q, mod, leaf, qt)
+            report.layers.append(
+                LayerReport(layer_idx, f"{prefix}{mod}.{leaf}", eb, ea, secs))
+    return lp_q
 
 
 # ---------------------------------------------------------------------------
@@ -224,18 +344,9 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
     state = init_states
     for l in range(cfg.n_layers):
         lp = _tree_slice(params["layers"], l)
-        t0 = time.time()
         _, taps, _ = layer_full_j(lp, x, state)
-        lp_q = dict(lp)
-        for (mod, leaf), tapname in tapmap.items():
-            if mod not in lp or leaf not in lp[mod]:
-                continue
-            qt, eb, ea = _quantize_leaf(lp[mod][leaf], taps[tapname], spec,
-                                        method,
-                                        per_expert=tapname.startswith("expert"))
-            lp_q = _set_nested(lp_q, mod, leaf, qt)
-            report.layers.append(LayerReport(l, f"{mod}.{leaf}", eb, ea,
-                                             time.time() - t0))
+        lp_q = _quantize_layer_leaves(lp, taps, tapmap, spec, method,
+                                      report, l)
         # propagate through the *quantized* layer
         lp_deq = dequantize_tree(lp_q)
         x, _, state = layer_full_j(lp_deq, x, state)
@@ -243,9 +354,11 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
 
     if quantize_unembed and "unembed" in params:
         xn = apply_norm(params["final_norm"], x, cfg)
-        qt, eb, ea = _quantize_leaf(params["unembed"], xn, spec, method)
+        h = calibrate.gram_from_tap(xn)
+        qt, eb, ea, secs = _solve_group([params["unembed"]], h, spec,
+                                        method)[0]
         qparams["unembed"] = qt
-        report.layers.append(LayerReport(-1, "unembed", eb, ea, 0.0))
+        report.layers.append(LayerReport(-1, "unembed", eb, ea, secs))
     return qparams, report
 
 
@@ -289,15 +402,8 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds, report):
             lp = _tree_slice(_tree_slice(params["groups"]["self"], gi), si)
             taps: Dict[str, Array] = {}
             y, _, _, _ = tfm.layer_full(lp, x, cfg, plan, False, taps=taps)
-            lp_q = dict(lp)
-            for (mod, leaf), tapname in DENSE_TAPS.items():
-                if mod not in lp or leaf not in lp[mod]:
-                    continue
-                qt, eb, ea = _quantize_leaf(lp[mod][leaf], taps[tapname],
-                                            spec, method)
-                lp_q = _set_nested(lp_q, mod, leaf, qt)
-                report.layers.append(
-                    LayerReport(gi * (spg + 1) + si, f"{mod}.{leaf}", eb, ea, 0.0))
+            lp_q = _quantize_layer_leaves(lp, taps, DENSE_TAPS, spec, method,
+                                          report, gi * (spg + 1) + si)
             x, _, _, _ = tfm.layer_full(dequantize_tree(lp_q), x, cfg, plan,
                                         False)
             table[f"self_{gi}_{si}"] = lp_q
@@ -305,16 +411,9 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds, report):
         taps = {}
         vkv = tfm.vision_kv_for_layer(cp, ve)
         _ = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps)
-        cp_q = dict(cp)
-        for (mod, leaf), tapname in CROSS_TAPS.items():
-            if mod not in cp or leaf not in cp[mod]:
-                continue
-            qt, eb, ea = _quantize_leaf(cp[mod][leaf], taps[tapname], spec,
-                                        method)
-            cp_q = _set_nested(cp_q, mod, leaf, qt)
-            report.layers.append(
-                LayerReport(gi * (spg + 1) + spg, f"cross.{mod}.{leaf}",
-                            eb, ea, 0.0))
+        cp_q = _quantize_layer_leaves(cp, taps, CROSS_TAPS, spec, method,
+                                      report, gi * (spg + 1) + spg,
+                                      prefix="cross.")
         x = tfm.cross_layer_full(dequantize_tree(cp_q), x, cfg, plan, vkv)
         table[f"cross_{gi}"] = cp_q
     qparams["__qlayers__"] = table

@@ -1,7 +1,9 @@
 """Pallas TPU kernels for COMQ's compute hot-spots.
 
 - quant_matmul:  dequant-fused GEMM over COMQ int4/int8 codes (serving)
-- comq_panel:    in-VMEM sequential coordinate sweep (quantization solve)
+- comq_panel:    in-VMEM lazy coordinate sweep (quantization solve); the
+  fused `comq_panel_dq` variant also emits the scaled code delta ΔW that
+  drives the blocked solver's trailing update (DESIGN.md §3.2–3.3)
 - flash_attention: block-causal flash with GQA index maps (train/prefill)
 
 Each <name>.py holds the pl.pallas_call + BlockSpec; ops.py the jit'd

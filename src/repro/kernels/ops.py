@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.comq_panel import comq_panel_pallas
+from repro.kernels.comq_panel import (comq_panel_dq_pallas,
+                                      comq_panel_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
 
@@ -62,6 +63,20 @@ def comq_panel(h_bb: Array, s0: Array, qf: Array, delta: Array, z_lo: Array,
                              jnp.asarray(z_lo, jnp.float32),
                              jnp.asarray(z_hi, jnp.float32), hdiag,
                              interpret=(mode == "interpret"))
+
+
+def comq_panel_dq(h_bb: Array, s0: Array, qf: Array, delta: Array,
+                  z_lo: Array, z_hi: Array, hdiag: Array, *,
+                  mode: Optional[str] = None):
+    """Fused panel sweep returning (qf', ΔW) — ΔW = (qf' − qf)·δ feeds the
+    blocked solver's trailing update as one dense matmul (DESIGN.md §3.3)."""
+    mode = resolve_mode(mode)
+    if mode == "xla":
+        return ref.comq_panel_dq_ref(h_bb, s0, qf, delta, z_lo, z_hi, hdiag)
+    return comq_panel_dq_pallas(h_bb, s0, qf, delta,
+                                jnp.asarray(z_lo, jnp.float32),
+                                jnp.asarray(z_hi, jnp.float32), hdiag,
+                                interpret=(mode == "interpret"))
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,

@@ -27,6 +27,13 @@ def comq_panel_ref(h_bb: Array, s0: Array, qf: Array, delta: Array,
     return panel_sweep_ref(h_bb, s0, qf, delta, z_lo, z_hi, hdiag)
 
 
+def comq_panel_dq_ref(h_bb: Array, s0: Array, qf: Array, delta: Array,
+                      z_lo: Array, z_hi: Array, hdiag: Array):
+    """Fused (qf', ΔW) panel sweep oracle — delegates to the core ref."""
+    from repro.core.comq_hessian import panel_sweep_dq_ref
+    return panel_sweep_dq_ref(h_bb, s0, qf, delta, z_lo, z_hi, hdiag)
+
+
 def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
                         window: int = 0) -> Array:
     """q: (BH, Tq, hd); k/v: (BH_kv, Tk, hd) with BH % BH_kv == 0 (GQA).

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import QuantSpec, comq_quantize, comq_quantize_h, gram
 from repro.core.quantizer import (init_per_channel, pack_int4, quantize_rtn,

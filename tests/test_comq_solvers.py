@@ -53,6 +53,50 @@ def test_blocked_with_pallas_panel_kernel():
     assert bool(jnp.all(ref.q == ker.q))
 
 
+def test_blocked_with_fused_dq_pallas_kernel():
+    """The fused kernel emits (qf', ΔW); the trailing update consumes ΔW
+    directly — codes must still match the row-at-a-time solver."""
+    from repro.kernels.comq_panel import panel_fn_dq_interpret
+    x, w = _problem(m=64, n=32)
+    h = gram(x)
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
+                     order="greedy_shared")
+    rh = comq_quantize_h(h, w, spec)
+    ker = comq_quantize_blocked(h, w, spec, block=32,
+                                panel_fn=panel_fn_dq_interpret)
+    assert bool(jnp.all(rh.q == ker.q))
+
+
+@pytest.mark.parametrize("gran", ["per_layer", "per_channel"])
+@pytest.mark.parametrize("order", ["cyclic", "greedy_shared"])
+def test_trailing_blocked_padded_rows(gran, order):
+    """Bit-identity regression for the trailing-update schedule when m is
+    not divisible by the panel size (96 -> padded to 128 at block=64)."""
+    x, w = _problem()
+    h = gram(x)
+    spec = QuantSpec(bits=4, granularity=gran, lam=0.9, sweeps=3, order=order)
+    rh = comq_quantize_h(h, w, spec)
+    rb = comq_quantize_blocked(h, w, spec, block=64)
+    assert bool(jnp.all(rh.q == rb.q))
+    np.testing.assert_allclose(np.asarray(rh.delta), np.asarray(rb.delta),
+                               rtol=2e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("gran", ["per_layer", "per_channel"])
+def test_trailing_equals_refresh_schedule(gran):
+    """The maintained-P trailing schedule and the legacy per-panel-refresh
+    schedule are the same math — identical codes and error trajectories."""
+    x, w = _problem()
+    h = gram(x)
+    spec = QuantSpec(bits=4, granularity=gran, lam=0.9, sweeps=3,
+                     order="greedy_shared")
+    rt = comq_quantize_blocked(h, w, spec, block=32)
+    rr = comq_quantize_blocked(h, w, spec, block=32, schedule="refresh")
+    assert bool(jnp.all(rt.q == rr.q))
+    np.testing.assert_allclose(np.asarray(rt.errors), np.asarray(rr.errors),
+                               rtol=1e-4, atol=1e-5)
+
+
 @pytest.mark.parametrize("bits", [2, 3, 4, 8])
 def test_monotone_descent(bits):
     """Coordinate descent never increases the objective after the first

@@ -83,6 +83,81 @@ def test_qtensor_leaves_and_dequant_shapes():
     assert deq.shape == params["layers"]["attn"]["wq"].shape[1:]
 
 
+def _qtensor_leaves(table):
+    out = {}
+    for lkey, lp in table.items():
+        for mod, leaves in lp.items():
+            if not isinstance(leaves, dict):
+                continue
+            for leaf, v in leaves.items():
+                if is_qtensor(v):
+                    out[(lkey, mod, leaf)] = v
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "granite-moe-3b-a800m"])
+def test_fused_shared_tap_solves_match_per_leaf(arch, monkeypatch):
+    """Shared-tap fusion ([wq|wk|wv] on attn_in, [w_gate|w_up] on mlp_in /
+    expert_in) must produce bit-identical QTensors to per-leaf solves —
+    per-channel columns are independent given δ (paper eq. (3))."""
+    from repro.core import pipeline
+    cfg = get_smoke_config(arch)
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    qp_fused, _ = quantize_model(params, cfg, PLAN, tokens, SPEC)
+    monkeypatch.setattr(pipeline, "_fusable", lambda spec, method: False)
+    qp_sep, _ = quantize_model(params, cfg, PLAN, tokens, SPEC)
+    fused = _qtensor_leaves(qp_fused["__qlayers__"])
+    sep = _qtensor_leaves(qp_sep["__qlayers__"])
+    assert fused.keys() == sep.keys() and len(fused) > 0
+    for key in fused:
+        qf, qs = fused[key], sep[key]
+        assert bool(jnp.all(qf["codes"] == qs["codes"])), key
+        assert bool(jnp.all(qf["z_lo"] == qs["z_lo"])), key
+        np.testing.assert_allclose(np.asarray(qf["scale"]),
+                                   np.asarray(qs["scale"]), rtol=1e-6,
+                                   err_msg=str(key))
+        assert qf["shape"] == qs["shape"], key
+
+
+def test_gram_computed_once_per_tap(monkeypatch):
+    """The dense family has 7 mapped leaves but only 4 distinct taps per
+    layer — the TapGramCache must issue exactly 4 Gram matmuls per layer."""
+    from repro.core import calibrate
+    calls = {"n": 0}
+    orig = calibrate.gram_from_tap
+
+    def counting(tap):
+        calls["n"] += 1
+        return orig(tap)
+
+    monkeypatch.setattr(calibrate, "gram_from_tap", counting)
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    quantize_model(params, cfg, PLAN, tokens, SPEC)
+    assert calls["n"] == 4 * cfg.n_layers, calls["n"]
+
+
+def test_layer_report_seconds_reset_per_leaf():
+    """Regression: seconds was measured from one t0 per *layer*, inflating
+    later leaves cumulatively. Each leaf now reports its own solve time, so
+    the per-layer sum must be far below n_leaves × layer wall time."""
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    import time as _time
+    t0 = _time.time()
+    _, report = quantize_model(params, cfg, PLAN, tokens, SPEC)
+    wall = _time.time() - t0
+    assert all(r.seconds >= 0.0 for r in report.layers)
+    # the cumulative-t0 bug multiple-counted solve time (leaf k charged the
+    # sum of leaves 1..k), pushing the report total well past wall clock;
+    # per-leaf timing keeps the total within the actual elapsed time
+    total = sum(r.seconds for r in report.layers)
+    assert total <= wall + 1e-6, (total, wall)
+
+
 def test_column_independence_enables_sharded_solve():
     """Per-channel COMQ on a column subset equals those columns of the full
     solve — the property that lets the launcher shard columns across the
