@@ -6,13 +6,25 @@ A/B rows tracked in BENCH_*.json from PR 1 on (DESIGN.md §3.3):
   trailing-update blocked schedule; `derived` = refresh/trailing speedup.
 * solver/fused_shared_tap_vs_separate — one fused [wq|wk|wv] solve (shared
   Gram) vs three per-leaf solves with per-leaf Grams; `derived` = speedup.
+
+And the pipeline-schedule rows from PR 2 on (DESIGN.md §4.1/§4.2),
+committed as BENCH_pipeline.json:
+
+* pipeline/staged_vs_legacy — end-to-end quantize_model wall time on the
+  staged one-forward-per-layer schedule; `derived` = legacy/staged speedup
+  (the two-forward schedule pays 2× calibration forward FLOPs).
+* pipeline/{staged,legacy}_wall_per_layer — per-layer wall time (µs).
+* pipeline/sharded_gram_vs_single — shard_map + single-psum Gram vs the
+  single-device Gram; `derived` = single/sharded. On one device this
+  tracks the pure shard_map dispatch overhead the data-parallel path
+  pays; with real shards the local XᵀX is 1/|data| of the FLOPs.
 """
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timed
 from repro.core import (QuantSpec, comq_quantize_blocked, comq_quantize_h,
-                        gptq_quantize, gram, rtn_quantize)
+                        gptq_quantize, gram, quantize_model, rtn_quantize)
 
 
 def run():
@@ -75,4 +87,43 @@ def run():
     _, us_s = timed(separate, repeats=2)
     rows.append((f"solver/fused_shared_tap_vs_separate_{m}x3x{n}",
                  round(us_f, 1), round(us_s / us_f, 3)))
+
+    # --- pipeline schedule A/B: staged one-forward vs legacy two-forward -
+    from repro.configs import get_smoke_config
+    from repro.models import BuildPlan, init_params
+    cfg = get_smoke_config("qwen2-7b")
+    plan = BuildPlan(remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg, plan)
+    # calibration-realistic token count: forward FLOPs dominate, which is
+    # exactly the regime the staged schedule halves
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (16, 512), 0,
+                                cfg.vocab_size)
+    qspec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
+                      order="greedy")
+
+    def run_pipe(mode):
+        return quantize_model(params, cfg, plan, tokens, qspec,
+                              propagation=mode)[1]
+
+    _, us_staged = timed(run_pipe, "staged", repeats=2)
+    _, us_legacy = timed(run_pipe, "legacy", repeats=2)
+    rows.append(("pipeline/staged_wall_per_layer",
+                 round(us_staged / cfg.n_layers, 1), round(us_staged, 1)))
+    rows.append(("pipeline/legacy_wall_per_layer",
+                 round(us_legacy / cfg.n_layers, 1), round(us_legacy, 1)))
+    rows.append(("pipeline/staged_vs_legacy", round(us_staged, 1),
+                 round(us_legacy / us_staged, 3)))
+
+    # --- sharded Gram (shard_map + one psum) vs single-device Gram --------
+    # both sides jitted so the row isolates the shard_map/psum overhead,
+    # not jit-vs-eager dispatch
+    from repro.core.calibrate import gram_from_tap
+    from repro.dist import data_mesh, sharded_gram
+    mesh = data_mesh()
+    tap = jax.random.normal(jax.random.PRNGKey(2), (16, 512, 256))
+    single_j = jax.jit(gram_from_tap)
+    _, us_sh = timed(lambda: sharded_gram(mesh, tap), repeats=3)
+    _, us_sg = timed(lambda: single_j(tap), repeats=3)
+    rows.append(("pipeline/sharded_gram_vs_single", round(us_sh, 1),
+                 round(us_sg / us_sh, 3)))
     return rows

@@ -6,7 +6,7 @@ block per layer — the only communication COMQ needs (DESIGN.md §4).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,20 +51,29 @@ class TapGramCache:
     Gram matmuls per layer from 7 (one per leaf) to 4 (one per tap).
 
     Scope one instance per layer: taps are recomputed from the quantized
-    stream every layer, so cached Grams must not outlive them."""
+    stream every layer, so cached Grams must not outlive them.
 
-    def __init__(self):
+    `gram_fn`/`batched_fn` override how a Gram is computed (e.g. the
+    data-parallel shard_map + psum path in repro.dist.calibrate)."""
+
+    def __init__(self, gram_fn: Optional[Callable] = None,
+                 batched_fn: Optional[Callable] = None):
         self._grams: Dict[str, Array] = {}
         self.computed = 0      # instrumentation: # of Gram matmuls issued
+        self._gram_fn = gram_fn
+        self._batched_fn = batched_fn
 
     def gram(self, name: str, tap: Array) -> Array:
         if name not in self._grams:
-            self._grams[name] = gram_from_tap(tap)
+            fn = self._gram_fn if self._gram_fn is not None else gram_from_tap
+            self._grams[name] = fn(tap)
             self.computed += 1
         return self._grams[name]
 
     def batched(self, name: str, tap: Array) -> Array:
         if name not in self._grams:
-            self._grams[name] = batched_gram(tap)
+            fn = (self._batched_fn if self._batched_fn is not None
+                  else batched_gram)
+            self._grams[name] = fn(tap)
             self.computed += 1
         return self._grams[name]

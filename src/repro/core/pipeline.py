@@ -7,9 +7,28 @@ The pipeline walks the stacked layer params, uses the model's activation
 taps (models/*.py `taps=` hooks) to get the exact input X of every
 projection, solves COMQ in H-space per projection, and returns a params
 pytree where quantized leaves are `QTensor` dicts.
+
+Two propagation schedules (DESIGN.md §4.1):
+
+* ``staged`` (default) — **one forward per layer**: the layer's single
+  tap-collecting forward quantizes each leaf group *in tap order*
+  (attn_in → wo_in → mlp_in → down_in) via the `quantize_cb` hook in
+  models/*.py, so every downstream sub-path is computed with the already-
+  quantized upstream sub-blocks. Halves calibration forward FLOPs and
+  makes intra-layer taps exact w.r.t. the quantized model.
+* ``legacy`` — the two-forward schedule (float tap forward, then a second
+  quantized-propagation forward), kept for A/B
+  (benchmarks/runtime_compare.py::pipeline/staged_vs_legacy).
+
+Reporting is sync-free: per-leaf errors stay on device during the walk and
+are materialized by one batched transfer at the end (`_finalize_report`).
+With a ``mesh`` (a "data" axis), calibration is data-parallel: tokens are
+sharded over the mesh and each tap's (m, m) Gram block reduces with a
+single psum — the only communication (repro.dist, DESIGN.md §4.2).
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -22,7 +41,7 @@ from repro.core.baselines import gptq_quantize, rtn_quantize
 from repro.core.comq_hessian import comq_quantize_blocked, comq_quantize_h
 from repro.core.quantizer import QuantSpec
 from repro.models import transformer as tfm
-from repro.models.common import apply_norm, dtype_of
+from repro.models.common import apply_norm
 
 Array = jax.Array
 
@@ -104,12 +123,19 @@ class LayerReport:
     name: str
     err_before: float     # ‖X(W - RTN(W))‖ on the COMQ grid init
     err_after: float      # ‖X(W - W_q)‖ after COMQ
+    # host time spent *dispatching* this leaf's solve: the walk is sync-free
+    # (errors stay on device until one batched transfer at the end), so on
+    # an async backend this is not the solve's compute time — use
+    # QuantReport.wall_seconds for end-to-end cost
     seconds: float
 
 
 @dataclass
 class QuantReport:
     layers: List[LayerReport] = field(default_factory=list)
+    # end-to-end quantize_model wall time (measured around the whole walk,
+    # after the finalizing device_get — includes all device compute)
+    wall_seconds: float = 0.0
 
     def total_improvement(self) -> float:
         b = sum(r.err_before for r in self.layers)
@@ -172,14 +198,15 @@ def _col_err2(h: Array, w: Array, wq: Array) -> Array:
     return jnp.sum(r * (h @ r), axis=0)
 
 
-def _norm_of(e2_slice: Array) -> float:
-    return float(jnp.sqrt(jnp.maximum(jnp.sum(e2_slice), 0.0)))
+def _norm_of(e2_slice: Array) -> Array:
+    """Device scalar — never forces a host sync; see _finalize_report."""
+    return jnp.sqrt(jnp.maximum(jnp.sum(e2_slice), 0.0))
 
 
-def _expert_norm_sum(e2: Array) -> float:
+def _expert_norm_sum(e2: Array) -> Array:
     """(E, cols) per-column err² -> sum over experts of per-expert norms,
-    matching the historical per-leaf MoE reporting."""
-    return float(jnp.sum(jnp.sqrt(jnp.maximum(jnp.sum(e2, axis=1), 0.0))))
+    matching the historical per-leaf MoE reporting (device scalar)."""
+    return jnp.sum(jnp.sqrt(jnp.maximum(jnp.sum(e2, axis=1), 0.0)))
 
 
 def _solve_group(ws, h: Array, spec: QuantSpec, method: str,
@@ -217,8 +244,7 @@ def _solve_group(ws, h: Array, spec: QuantSpec, method: str,
         r = solve(h, w2d, spec, method, block=block)
         rt = rtn_quantize(w2d, spec, h=h)
         qt = make_qtensor(r.q, r.delta, r.z_lo, w.shape)
-        out.append((qt, float(rt.errors[-1]), float(r.errors[-1]),
-                    time.time() - t0))
+        out.append((qt, rt.errors[-1], r.errors[-1], time.time() - t0))
     return out
 
 
@@ -268,19 +294,39 @@ def _solve_group_experts(ws, hs: Array, spec: QuantSpec, method: str):
     return out
 
 
-def _quantize_layer_leaves(lp, taps, tapmap, spec: QuantSpec, method: str,
-                           report: "QuantReport", layer_idx: int,
-                           prefix: str = ""):
-    """Quantize every mapped leaf of one layer, grouped by activation tap:
-    each tap's Gram is computed once (TapGramCache) and leaves sharing it
-    are solved fused when exact. Returns the layer params with QTensor
-    leaves; appends per-leaf LayerReports (seconds timed per solve)."""
-    cache = calibrate.TapGramCache()
+def _tap_groups(lp, tapmap) -> Dict[str, List[Tuple[str, str]]]:
+    """tapname -> [(mod, leaf), ...] for the leaves present in this layer."""
     groups: Dict[str, List[Tuple[str, str]]] = {}
     for (mod, leaf), tapname in tapmap.items():
         if mod not in lp or leaf not in lp[mod]:
             continue
         groups.setdefault(tapname, []).append((mod, leaf))
+    return groups
+
+
+def _gram_fns(mesh):
+    """(gram_fn, batched_fn) for (B,T,d) and (E,C,d) taps. With a mesh the
+    Gram reduces via shard_map + one psum over the "data" axis (expert taps
+    fall back to the replicated Gram when the routed capacity doesn't
+    divide the axis — see dist.calibrate)."""
+    if mesh is None:
+        return (lambda tap: calibrate.gram_from_tap(tap),
+                lambda tap: calibrate.batched_gram(tap))
+    from repro import dist
+    return (lambda tap: dist.sharded_gram(mesh, tap),
+            lambda tap: dist.sharded_batched_gram(mesh, tap))
+
+
+def _quantize_layer_leaves(lp, taps, tapmap, spec: QuantSpec, method: str,
+                           pending: List[tuple], layer_idx: int,
+                           gram_fn=None, batched_fn=None, prefix: str = ""):
+    """Legacy-schedule body: quantize every mapped leaf of one layer from a
+    pre-collected `taps` dict, grouped by activation tap (TapGramCache: one
+    Gram per tap; fused solves when exact). Returns the layer params with
+    QTensor leaves; appends per-leaf (idx, name, err, err, secs) records
+    with the errors left on device."""
+    cache = calibrate.TapGramCache(gram_fn=gram_fn, batched_fn=batched_fn)
+    groups = _tap_groups(lp, tapmap)
 
     lp_q = dict(lp)
     for tapname, entries in groups.items():
@@ -293,9 +339,84 @@ def _quantize_layer_leaves(lp, taps, tapmap, spec: QuantSpec, method: str,
             results = _solve_group(ws, h, spec, method)
         for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
             lp_q = _set_nested(lp_q, mod, leaf, qt)
-            report.layers.append(
-                LayerReport(layer_idx, f"{prefix}{mod}.{leaf}", eb, ea, secs))
+            pending.append((layer_idx, f"{prefix}{mod}.{leaf}", eb, ea, secs))
     return lp_q
+
+
+def _staged_cb(lp, groups, taps, spec: QuantSpec, method: str,
+               pending: List[tuple], layer_idx: int, holder: dict,
+               gram_fn, batched_fn, prefix: str = ""):
+    """The staged-schedule `quantize_cb`: invoked by the model's tap hooks
+    mid-forward, right after tap `tapname` is recorded and before the
+    weights it feeds are applied. Solves the tap's leaf group, stashes the
+    QTensors, and returns dequantized replacements so the rest of the
+    forward runs on the quantized sub-blocks."""
+    def cb(tapname: str):
+        entries = groups.get(tapname)
+        if not entries:
+            return {}
+        ws = [lp[mod][leaf] for mod, leaf in entries]
+        if tapname.startswith("expert"):
+            hs = batched_fn(taps[tapname])
+            results = _solve_group_experts(ws, hs, spec, method)
+        else:
+            h = gram_fn(taps[tapname])
+            results = _solve_group(ws, h, spec, method)
+        repl = {}
+        for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
+            holder["lp_q"] = _set_nested(holder["lp_q"], mod, leaf, qt)
+            pending.append((layer_idx, f"{prefix}{mod}.{leaf}", eb, ea, secs))
+            repl[leaf] = dequant_qtensor(qt)
+        return repl
+    return cb
+
+
+def _staged_ctx(lp, tapmap, spec: QuantSpec, method: str,
+                pending: List[tuple], layer_idx: int, gram_fn, batched_fn,
+                prefix: str = ""):
+    """(taps, holder, cb) for one staged layer walk — shared by the
+    homogeneous, VLM-self, and VLM-cross paths so the callback protocol
+    has a single definition."""
+    taps: Dict[str, Array] = {}
+    holder = {"lp_q": lp}
+    cb = _staged_cb(lp, _tap_groups(lp, tapmap), taps, spec, method,
+                    pending, layer_idx, holder, gram_fn, batched_fn,
+                    prefix=prefix)
+    return taps, holder, cb
+
+
+def _quantize_layer_staged(lp, x, state, cfg, plan, tapmap,
+                           spec: QuantSpec, method: str,
+                           pending: List[tuple], layer_idx: int,
+                           gram_fn, batched_fn):
+    """Staged schedule: ONE `layer_full` evaluation quantizes the layer in
+    tap order *and* propagates x through the quantized sub-blocks — every
+    downstream tap is exact w.r.t. the quantized upstream. Returns
+    (lp_q, new_x, new_state)."""
+    taps, holder, cb = _staged_ctx(lp, tapmap, spec, method, pending,
+                                   layer_idx, gram_fn, batched_fn)
+    rwkv_state = state if cfg.attn_free else None
+    ssm_state = state if cfg.parallel_ssm_heads else None
+    y, _, _, new_state = tfm.layer_full(lp, x, cfg, plan, False,
+                                        rwkv_state=rwkv_state,
+                                        ssm_state=ssm_state, taps=taps,
+                                        quantize_cb=cb)
+    return holder["lp_q"], y, new_state
+
+
+def _finalize_report(report: "QuantReport", pending: List[tuple]):
+    """Materialize every accumulated on-device error scalar with a single
+    batched transfer — the pipeline walk itself never blocks on the host."""
+    if not pending:
+        return report
+    errs = jnp.stack([jnp.stack([jnp.asarray(eb, jnp.float32),
+                                 jnp.asarray(ea, jnp.float32)])
+                      for (_, _, eb, ea, _) in pending])
+    vals = jax.device_get(errs)
+    for (li, name, _, _, secs), (eb, ea) in zip(pending, vals):
+        report.layers.append(LayerReport(li, name, float(eb), float(ea),
+                                         secs))
+    return report
 
 
 # ---------------------------------------------------------------------------
@@ -310,28 +431,52 @@ def _tree_set(tree, i, sub):
     return jax.tree_util.tree_map(lambda a, s: a.at[i].set(s), tree, sub)
 
 
+@functools.lru_cache(maxsize=16)
+def _legacy_layer_fn(cfg, plan):
+    """Jitted two-forward-schedule layer evaluator, cached across
+    quantize_model calls (cfg/plan are frozen dataclasses)."""
+    return jax.jit(lambda lp, x, st: _layer_with_taps(lp, x, st, cfg, plan))
+
+
 def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
                    method: str = "comq",
                    vision_embeds: Optional[Array] = None,
-                   quantize_unembed: bool = False):
+                   quantize_unembed: bool = False,
+                   propagation: str = "staged",
+                   mesh=None):
     """Quantize all projection weights of an LM. `tokens`: (B, T) calib batch.
+
+    propagation="staged" (default) runs exactly one layer forward per layer
+    (leaves quantized mid-forward in tap order, downstream taps exact
+    w.r.t. quantized upstream); "legacy" keeps the two-forward schedule
+    for A/B. mesh (optional, with a "data" axis) shards the calibration
+    batch data-parallel: each Gram block reduces with a single psum
+    (repro.dist; DESIGN.md §4.2).
 
     Returns (qparams, QuantReport). qparams has QTensor leaves; use
     `dequantize_tree` (or the quantized serving path) to run it.
     """
-    from repro.models.model import embed_tokens, _vlm_group_counts
+    from repro.models.model import embed_tokens
+    if propagation not in ("staged", "legacy"):
+        raise ValueError(f"unknown propagation {propagation!r}")
+    t_start = time.time()
     report = QuantReport()
-    cd = dtype_of(cfg.compute_dtype)
+    pending: List[tuple] = []
+    gram_fn, batched_fn = _gram_fns(mesh)
+    if mesh is not None:
+        from repro.dist import shard_batch
+        tokens = shard_batch(mesh, tokens)
     x = embed_tokens(params, cfg, plan, tokens)
     qparams = jax.tree_util.tree_map(lambda a: a, params)  # shallow copy
     tapmap = taps_for(cfg)
 
-    layer_full_j = jax.jit(
-        lambda lp, x, st: _layer_with_taps(lp, x, st, cfg, plan))
-
     if cfg.family == "vlm":
-        return _quantize_vlm(params, cfg, plan, x, spec, method,
-                             vision_embeds, report)
+        qparams = _quantize_vlm(params, cfg, plan, x, spec, method,
+                                vision_embeds, pending, propagation,
+                                gram_fn, batched_fn)
+        _finalize_report(report, pending)
+        report.wall_seconds = time.time() - t_start
+        return qparams, report
 
     init_states = None
     if cfg.attn_free:
@@ -342,23 +487,34 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
         init_states = init_ssm_state(x.shape[0], cfg)
 
     state = init_states
-    for l in range(cfg.n_layers):
-        lp = _tree_slice(params["layers"], l)
-        _, taps, _ = layer_full_j(lp, x, state)
-        lp_q = _quantize_layer_leaves(lp, taps, tapmap, spec, method,
-                                      report, l)
-        # propagate through the *quantized* layer
-        lp_deq = dequantize_tree(lp_q)
-        x, _, state = layer_full_j(lp_deq, x, state)
-        qparams = _store_layer(qparams, l, lp_q)
+    if propagation == "legacy":
+        layer_full_j = _legacy_layer_fn(cfg, plan)
+        for l in range(cfg.n_layers):
+            lp = _tree_slice(params["layers"], l)
+            _, taps, _ = layer_full_j(lp, x, state)
+            lp_q = _quantize_layer_leaves(lp, taps, tapmap, spec, method,
+                                          pending, l, gram_fn, batched_fn)
+            # propagate through the *quantized* layer
+            lp_deq = dequantize_tree(lp_q)
+            x, _, state = layer_full_j(lp_deq, x, state)
+            qparams = _store_layer(qparams, l, lp_q)
+    else:
+        for l in range(cfg.n_layers):
+            lp = _tree_slice(params["layers"], l)
+            lp_q, x, state = _quantize_layer_staged(
+                lp, x, state, cfg, plan, tapmap, spec, method, pending, l,
+                gram_fn, batched_fn)
+            qparams = _store_layer(qparams, l, lp_q)
 
     if quantize_unembed and "unembed" in params:
         xn = apply_norm(params["final_norm"], x, cfg)
-        h = calibrate.gram_from_tap(xn)
+        h = gram_fn(xn)
         qt, eb, ea, secs = _solve_group([params["unembed"]], h, spec,
                                         method)[0]
         qparams["unembed"] = qt
-        report.layers.append(LayerReport(-1, "unembed", eb, ea, secs))
+        pending.append((-1, "unembed", eb, ea, secs))
+    _finalize_report(report, pending)
+    report.wall_seconds = time.time() - t_start
     return qparams, report
 
 
@@ -389,7 +545,8 @@ def _layer_with_taps(lp, x, state, cfg, plan):
     return y, taps, new_state
 
 
-def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds, report):
+def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
+                  pending, propagation, gram_fn, batched_fn):
     from repro.models.model import _vlm_group_counts
     g, spg = _vlm_group_counts(cfg)
     cd = x.dtype
@@ -397,27 +554,46 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds, report):
                     params["vision_proj"].astype(cd))
     qparams = dict(params)
     table = {}
+    staged = propagation == "staged"
     for gi in range(g):
         for si in range(spg):
             lp = _tree_slice(_tree_slice(params["groups"]["self"], gi), si)
-            taps: Dict[str, Array] = {}
-            y, _, _, _ = tfm.layer_full(lp, x, cfg, plan, False, taps=taps)
-            lp_q = _quantize_layer_leaves(lp, taps, DENSE_TAPS, spec, method,
-                                          report, gi * (spg + 1) + si)
-            x, _, _, _ = tfm.layer_full(dequantize_tree(lp_q), x, cfg, plan,
-                                        False)
+            lidx = gi * (spg + 1) + si
+            if staged:
+                lp_q, x, _ = _quantize_layer_staged(
+                    lp, x, None, cfg, plan, DENSE_TAPS, spec, method,
+                    pending, lidx, gram_fn, batched_fn)
+            else:
+                taps: Dict[str, Array] = {}
+                y, _, _, _ = tfm.layer_full(lp, x, cfg, plan, False,
+                                            taps=taps)
+                lp_q = _quantize_layer_leaves(lp, taps, DENSE_TAPS, spec,
+                                              method, pending, lidx,
+                                              gram_fn, batched_fn)
+                x, _, _, _ = tfm.layer_full(dequantize_tree(lp_q), x, cfg,
+                                            plan, False)
             table[f"self_{gi}_{si}"] = lp_q
         cp = _tree_slice(params["groups"]["cross"], gi)
-        taps = {}
         vkv = tfm.vision_kv_for_layer(cp, ve)
-        _ = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps)
-        cp_q = _quantize_layer_leaves(cp, taps, CROSS_TAPS, spec, method,
-                                      report, gi * (spg + 1) + spg,
-                                      prefix="cross.")
-        x = tfm.cross_layer_full(dequantize_tree(cp_q), x, cfg, plan, vkv)
+        lidx = gi * (spg + 1) + spg
+        if staged:
+            taps, holder, cb = _staged_ctx(cp, CROSS_TAPS, spec, method,
+                                           pending, lidx, gram_fn,
+                                           batched_fn, prefix="cross.")
+            x = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps,
+                                     quantize_cb=cb)
+            cp_q = holder["lp_q"]
+        else:
+            taps = {}
+            _ = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps)
+            cp_q = _quantize_layer_leaves(cp, taps, CROSS_TAPS, spec, method,
+                                          pending, lidx, gram_fn, batched_fn,
+                                          prefix="cross.")
+            x = tfm.cross_layer_full(dequantize_tree(cp_q), x, cfg, plan,
+                                     vkv)
         table[f"cross_{gi}"] = cp_q
     qparams["__qlayers__"] = table
-    return qparams, report
+    return qparams
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,84 @@
+"""Data-parallel COMQ calibration (DESIGN.md §4.2).
+
+The calibration batch is sharded over the mesh's "data" axis; every tap
+forward then runs SPMD on the local shard, and the only communication the
+whole pipeline needs is one `psum` of each (m, m) Gram block — solves run
+replicated on the maintained-P blocked solver (ROADMAP constraint).
+
+Communication accounting per transformer layer (dense family): 4 taps →
+4 Gram all-reduces of m·m f32 ≈ 4·d² + (Hp·hd)² + f² bytes·4, independent
+of the number of calibration tokens. Compare the data it replaces: an
+all-gather of the (N, m) features would move N·m·4 bytes per tap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.collectives import psum_gram
+
+Array = jax.Array
+
+
+def data_mesh(n: Optional[int] = None) -> Mesh:
+    """1-axis ("data",) mesh over the first n (default: all) local devices.
+    Under XLA_FLAGS=--xla_force_host_platform_device_count=K this is the
+    forced-host smoke mesh the multi-device CI job runs on."""
+    devices = jax.devices()
+    n = n or len(devices)
+    return Mesh(np.asarray(devices[:n]).reshape(n), ("data",))
+
+
+def shard_batch(mesh: Mesh, x: Array) -> Array:
+    """Place x with its leading (batch) axis sharded over the "data" axis."""
+    ndata = mesh.shape["data"]
+    if x.shape[0] % ndata:
+        raise ValueError(
+            f"batch {x.shape[0]} not divisible by data axis {ndata}")
+    return jax.device_put(x, NamedSharding(mesh, P("data")))
+
+
+@functools.lru_cache(maxsize=8)
+def _gram_fn(mesh: Mesh):
+    """Jitted shard_map'd Gram, cached per mesh (and per shape via jit):
+    the calibration walk calls this once per tap per layer — without the
+    cache every call would re-trace the shard_map."""
+    return jax.jit(shard_map(lambda t: psum_gram(t, "data"), mesh=mesh,
+                             in_specs=P("data"), out_specs=P()))
+
+
+@functools.lru_cache(maxsize=8)
+def _batched_gram_fn(mesh: Mesh):
+    def local(t):
+        t = t.astype(jnp.float32)
+        return jax.lax.psum(jnp.einsum("ecd,ecf->edf", t, t), "data")
+    return jax.jit(shard_map(local, mesh=mesh, in_specs=P(None, "data"),
+                             out_specs=P()))
+
+
+def sharded_gram(mesh: Mesh, tap: Array) -> Array:
+    """(B, T, d) tap (batch-sharded or not) -> replicated (d, d) Gram.
+
+    shard_map computes the local-shard XᵀX and all-reduces it with a single
+    psum — the only cross-device traffic of the calibration walk."""
+    if tap.shape[0] % mesh.shape["data"]:
+        # batch doesn't divide the axis (e.g. routed expert buffers):
+        # fall back to the replicated Gram
+        from repro.core.calibrate import gram_from_tap
+        return gram_from_tap(tap)
+    return _gram_fn(mesh)(tap)
+
+
+def sharded_batched_gram(mesh: Mesh, tap: Array) -> Array:
+    """(E, C, d) stacked-expert tap with the capacity axis sharded ->
+    replicated (E, d, d) per-expert Grams, one psum."""
+    if tap.shape[1] % mesh.shape["data"]:
+        from repro.core.calibrate import batched_gram
+        return batched_gram(tap)
+    return _batched_gram_fn(mesh)(tap)

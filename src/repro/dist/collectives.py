@@ -1,0 +1,62 @@
+"""Communication-reducing collectives (used inside `shard_map`-ped code).
+
+* `psum_gram` — the single (m, m) all-reduce that data-parallel COMQ
+  calibration needs per tap (DESIGN.md §4.2).
+* `compressed_psum` — int8 error-feedback gradient all-reduce: each shard
+  quantizes (grad + carried error) onto a shared absmax grid, the psum
+  moves int32 code sums instead of f32 values, and the local quantization
+  residual is carried into the next step's state so compression error
+  never accumulates (1-bit-Adam-style EF; `RunConfig.grad_compression`).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+def psum_gram(x: Array, axis_name: str = "data") -> Array:
+    """Local features (rows, m) -> replicated Gram H = Σ XᵀX over the axis."""
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    return jax.lax.psum(x2.T @ x2, axis_name)
+
+
+def init_error_state(tree: PyTree) -> PyTree:
+    """Zero error-feedback residuals, one per gradient leaf (f32)."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+
+def compressed_psum(tree: PyTree, axis_name: str, error: PyTree,
+                    axis_size: int, bits: int = 8) -> Tuple[PyTree, PyTree]:
+    """Mean-reduce `tree` over `axis_name` with int `bits` compression and
+    error feedback. Returns (mean_tree, new_error_tree).
+
+    Per leaf: v = g + e is quantized onto a *shared* grid (scale = pmax of
+    local absmax / qmax) so the code sums are exact in int32; the mean is
+    sum(codes)·scale / axis_size and the local residual v − q·scale is the
+    new carried error. On one shard: out + new_e == g exactly (up to f32
+    rounding) — compression never loses mass, only delays it.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def one(g: Array, e: Array):
+        v = g.astype(jnp.float32) + e
+        amax = jax.lax.pmax(jnp.max(jnp.abs(v)), axis_name)
+        scale = jnp.maximum(amax / qmax, 1e-30)
+        q = jnp.clip(jnp.round(v / scale), -qmax, qmax)
+        deq = q * scale
+        new_e = v - deq
+        out = jax.lax.psum(q.astype(jnp.int32), axis_name).astype(
+            jnp.float32) * scale / axis_size
+        return out, new_e
+
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    eflat = jax.tree_util.tree_leaves(error)
+    outs, errs = zip(*(one(g, e) for g, e in zip(flat, eflat)))
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, errs))

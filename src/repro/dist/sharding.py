@@ -1,0 +1,190 @@
+"""Mesh partition-spec assignment for params, inputs, and caches.
+
+Layout (see DESIGN.md §4): Megatron-TP over the "model" axis (q/o heads,
+FFN hidden, vocab, MoE experts) + FSDP over the "data" axis on the
+remaining large dim; the multi-pod mesh adds a leading "pod" axis that
+only ever carries batch. Every sharded dim is divisibility-checked —
+a dim the axis doesn't divide is replicated instead, so padded smoke
+configs lower on any mesh.
+
+The models never import this module: the launcher injects the activation
+constraints through `BuildPlan.constrain` (`make_constrain`).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def tp_size(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = int(mesh.shape.get("data", 1))
+    return n * int(mesh.shape.get("pod", 1))
+
+
+def batch_axes(mesh: Mesh):
+    """The mesh axes a batch dim shards over: ("pod","data") or "data"."""
+    if "pod" in mesh.shape:
+        return ("pod", "data")
+    return "data"
+
+
+def batch_dim_spec(mesh: Mesh, global_batch: int):
+    """PartitionSpec *entry* for a batch dim (None when it doesn't divide)."""
+    b = batch_axes(mesh)
+    return b if global_batch % dp_size(mesh) == 0 else None
+
+
+def named(mesh: Mesh, specs: PyTree) -> PyTree:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis_if(dim: int, axis, size: int):
+    return axis if size > 1 and dim % size == 0 else None
+
+
+# per-leaf TP rules: leaf name -> (tp_dim_from_end, fsdp_dim_from_end).
+# Dims count from the *end* so leading layer-stack dims stay replicated.
+# wq (d, Hp, hd): heads on TP, d on FSDP. wo (Hp, hd, d): heads TP, d FSDP.
+# FFN up-projections shard the hidden f on TP, d on FSDP; down-projections
+# the mirror. MoE experts shard E on TP (EP); RWKV/SSM follow the same
+# up/down pattern. wk/wv stay TP-replicated (n_kv_heads < model axis —
+# see models/attention.py "KV replication").
+_TP_RULES: Dict[str, Tuple[int, int]] = {
+    "wq": (2, 3), "wo": (3, 1),
+    "w_gate": (1, 2), "w_up": (1, 2), "w_down": (2, 1),
+    "w_r": (1, 2), "w_k": (1, 2), "w_v": (2, 1), "w_g": (1, 2),
+    "w_o": (1, 2), "w_in": (1, 2), "w_out": (1, 2),
+    "unembed": (1, 2), "cls_head": (1, 2), "vision_proj": (1, 2),
+}
+_MOE_RULES: Dict[str, Tuple[int, int]] = {
+    "w_gate": (3, 2), "w_up": (3, 2), "w_down": (3, 2),
+}
+
+
+def _leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh) -> P:
+    tp, dp = tp_size(mesh), int(mesh.shape.get("data", 1))
+    name = path[-1] if path else ""
+    ndim = len(shape)
+    spec = [None] * ndim
+    in_moe = "moe" in path
+    rules = _MOE_RULES if in_moe and name in _MOE_RULES else _TP_RULES
+    if name == "embed" and ndim >= 2:
+        # vocab rows on TP (padded to 256-multiples), d on FSDP
+        spec[-2] = _axis_if(shape[-2], "model", tp)
+        spec[-1] = _axis_if(shape[-1], "data", dp)
+        return P(*spec)
+    if name in rules and ndim >= rules[name][0]:
+        tdim, fdim = rules[name]
+        spec[-tdim] = _axis_if(shape[-tdim], "model", tp)
+        if ndim >= fdim and fdim != tdim:
+            spec[-fdim] = _axis_if(shape[-fdim], "data", dp)
+        return P(*spec)
+    # fallback: FSDP-shard the last dim of anything big, replicate the rest
+    if ndim >= 1 and shape[-1] >= 1024:
+        spec[-1] = _axis_if(shape[-1], "data", dp)
+    return P(*spec)
+
+
+def _walk_specs(tree, mesh, path=()):
+    if isinstance(tree, dict):
+        return {k: _walk_specs(v, mesh, path + (k,)) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_walk_specs(v, mesh, path) for v in tree)
+    return _leaf_spec(path, tuple(tree.shape), mesh)
+
+
+def param_specs(params_shape: PyTree, mesh: Mesh) -> PyTree:
+    """Megatron-TP + FSDP PartitionSpecs for a param pytree (by leaf name,
+    divisibility-checked; layer-stack leading dims replicated)."""
+    return _walk_specs(params_shape, mesh)
+
+
+def input_batch_specs(specs: PyTree, mesh: Mesh,
+                      global_batch: int) -> PyTree:
+    """Shard every input's leading batch dim over the batch axes."""
+    b = batch_dim_spec(mesh, global_batch)
+
+    def one(s):
+        if s.ndim == 0:
+            return P()
+        return P(*((b,) + (None,) * (s.ndim - 1)))
+
+    return jax.tree_util.tree_map(one, specs)
+
+
+def cache_specs(cache_shape: PyTree, mesh: Mesh, global_batch: int) -> PyTree:
+    """Decode/prefill cache specs: the batch dim (located by size — caches
+    carry leading layer-stack dims) shards over the batch axes; the head
+    dim shards over "model" when the kv-head count itself doesn't divide
+    (RoPE uses adjacent pairs precisely so head_dim can split — see
+    models/common.py)."""
+    b = batch_dim_spec(mesh, global_batch)
+    tp = tp_size(mesh)
+
+    def one(s):
+        spec = [None] * s.ndim
+        for i, d in enumerate(s.shape):
+            if d == global_batch and b is not None:
+                spec[i] = b
+                break
+        if s.ndim >= 2:
+            # (..., KV, hd) tail: prefer KV on model, else split head_dim
+            kv, hd = s.shape[-2], s.shape[-1]
+            if kv % tp == 0 and tp > 1 and spec[-2] is None:
+                spec[-2] = "model"
+            elif hd % tp == 0 and tp > 1 and hd >= 2 * tp:
+                spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, cache_shape)
+
+
+def make_constrain(mesh: Mesh, global_batch: int, *, seq_shard: bool = False,
+                   block_gather: bool = False, ffn_shard: bool = False):
+    """Activation-sharding callback for `BuildPlan.constrain`.
+
+    kinds: "residual" (B,T,d) — batch over data, seq over model under SP;
+    "block_in" — the Megatron-SP gather point entering a block (seq
+    replicated unless block_gather keeps it sharded); "logits" (B,T,V) —
+    vocab over model; "ffn_hidden" (B,T,f) — hidden over model when
+    ffn_shard; "kv_cache" — cache pytree via `cache_specs`.
+    """
+    b = batch_dim_spec(mesh, global_batch)
+    tp = tp_size(mesh)
+
+    def cst(x, spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def constrain(x, kind: str):
+        if kind == "kv_cache":
+            return jax.tree_util.tree_map(
+                cst, x, cache_specs(jax.eval_shape(lambda: x), mesh,
+                                    global_batch))
+        if kind == "residual":
+            seq = "model" if seq_shard and x.shape[1] % tp == 0 else None
+            return cst(x, P(b, seq, None))
+        if kind == "block_in":
+            if seq_shard and not block_gather:
+                return cst(x, P(b, None, None))     # SP gather
+            return x
+        if kind == "logits":
+            return cst(x, P(b, None, _axis_if(x.shape[-1], "model", tp)))
+        if kind == "ffn_hidden":
+            if ffn_shard:
+                return cst(x, P(b, None, _axis_if(x.shape[-1], "model", tp)))
+            return x
+        return x
+
+    return constrain

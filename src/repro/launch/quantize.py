@@ -38,6 +38,13 @@ def main():
                     choices=["comq", "comq_blocked", "rtn", "gptq"])
     ap.add_argument("--calib-batch", type=int, default=8)
     ap.add_argument("--calib-seq", type=int, default=128)
+    ap.add_argument("--propagation", default="staged",
+                    choices=["staged", "legacy"],
+                    help="staged = one forward per layer (default); "
+                         "legacy = two-forward A/B schedule")
+    ap.add_argument("--shard-data", action="store_true",
+                    help="shard the calibration batch over all local "
+                         "devices (repro.dist: one Gram psum per tap)")
     ap.add_argument("--out-dir", default="/tmp/repro_quant")
     args = ap.parse_args()
 
@@ -55,9 +62,14 @@ def main():
 
     spec = QuantSpec(bits=args.bits, granularity=args.granularity,
                      lam=args.lam, sweeps=args.sweeps, order=args.order)
+    mesh = None
+    if args.shard_data:
+        from repro.dist import data_mesh
+        mesh = data_mesh()
     t0 = time.time()
     qparams, report = quantize_model(params, cfg, plan, tokens, spec,
-                                     method=args.method, vision_embeds=ve)
+                                     method=args.method, vision_embeds=ve,
+                                     propagation=args.propagation, mesh=mesh)
     dt = time.time() - t0
 
     # quantized checkpoint (packed int4 codes when bits==4)
@@ -79,6 +91,8 @@ def main():
                       jax.tree_util.tree_leaves(params))
     print(json.dumps({
         "arch": cfg.name, "method": args.method, "bits": args.bits,
+        "propagation": args.propagation,
+        "data_shards": 1 if mesh is None else int(mesh.shape["data"]),
         "order": args.order, "granularity": args.granularity,
         "layers_quantized": len(report.layers),
         "comq_vs_rtn_error_improvement": round(report.total_improvement(), 4),

@@ -22,6 +22,7 @@ Key design points (see DESIGN.md §4):
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -127,6 +128,8 @@ def pick_block_size(seq_len: int, target: int = 512) -> int:
     return max(c, 1)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_size"))
 def flash_attention(q: Array, k: Array, v: Array, head_map: Array, *,
                     causal: bool = True, window: int = 0,
                     block_size: int = 512) -> Array:
@@ -137,6 +140,11 @@ def flash_attention(q: Array, k: Array, v: Array, head_map: Array, *,
     list to the diagonal band. GQA: when Hp divides into KV groups the
     contraction is a grouped einsum (K/V never materialize per-q-head);
     otherwise a static gather expands K/V (hymba's 5-kv case).
+
+    Jitted at definition (static mask config): eager callers — the staged
+    calibration walk quantizes mid-forward and therefore runs un-jitted at
+    the layer level — hit the jit cache instead of retracing the pair scan
+    per call; jitted callers inline it as before.
     """
     B, T, H, hd = q.shape
     KV = k.shape[2]

@@ -19,9 +19,14 @@ def init_mlp(key: Array, cfg, stack=()) -> dict:
             "w_down": dense_init(ks[2], (*stack, f, d))}
 
 
-def apply_mlp(p: dict, x: Array, cfg, taps=None, constrain=None) -> Array:
+def apply_mlp(p: dict, x: Array, cfg, taps=None, constrain=None,
+              quantize_cb=None) -> Array:
     cd = x.dtype
     act = act_fn(cfg.act)
+    if taps is not None:
+        taps["mlp_in"] = x        # feeds w_gate / w_up
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("mlp_in")}
     if "w_gate" in p:
         g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(cd))
         u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(cd))
@@ -31,6 +36,7 @@ def apply_mlp(p: dict, x: Array, cfg, taps=None, constrain=None) -> Array:
     if constrain is not None:
         h = constrain(h, "ffn_hidden")
     if taps is not None:
-        taps["mlp_in"] = x        # feeds w_gate / w_up
         taps["down_in"] = h       # feeds w_down
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("down_in")}
     return jnp.einsum("btf,fd->btd", h, p["w_down"].astype(cd))

@@ -42,7 +42,8 @@ def _route(logits: Array, n_real: int, top_k: int):
     return w, ids
 
 
-def _dispatch_chunk(x: Array, p: dict, cfg, n_real: int, capacity: int) -> Tuple[Array, Array]:
+def _dispatch_chunk(x: Array, p: dict, cfg, n_real: int, capacity: int,
+                    taps=None, quantize_cb=None) -> Tuple[Array, Array]:
     """x: (N, d) one token chunk -> (y (N, d), aux_loss scalar)."""
     cd = x.dtype
     N, d = x.shape
@@ -66,6 +67,10 @@ def _dispatch_chunk(x: Array, p: dict, cfg, n_real: int, capacity: int) -> Tuple
     disp = disp.reshape(N, k, e_pad, capacity)
 
     xb = jnp.einsum("nkec,nd->ecd", disp, x)                   # (E, C, d)
+    if taps is not None:
+        taps["expert_in"] = xb          # (E, C, d): feeds w_gate/w_up
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("expert_in")}
     act = act_fn(cfg.act)
     if "w_gate" in p:
         g = jnp.einsum("ecd,edf->ecf", xb, p["w_gate"].astype(cd))
@@ -73,6 +78,10 @@ def _dispatch_chunk(x: Array, p: dict, cfg, n_real: int, capacity: int) -> Tuple
         h = act(g) * u
     else:
         h = act(jnp.einsum("ecd,edf->ecf", xb, p["w_up"].astype(cd)))
+    if taps is not None:
+        taps["expert_down_in"] = h      # (E, C, f): feeds w_down
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("expert_down_in")}
     yb = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cd))  # (E, C, d)
 
     comb = disp * weights.astype(cd)[:, :, None, None]
@@ -82,11 +91,12 @@ def _dispatch_chunk(x: Array, p: dict, cfg, n_real: int, capacity: int) -> Tuple
     me = jnp.mean(jax.nn.softmax(logits, -1), axis=0)          # (E,)
     ce = jnp.mean(onehot.sum(1).astype(jnp.float32), axis=0)
     aux = e_pad * jnp.sum(me * ce)
-    return y, aux, (xb, h)
+    return y, aux
 
 
 def apply_moe(p: dict, x: Array, cfg, n_experts_padded: int,
-              token_chunk: int = 4096, taps=None) -> Tuple[Array, Array]:
+              token_chunk: int = 4096, taps=None,
+              quantize_cb=None) -> Tuple[Array, Array]:
     """x: (B, T, d) -> (y, aux_loss). Token axis chunked with lax.scan."""
     B, T, d = x.shape
     n_real = cfg.moe.n_experts
@@ -100,18 +110,18 @@ def apply_moe(p: dict, x: Array, cfg, n_experts_padded: int,
                           / max(cfg.moe.n_experts, 1)))
 
     if taps is not None:
-        # calibration path: single pass, keep the routed expert buffers
-        y, a, (xb, h) = _dispatch_chunk(flat, p, cfg, n_real,
-                                        max(8, int(N * cfg.moe.top_k *
-                                                   cfg.moe.capacity_factor /
-                                                   max(cfg.moe.n_experts, 1))))
+        # calibration path: single pass over the routed expert buffers; taps
+        # (and the staged quantize_cb swaps) happen inside _dispatch_chunk
         taps["router_in"] = x
-        taps["expert_in"] = xb          # (E, C, d): feeds w_gate/w_up
-        taps["expert_down_in"] = h      # (E, C, f): feeds w_down
+        y, a = _dispatch_chunk(flat, p, cfg, n_real,
+                               max(8, int(N * cfg.moe.top_k *
+                                          cfg.moe.capacity_factor /
+                                          max(cfg.moe.n_experts, 1))),
+                               taps=taps, quantize_cb=quantize_cb)
         return y.reshape(B, T, d), a
 
     def step(aux, xc):
-        y, a, _ = _dispatch_chunk(xc, p, cfg, n_real, capacity)
+        y, a = _dispatch_chunk(xc, p, cfg, n_real, capacity)
         return aux + a, y
 
     # remat each chunk: the (chunk, k, E, C) dispatch one-hots would

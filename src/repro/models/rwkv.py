@@ -12,6 +12,7 @@ of the CUDA wkv kernel (DESIGN.md §3).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -116,8 +117,34 @@ def _wkv_chunk(r: Array, k: Array, v: Array, logw: Array, u: Array,
     return out, s_end
 
 
-def apply_time_mix(p: dict, x: Array, cfg, state: RWKVState, taps=None
-                   ) -> Tuple[Array, Array, Array]:
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _wkv_scan(r: Array, k: Array, v: Array, logw: Array, u: Array,
+              s0: Array, *, chunk: int):
+    """Chunked wkv recurrence. r/k/v/logw: (B, T, H, hd) f32. Returns
+    (out (B, T, H·hd), s_end). Jitted at definition so eager callers (the
+    staged calibration walk runs layers un-jitted) hit the cache instead of
+    retracing the chunk scan per call."""
+    B, T, H, hd = r.shape
+    n_chunks = T // chunk
+
+    def step(s, args):
+        rc, kc, vc, wc = args
+        out, s_new = _wkv_chunk(rc, kc, vc, wc, u, s)
+        return s_new, out
+
+    if T > 1:   # remat chunks (don't stack intra-chunk decay matrices)
+        step = jax.checkpoint(step)
+
+    def chunked(a):
+        return a.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    s_fin, outs = jax.lax.scan(step, s0, (chunked(r), chunked(k),
+                                          chunked(v), chunked(logw)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, T, H * hd), s_fin
+
+
+def apply_time_mix(p: dict, x: Array, cfg, state: RWKVState, taps=None,
+                   quantize_cb=None) -> Tuple[Array, Array, Array]:
     """x: (B, T, d) -> (out, new_x_prev, new_s)."""
     d, H, hd = _dims(cfg)
     B, T, _ = x.shape
@@ -128,6 +155,9 @@ def apply_time_mix(p: dict, x: Array, cfg, state: RWKVState, taps=None
     if taps is not None:
         taps["tm_r_in"], taps["tm_k_in"] = xr, xk
         taps["tm_v_in"], taps["tm_g_in"] = xv, xg
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("tm_r_in"), **quantize_cb("tm_k_in"),
+                 **quantize_cb("tm_v_in"), **quantize_cb("tm_g_in")}
     r = jnp.einsum("btd,de->bte", xr, p["w_r"].astype(cd))
     k = jnp.einsum("btd,de->bte", xk, p["w_k"].astype(cd))
     v = jnp.einsum("btd,de->bte", xv, p["w_v"].astype(cd))
@@ -148,23 +178,8 @@ def apply_time_mix(p: dict, x: Array, cfg, state: RWKVState, taps=None
     u = p["u_bonus"].reshape(H, hd).astype(jnp.float32)
 
     C = WKV_CHUNK if T % WKV_CHUNK == 0 and T >= WKV_CHUNK else 1
-    n_chunks = T // C
-
-    def step(s, args):
-        rc, kc, vc, wc = args
-        out, s_new = _wkv_chunk(rc, kc, vc, wc, u, s)
-        return s_new, out
-
-    if T > 1:   # remat chunks (don't stack intra-chunk decay matrices)
-        step = jax.checkpoint(step)
-
-    def chunked(a):
-        return a.reshape(B, n_chunks, C, H, hd).transpose(1, 0, 2, 3, 4)
-
-    s_fin, outs = jax.lax.scan(step, state.s.astype(jnp.float32),
-                               (chunked(r), chunked(k), chunked(v),
-                                chunked(logw)))
-    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, T, d)
+    out, s_fin = _wkv_scan(r, k, v, logw, u, state.s.astype(jnp.float32),
+                           chunk=C)
 
     # per-head group norm, gate, out-projection
     oh = out.reshape(B, T, H, hd)
@@ -175,22 +190,29 @@ def apply_time_mix(p: dict, x: Array, cfg, state: RWKVState, taps=None
     out = (out.astype(cd) * g)
     if taps is not None:
         taps["tm_o_in"] = out
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("tm_o_in")}
     out = jnp.einsum("btd,de->bte", out, p["w_o"].astype(cd))
     new_x_prev = x[:, -1:].astype(state.x_tm.dtype)
     return out, new_x_prev, s_fin.astype(state.s.dtype)
 
 
-def apply_channel_mix(p: dict, x: Array, cfg, x_prev: Array, taps=None
-                      ) -> Tuple[Array, Array]:
+def apply_channel_mix(p: dict, x: Array, cfg, x_prev: Array, taps=None,
+                      quantize_cb=None) -> Tuple[Array, Array]:
     cd = x.dtype
     xx = _token_shift(x, x_prev) - x
     xk = x + xx * p["mu_k"].astype(cd)
     xr = x + xx * p["mu_r"].astype(cd)
+    if taps is not None:
+        taps["cm_k_in"], taps["cm_r_in"] = xk, xr
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("cm_k_in"), **quantize_cb("cm_r_in")}
     k = jnp.einsum("btd,df->btf", xk, p["w_k"].astype(cd))
     ksq = jnp.square(jax.nn.relu(k))
     if taps is not None:
-        taps["cm_k_in"], taps["cm_r_in"] = xk, xr
         taps["cm_v_in"] = ksq
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("cm_v_in")}
     v = jnp.einsum("btf,fd->btd", ksq, p["w_v"].astype(cd))
     r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["w_r"].astype(cd)))
     return r * v, x[:, -1:].astype(x_prev.dtype)

@@ -8,6 +8,7 @@ single-step recurrence.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import NamedTuple, Tuple
 
@@ -92,14 +93,40 @@ def _scan_chunk(a: Array, b: Array, h0: Array):
     return h, h[:, -1]
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "chunk"))
+def _ssm_recurrence(sel: dict, xi: Array, h0: Array, *, cfg, chunk: int):
+    """Chunked selective recurrence. xi: (B, T, di) post-conv/silu. Returns
+    (y (B, T, di), h_end). Jitted at definition so eager callers (the
+    staged calibration walk runs layers un-jitted) hit the cache instead of
+    retracing the chunk scan per call."""
+    B, T, di = xi.shape
+    n_chunks = T // chunk
+
+    def step(h, args):
+        xi_c, = args
+        a_t, b_t, c_in = _selective_terms(sel, xi_c, cfg)
+        h_seq, h_new = _scan_chunk(a_t, b_t, h)
+        y = jnp.einsum("btdn,btn->btd", h_seq, c_in)                 # (B,C,di)
+        return h_new, y
+
+    if T > 1:   # remat chunks: don't stack (B,C,di,N) terms across chunks
+        step = jax.checkpoint(step)
+    xi_chunks = xi.reshape(B, n_chunks, chunk, di).transpose(1, 0, 2, 3)
+    h_final, ys = jax.lax.scan(step, h0, (xi_chunks,))
+    return ys.transpose(1, 0, 2, 3).reshape(B, T, di), h_final
+
+
 def apply_ssm(p: dict, x: Array, cfg, state: SSMState,
-              chunk: int = 1024, taps=None) -> Tuple[Array, SSMState]:
+              chunk: int = 1024, taps=None,
+              quantize_cb=None) -> Tuple[Array, SSMState]:
     """x: (B, T, d) -> (y (B, T, d), new_state)."""
     d, di, n, _, _ = _dims(cfg)
     B, T, _ = x.shape
     cd = x.dtype
     if taps is not None:
         taps["ssm_in"] = x
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("ssm_in")}
     xz = jnp.einsum("btd,de->bte", x, p["w_in"].astype(cd))
     xi, z = jnp.split(xz, 2, axis=-1)
     xi, conv_state = _causal_conv(p, xi, state.conv)
@@ -108,24 +135,15 @@ def apply_ssm(p: dict, x: Array, cfg, state: SSMState,
     C = min(chunk, T)
     while T % C:
         C //= 2
-    n_chunks = T // C
-
-    def step(h, args):
-        xi_c, = args
-        a_t, b_t, c_in = _selective_terms(p, xi_c, cfg)
-        h_seq, h_new = _scan_chunk(a_t, b_t, h)
-        y = jnp.einsum("btdn,btn->btd", h_seq, c_in)                 # (B,C,di)
-        return h_new, y
-
-    if T > 1:   # remat chunks: don't stack (B,C,di,N) terms across chunks
-        step = jax.checkpoint(step)
-    xi_chunks = xi.reshape(B, n_chunks, C, di).transpose(1, 0, 2, 3)
-    h_final, ys = jax.lax.scan(step, state.h.astype(jnp.float32), (xi_chunks,))
-    y = ys.transpose(1, 0, 2, 3).reshape(B, T, di)
+    sel = {k: p[k] for k in ("w_xproj", "w_dt", "b_dt", "a_log")}
+    y, h_final = _ssm_recurrence(sel, xi, state.h.astype(jnp.float32),
+                                 cfg=cfg, chunk=C)
     y = y + p["d_skip"].astype(jnp.float32) * xi.astype(jnp.float32)
     y = (y.astype(cd) * jax.nn.silu(z))
     if taps is not None:
         taps["ssm_out_in"] = y
+        if quantize_cb is not None:
+            p = {**p, **quantize_cb("ssm_out_in")}
     out = jnp.einsum("bte,ed->btd", y, p["w_out"].astype(cd))
     return out, SSMState(h=h_final.astype(state.h.dtype), conv=conv_state)
 

@@ -109,10 +109,16 @@ def init_cross_layer(key: Array, cfg, plan: BuildPlan, stack=()) -> dict:
 # layer application (full-sequence: train / prefill)
 # ---------------------------------------------------------------------------
 
-def _self_attention_full(p, x, cfg, plan, make_cache: bool, taps=None):
+def _self_attention_full(p, x, cfg, plan, make_cache: bool, taps=None,
+                         quantize_cb=None):
     hp = plan.heads_padded(cfg)
     hmap = head_to_kv_map(cfg.n_heads, hp, cfg.n_kv_heads)
-    q, k, v = qkv_project(p["attn"], x)
+    ap = p["attn"]
+    if taps is not None:
+        taps["attn_in"] = x                   # feeds wq / wk / wv
+        if quantize_cb is not None:
+            ap = {**ap, **quantize_cb("attn_in")}
+    q, k, v = qkv_project(ap, x)
     if cfg.causal:
         B, T = x.shape[:2]
         pos = jnp.broadcast_to(jnp.arange(T), (B, T))
@@ -122,8 +128,9 @@ def _self_attention_full(p, x, cfg, plan, make_cache: bool, taps=None):
                         window=cfg.sliding_window,
                         block_size=plan.attn_block_size)
     if taps is not None:
-        taps["attn_in"] = x                   # feeds wq / wk / wv
         taps["wo_in"] = o.reshape(*o.shape[:2], -1)   # feeds wo (Hp*hd, d)
+        if quantize_cb is not None:
+            ap = {**ap, **quantize_cb("wo_in")}
     cache = None
     if make_cache:
         B, T = x.shape[:2]
@@ -138,63 +145,83 @@ def _self_attention_full(p, x, cfg, plan, make_cache: bool, taps=None):
                               quantized=plan.cache_quant)
         cache = cache_prefill(cache, k, v)
         cache = plan.constrain(cache, "kv_cache")
-    return attn_mod.out_project(p["attn"], o), cache
+    return attn_mod.out_project(ap, o), cache
 
 
 def layer_full(p: dict, x: Array, cfg, plan: BuildPlan, make_cache: bool,
-               rwkv_state=None, ssm_state=None, taps=None):
-    """One layer over a full sequence. Returns (x, cache_out, aux, states)."""
+               rwkv_state=None, ssm_state=None, taps=None, quantize_cb=None):
+    """One layer over a full sequence. Returns (x, cache_out, aux, states).
+
+    `quantize_cb` (calibration only, requires `taps`): called once per
+    activation tap *right after the tap is recorded and before the weights
+    it feeds are applied*; returns replacement (dequantized-quantized)
+    leaves for the owning module, so the rest of this forward — including
+    every downstream tap — is computed with the already-quantized upstream
+    sub-blocks. This is the staged one-forward-per-layer calibration walk
+    (core/pipeline.py, DESIGN.md §4.1).
+    """
     aux = jnp.float32(0.0)
     x = plan.constrain(x, "block_in")   # Megatron-SP gather (no-op w/o SP)
     if cfg.attn_free:
         h, new_tm, new_s = rwkv_mod.apply_time_mix(
-            p["tm"], apply_norm(p["ln1"], x, cfg), cfg, rwkv_state, taps=taps)
+            p["tm"], apply_norm(p["ln1"], x, cfg), cfg, rwkv_state, taps=taps,
+            quantize_cb=quantize_cb)
         x = x + h
         h, new_cm = rwkv_mod.apply_channel_mix(
             p["cm"], apply_norm(p["ln2"], x, cfg), cfg, rwkv_state.x_cm,
-            taps=taps)
+            taps=taps, quantize_cb=quantize_cb)
         x = x + h
         new_state = rwkv_mod.RWKVState(new_tm, new_cm, new_s)
         return x, None, aux, new_state
 
     xn = apply_norm(p["ln1"], x, cfg)
-    a_out, cache = _self_attention_full(p, xn, cfg, plan, make_cache, taps)
+    a_out, cache = _self_attention_full(p, xn, cfg, plan, make_cache, taps,
+                                        quantize_cb)
     new_ssm = None
     if cfg.parallel_ssm_heads:
         s_out, new_ssm = ssm_mod.apply_ssm(p["ssm"], xn, cfg, ssm_state,
-                                           taps=taps)
+                                           taps=taps, quantize_cb=quantize_cb)
         a_out = 0.5 * (a_out + s_out)
     x = x + a_out
     xn = apply_norm(p["ln2"], x, cfg)
     if cfg.moe is not None:
         m_out, aux = moe_mod.apply_moe(p["moe"], xn, cfg,
                                        plan.experts_padded(cfg),
-                                       plan.moe_token_chunk, taps=taps)
+                                       plan.moe_token_chunk, taps=taps,
+                                       quantize_cb=quantize_cb)
     else:
         m_out = mlp_mod.apply_mlp(p["mlp"], xn, cfg, taps=taps,
-                                  constrain=plan.constrain)
+                                  constrain=plan.constrain,
+                                  quantize_cb=quantize_cb)
     x = x + m_out
     return x, cache, aux, new_ssm
 
 
 def cross_layer_full(p: dict, x: Array, cfg, plan: BuildPlan,
-                     vision_kv: Tuple[Array, Array], taps=None) -> Array:
+                     vision_kv: Tuple[Array, Array], taps=None,
+                     quantize_cb=None) -> Array:
     hp = plan.heads_padded(cfg)
     hmap = head_to_kv_map(cfg.n_heads, hp, cfg.n_kv_heads)
     xn = apply_norm(p["ln1"], x, cfg)
     cd = x.dtype
-    q = jnp.einsum("btd,dhk->bthk", xn, p["xattn"]["wq"].astype(cd))
+    xp = p["xattn"]
+    if taps is not None:
+        taps["xattn_q_in"] = xn
+        if quantize_cb is not None:
+            xp = {**xp, **quantize_cb("xattn_q_in")}
+    q = jnp.einsum("btd,dhk->bthk", xn, xp["wq"].astype(cd))
     k, v = vision_kv
     o = attn_mod._dense_attention(q, k.astype(cd), v.astype(cd), hmap,
                                   causal=False, window=0)
     if taps is not None:
-        taps["xattn_q_in"] = xn
         taps["xattn_wo_in"] = o.reshape(*o.shape[:2], -1)
+        if quantize_cb is not None:
+            xp = {**xp, **quantize_cb("xattn_wo_in")}
     x = x + jnp.tanh(p["gate_attn"]).astype(cd) * attn_mod.out_project(
-        p["xattn"], o)
+        xp, o)
     xn = apply_norm(p["ln2"], x, cfg)
     x = x + jnp.tanh(p["gate_mlp"]).astype(cd) * mlp_mod.apply_mlp(
-        p["mlp"], xn, cfg, taps=taps)
+        p["mlp"], xn, cfg, taps=taps, quantize_cb=quantize_cb)
     return x
 
 

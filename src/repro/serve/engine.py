@@ -52,13 +52,15 @@ class Engine:
             logits, cache = self._prefill(self.params, tokens, vision_embeds)
         else:
             logits, cache = self._prefill(self.params, tokens)
-        out = np.zeros((B, max_new_tokens), np.int32)
+        # sample into a device-side buffer: the decode loop only *dispatches*
+        # (no per-token host sync); tokens transfer once at the end
+        out = jnp.zeros((B, max_new_tokens), jnp.int32)
         pos = T
         for i in range(max_new_tokens):
             self.rng, k = jax.random.split(self.rng)
             nxt = sample(logits, k, temperature=temperature)
-            out[:, i] = np.asarray(nxt)
+            out = out.at[:, i].set(nxt)
             logits, cache = self._decode(self.params, cache, nxt[:, None],
                                          jnp.int32(pos))
             pos += 1
-        return out
+        return np.asarray(jax.device_get(out))

@@ -158,6 +158,81 @@ def test_layer_report_seconds_reset_per_leaf():
     assert total <= wall + 1e-6, (total, wall)
 
 
+def test_staged_runs_one_layer_forward_per_layer(monkeypatch):
+    """The default (staged) schedule must evaluate layer_full exactly once
+    per layer — the tap walk quantizes mid-forward and propagates in the
+    same evaluation (the legacy schedule needed two)."""
+    from repro.models import transformer as tfm
+    calls = {"n": 0}
+    orig = tfm.layer_full
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    monkeypatch.setattr(tfm, "layer_full", counting)
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    quantize_model(params, cfg, PLAN, tokens, SPEC)
+    assert calls["n"] == cfg.n_layers, calls["n"]
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "granite-moe-3b-a800m"])
+def test_staged_err_not_worse_than_legacy(arch):
+    """Staged propagation calibrates intra-layer taps on the *quantized*
+    upstream sub-blocks, so per-leaf reconstruction error must not degrade
+    vs the legacy two-forward schedule (and usually improves). MoE gets a
+    wider band: the router re-routes on the quantized stream, so expert
+    buffers differ structurally between schedules, not just numerically."""
+    cfg = get_smoke_config(arch)
+    moe = cfg.moe is not None
+    leaf_tol, total_tol = (1.05, 1.01) if moe else (1.02, 1.001)
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (4, 64), 0, cfg.vocab_size)
+    _, r_staged = quantize_model(params, cfg, PLAN, tokens, SPEC)
+    _, r_legacy = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                                 propagation="legacy")
+    assert len(r_staged.layers) == len(r_legacy.layers) > 0
+    for a, b in zip(r_staged.layers, r_legacy.layers):
+        assert a.name == b.name and a.layer == b.layer
+        # per-leaf: within bf16 propagation noise of the legacy error
+        assert a.err_after <= b.err_after * leaf_tol, (a.name, a.err_after,
+                                                       b.err_after)
+    total_s = sum(r.err_after for r in r_staged.layers)
+    total_l = sum(r.err_after for r in r_legacy.layers)
+    assert total_s <= total_l * total_tol, (total_s, total_l)
+
+
+def test_staged_vlm_pipeline():
+    """Staged walk through the VLM group structure (self layers via
+    layer_full callbacks, cross layers via cross_layer_full): same leaf
+    inventory as legacy, COMQ still beats the RTN grid init."""
+    cfg = get_smoke_config("llama-3.2-vision-90b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    ve = jax.random.normal(KEY, (2, cfg.cross_attn.n_vision_tokens,
+                                 cfg.cross_attn.vision_dim), jnp.bfloat16)
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=1,
+                     order="greedy")
+    qs, rs = quantize_model(params, cfg, PLAN, tokens, spec,
+                            vision_embeds=ve)
+    _, rl = quantize_model(params, cfg, PLAN, tokens, spec,
+                           vision_embeds=ve, propagation="legacy")
+    assert [r.name for r in rs.layers] == [r.name for r in rl.layers]
+    assert rs.total_improvement() > 0.05
+    assert any(r.name.startswith("cross.") for r in rs.layers)
+    assert len(qs["__qlayers__"]) > 0
+
+
+def test_staged_rejects_unknown_propagation():
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    with pytest.raises(ValueError):
+        quantize_model(params, cfg, PLAN, tokens, SPEC, propagation="eager")
+
+
 def test_column_independence_enables_sharded_solve():
     """Per-channel COMQ on a column subset equals those columns of the full
     solve — the property that lets the launcher shard columns across the
