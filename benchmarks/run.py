@@ -25,6 +25,7 @@ MODULES = [
     ("t7_iterations", "benchmarks.ablation_iterations"),
     ("t8_fig3_order", "benchmarks.ablation_order"),
     ("t9_runtime", "benchmarks.runtime_compare"),
+    ("solver_shard", "benchmarks.shard_compare"),
     ("t10_lambda", "benchmarks.ablation_lambda"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline_report"),
@@ -56,8 +57,17 @@ def main() -> None:
             print(f"{key},ERROR,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
     if args.json:
+        # merge into an existing BENCH_*.json: partial runs (--only) must
+        # not clobber rows tracked by other tables/jobs
+        merged = {}
+        try:
+            with open(args.json) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            pass
+        merged.update(collected)
         with open(args.json, "w") as f:
-            json.dump(collected, f, indent=1, sort_keys=True)
+            json.dump(merged, f, indent=1, sort_keys=True)
             f.write("\n")
     if failures:
         sys.exit(1)

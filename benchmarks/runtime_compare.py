@@ -18,7 +18,24 @@ committed as BENCH_pipeline.json:
   single-device Gram; `derived` = single/sharded. On one device this
   tracks the pure shard_map dispatch overhead the data-parallel path
   pays; with real shards the local XᵀX is 1/|data| of the FLOPs.
+
+And the column-sharded solve rows from PR 3 on (DESIGN.md §4.3),
+produced by `colsharded_rows()` on a *forced-8-device* host platform
+(subprocess, (2, 4) mesh — the CI multidevice job writes them to
+BENCH_solver.json via benchmarks/shard_compare.py):
+
+* solver/colsharded_vs_replicated — wall time of the column-sharded
+  trailing-update solve (W's output columns over a 4-way "model" axis,
+  H replicated, zero collectives) vs the replicated solve; `derived` =
+  replicated/sharded. On forced host devices all shards share the same
+  cores, so this tracks shard_map dispatch + per-shard-width overhead,
+  not real-accelerator speedup.
 """
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 
@@ -126,4 +143,72 @@ def run():
     _, us_sg = timed(lambda: single_j(tap), repeats=3)
     rows.append(("pipeline/sharded_gram_vs_single", round(us_sh, 1),
                  round(us_sg / us_sh, 3)))
+    return rows
+
+
+_COLSHARD_BENCH = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp
+from repro.core import QuantSpec, comq_quantize_blocked, gram
+from repro.dist import calib_mesh, sharded_solve
+
+mesh = calib_mesh(model=4)                      # (2, 4)
+spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=3,
+                 order="cyclic")
+out = {}
+for (m, n) in ((256, 768), (512, 1536)):        # fused [wq|wk|wv] widths
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m))
+    h = gram(jax.random.normal(k1, (2 * m, m)))
+    w = jax.random.normal(k2, (m, n)) * 0.05
+
+
+    def rep():
+        return comq_quantize_blocked(h, w, spec, block=128).q
+
+
+    def sh():
+        return sharded_solve(mesh, h, w, spec, "comq_blocked", block=128)[0]
+
+
+    for f in (rep, sh):                          # compile warmup
+        jax.block_until_ready(f())
+    times = {}
+    for name, f in (("rep", rep), ("sh", sh)):
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(f())
+        times[name] = (time.perf_counter() - t0) / 3 * 1e6
+    out[f"{m}x{n}"] = times
+print("BENCHJSON " + json.dumps(out))
+"""
+
+
+def colsharded_rows():
+    """solver/colsharded_vs_replicated rows, measured on a forced-8-device
+    (2, 4) mesh in a subprocess (conftest forbids in-process XLA_FLAGS; the
+    parent may be single-device). Emits ERROR-free empty rows on failure so
+    a bench run never hard-fails on an exotic host."""
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH", "")) \
+        + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    try:
+        proc = subprocess.run([sys.executable, "-c", _COLSHARD_BENCH],
+                              env=env, capture_output=True, text=True,
+                              timeout=600)
+        line = next(l for l in proc.stdout.splitlines()
+                    if l.startswith("BENCHJSON "))
+        data = json.loads(line[len("BENCHJSON "):])
+    except Exception as e:                         # noqa: BLE001
+        print(f"# colsharded bench skipped: {type(e).__name__}: {e}",
+              flush=True)
+        return []
+    rows = []
+    for shape, t in sorted(data.items()):
+        rows.append((f"solver/colsharded_vs_replicated_{shape}",
+                     round(t["sh"], 1), round(t["rep"] / t["sh"], 3)))
     return rows

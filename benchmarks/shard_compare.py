@@ -1,0 +1,16 @@
+"""Column-sharded-solve BENCH rows only (DESIGN.md §4.3).
+
+    PYTHONPATH=src python -m benchmarks.run --only solver_shard \
+        --json BENCH_solver.json
+
+A thin entry so the CI multidevice-smoke job can refresh the
+solver/colsharded_vs_replicated rows into BENCH_solver.json without
+re-running the whole t9 table; the measurement itself lives in
+benchmarks/runtime_compare.py::colsharded_rows (forced-8-device (2, 4)
+mesh in a subprocess).
+"""
+from benchmarks.runtime_compare import colsharded_rows
+
+
+def run():
+    return colsharded_rows()

@@ -143,12 +143,27 @@ class CheckpointManager:
         with open(os.path.join(path, "treedef.json")) as f:
             meta = json.load(f)
 
-        keys = list(_flatten_with_paths(like).keys())
+        flat_like = _flatten_with_paths(like)
+        keys = list(flat_like.keys())
         missing = [k for k in keys if k not in data.files]
-        if missing:
-            raise KeyError(f"checkpoint missing {len(missing)} leaves, e.g. "
-                           f"{missing[:3]}")
-        leaves = [data[k] for k in keys]
+        # state grown after the checkpoint was written is backfilled from
+        # the freshly-initialized template instead of erroring: the int8
+        # first-moment "ef" residual (zero-residual ≠ zero *bytes* — the
+        # init encoding carries the right packed codes) and the int8_ef
+        # "grad_err" carry (zeros). Anything else missing is still fatal.
+        optional = [k for k in missing
+                    if k.split("/")[-1] == "ef" or k.startswith("grad_err")]
+        hard = [k for k in missing if k not in optional]
+        if hard:
+            raise KeyError(f"checkpoint missing {len(hard)} leaves, e.g. "
+                           f"{hard[:3]}")
+        if optional:
+            import warnings
+            warnings.warn(f"checkpoint predates {len(optional)} optional "
+                          f"state leaves (e.g. {optional[:2]}); backfilling "
+                          "from the initialized template", stacklevel=2)
+        leaves = [data[k] if k in data.files else np.asarray(flat_like[k])
+                  for k in keys]
         treedef = jax.tree_util.tree_structure(like)
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:

@@ -140,6 +140,15 @@ def comq_quantize_h(h: Array, w: Array, spec: QuantSpec,
 # blocked / panel solver (the TPU-shaped schedule; shared order only)
 # ---------------------------------------------------------------------------
 
+def shared_order(h: Array, w: Array, spec: QuantSpec) -> Array:
+    """The (m,) shared visit order the blocked solver would derive for
+    (h, w). Exposed so the column-sharded solve can compute it once on the
+    replicated full weight and pass it through `perm=` — the order is the
+    only column-coupled solver quantity (DESIGN.md §4.3)."""
+    order_name = {"greedy": "greedy_shared"}.get(spec.order, spec.order)
+    return make_orders(order_name, jnp.sqrt(jnp.diag(h)),
+                       w.astype(jnp.float32))[:, 0]
+
 def panel_sweep_ref(h_bb: Array, s0: Array, qf_b: Array, delta: Array,
                     z_lo, z_hi, hdiag_b: Array):
     """Reference intra-panel sweep (the Pallas kernel's oracle)."""
@@ -283,7 +292,8 @@ _blocked_jit_donate = partial(jax.jit, static_argnames=_BLOCK_STATICS,
 
 def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
                           block: int = 256, panel_fn=None,
-                          schedule: str = "trailing") -> QuantResult:
+                          schedule: str = "trailing",
+                          perm: Optional[Array] = None) -> QuantResult:
     """Blocked COMQ: cyclic or shared-greedy order. `panel_fn` defaults to
     the pure-jnp fused panel sweep; the launcher swaps in the Pallas kernel
     (kernels/comq_panel.py::panel_fn_dq_interpret or the compiled variant).
@@ -291,6 +301,13 @@ def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
     `schedule` picks the cross-panel update strategy ("trailing" maintains
     P = H·R with rank-B updates; "refresh" recomputes it per panel — see
     DESIGN.md §3.3 for the FLOP accounting). Both produce identical codes.
+
+    `perm` optionally supplies the shared (m,) visit order. The shared
+    greedy order is the only solver quantity coupled across *columns* of W;
+    precomputing it from the full weight makes every remaining operand
+    column-offset-invariant, which is what lets the column-sharded solve
+    (repro.dist.sharded_solve, DESIGN.md §4.3) run each shard on its column
+    slice bit-identically to the replicated solve.
     """
     h = h.astype(jnp.float32)
     w = w.astype(jnp.float32)
@@ -301,9 +318,10 @@ def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
     else:
         delta, z_lo, z_hi = init_per_channel(w, spec.bits, spec.lam)
 
-    order_name = {"greedy": "greedy_shared"}.get(spec.order, spec.order)
     hdiag0 = jnp.diag(h)
-    perm = make_orders(order_name, jnp.sqrt(hdiag0), w)[:, 0]   # shared (m,)
+    if perm is None:
+        order_name = {"greedy": "greedy_shared"}.get(spec.order, spec.order)
+        perm = make_orders(order_name, jnp.sqrt(hdiag0), w)[:, 0]  # (m,)
     inv_perm = jnp.argsort(perm)
     hp = h[perm][:, perm]
     wp = w[perm]

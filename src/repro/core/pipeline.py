@@ -160,6 +160,24 @@ def solve(h: Array, w2d: Array, spec: QuantSpec, method: str = "comq",
     raise ValueError(f"unknown method {method!r}")
 
 
+def _col_shardable(spec: QuantSpec, method: str) -> bool:
+    """True when the solve can run with W's output columns sharded over the
+    "model" mesh axis bit-identically to the replicated solve.
+
+    Requires per-channel granularity (per-layer shares one δ across all
+    columns) and a solver whose per-column computation is robust to running
+    on a column *slice*: the blocked trailing-update solver (its one
+    column-coupled quantity — the shared visit order — is precomputed on
+    the full W and passed in; see comq_hessian.shared_order) and RTN
+    (elementwise). The row-at-a-time solvers (comq/gptq) are column-
+    *separable* in exact arithmetic but their per-coordinate descent
+    cascades FP-rounding differences across sweeps under a different XLA
+    fusion context, so they stay replicated."""
+    if spec.granularity != "per_channel":
+        return False
+    return method in ("comq_blocked", "rtn")
+
+
 def _fusable(spec: QuantSpec, method: str) -> bool:
     """True when leaves sharing a tap can be solved as one column-
     concatenated matrix with results identical to per-leaf solves.
@@ -210,15 +228,48 @@ def _expert_norm_sum(e2: Array) -> Array:
 
 
 def _solve_group(ws, h: Array, spec: QuantSpec, method: str,
-                 block: int = 256):
+                 block: int = 256, solve_sh=None):
     """Solve the weight leaves `ws` (all calibrated by the same Gram h).
 
     When exact (see _fusable), the leaves are solved as one column-
     concatenated [w_a|w_b|…] matrix — one solver invocation and one grid
     init per tap instead of one per leaf — then split back per leaf.
+
+    `solve_sh` (from quantize_model when the mesh has a nontrivial "model"
+    axis) runs the solve with output columns sharded over "model"
+    (dist.sharded_solve): bit-identical codes, zero solve-time collectives.
+    The sharded path mirrors the replicated fusion decision exactly — the
+    fused concatenation solves as one column-sharded matrix, per-leaf
+    solves shard per leaf — so sharded and replicated pipelines agree.
     Returns [(qtensor, err_before, err_after, seconds), ...]."""
     m = h.shape[0]
     w2ds = [_w2d(w, m) for w in ws]
+
+    if solve_sh is not None and _col_shardable(spec, method):
+        fuse = len(ws) > 1 and _fusable(spec, method)
+        t0 = time.time()
+        if fuse:
+            wcat = jnp.concatenate([w.astype(jnp.float32) for w in w2ds],
+                                   axis=1)
+            q, delta, z_lo, e2b, e2a = solve_sh(h, wcat, block=block)
+            secs = (time.time() - t0) / len(ws)
+            out, lo = [], 0
+            for w, w2d in zip(ws, w2ds):
+                hi = lo + w2d.shape[1]
+                qt = make_qtensor(q[:, lo:hi], delta[lo:hi], z_lo[lo:hi],
+                                  w.shape)
+                out.append((qt, _norm_of(e2b[lo:hi]), _norm_of(e2a[lo:hi]),
+                            secs))
+                lo = hi
+            return out
+        out = []
+        for w, w2d in zip(ws, w2ds):
+            t0 = time.time()
+            q, delta, z_lo, e2b, e2a = solve_sh(h, w2d, block=block)
+            qt = make_qtensor(q, delta, z_lo, w.shape)
+            out.append((qt, _norm_of(e2b), _norm_of(e2a),
+                        time.time() - t0))
+        return out
 
     if len(ws) > 1 and _fusable(spec, method):
         t0 = time.time()
@@ -319,7 +370,8 @@ def _gram_fns(mesh):
 
 def _quantize_layer_leaves(lp, taps, tapmap, spec: QuantSpec, method: str,
                            pending: List[tuple], layer_idx: int,
-                           gram_fn=None, batched_fn=None, prefix: str = ""):
+                           gram_fn=None, batched_fn=None, prefix: str = "",
+                           solve_sh=None):
     """Legacy-schedule body: quantize every mapped leaf of one layer from a
     pre-collected `taps` dict, grouped by activation tap (TapGramCache: one
     Gram per tap; fused solves when exact). Returns the layer params with
@@ -336,7 +388,7 @@ def _quantize_layer_leaves(lp, taps, tapmap, spec: QuantSpec, method: str,
             results = _solve_group_experts(ws, hs, spec, method)
         else:
             h = cache.gram(tapname, taps[tapname])
-            results = _solve_group(ws, h, spec, method)
+            results = _solve_group(ws, h, spec, method, solve_sh=solve_sh)
         for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
             lp_q = _set_nested(lp_q, mod, leaf, qt)
             pending.append((layer_idx, f"{prefix}{mod}.{leaf}", eb, ea, secs))
@@ -345,7 +397,7 @@ def _quantize_layer_leaves(lp, taps, tapmap, spec: QuantSpec, method: str,
 
 def _staged_cb(lp, groups, taps, spec: QuantSpec, method: str,
                pending: List[tuple], layer_idx: int, holder: dict,
-               gram_fn, batched_fn, prefix: str = ""):
+               gram_fn, batched_fn, prefix: str = "", solve_sh=None):
     """The staged-schedule `quantize_cb`: invoked by the model's tap hooks
     mid-forward, right after tap `tapname` is recorded and before the
     weights it feeds are applied. Solves the tap's leaf group, stashes the
@@ -361,7 +413,7 @@ def _staged_cb(lp, groups, taps, spec: QuantSpec, method: str,
             results = _solve_group_experts(ws, hs, spec, method)
         else:
             h = gram_fn(taps[tapname])
-            results = _solve_group(ws, h, spec, method)
+            results = _solve_group(ws, h, spec, method, solve_sh=solve_sh)
         repl = {}
         for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
             holder["lp_q"] = _set_nested(holder["lp_q"], mod, leaf, qt)
@@ -373,7 +425,7 @@ def _staged_cb(lp, groups, taps, spec: QuantSpec, method: str,
 
 def _staged_ctx(lp, tapmap, spec: QuantSpec, method: str,
                 pending: List[tuple], layer_idx: int, gram_fn, batched_fn,
-                prefix: str = ""):
+                prefix: str = "", solve_sh=None):
     """(taps, holder, cb) for one staged layer walk — shared by the
     homogeneous, VLM-self, and VLM-cross paths so the callback protocol
     has a single definition."""
@@ -381,20 +433,21 @@ def _staged_ctx(lp, tapmap, spec: QuantSpec, method: str,
     holder = {"lp_q": lp}
     cb = _staged_cb(lp, _tap_groups(lp, tapmap), taps, spec, method,
                     pending, layer_idx, holder, gram_fn, batched_fn,
-                    prefix=prefix)
+                    prefix=prefix, solve_sh=solve_sh)
     return taps, holder, cb
 
 
 def _quantize_layer_staged(lp, x, state, cfg, plan, tapmap,
                            spec: QuantSpec, method: str,
                            pending: List[tuple], layer_idx: int,
-                           gram_fn, batched_fn):
+                           gram_fn, batched_fn, solve_sh=None):
     """Staged schedule: ONE `layer_full` evaluation quantizes the layer in
     tap order *and* propagates x through the quantized sub-blocks — every
     downstream tap is exact w.r.t. the quantized upstream. Returns
     (lp_q, new_x, new_state)."""
     taps, holder, cb = _staged_ctx(lp, tapmap, spec, method, pending,
-                                   layer_idx, gram_fn, batched_fn)
+                                   layer_idx, gram_fn, batched_fn,
+                                   solve_sh=solve_sh)
     rwkv_state = state if cfg.attn_free else None
     ssm_state = state if cfg.parallel_ssm_heads else None
     y, _, _, new_state = tfm.layer_full(lp, x, cfg, plan, False,
@@ -451,7 +504,13 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
     w.r.t. quantized upstream); "legacy" keeps the two-forward schedule
     for A/B. mesh (optional, with a "data" axis) shards the calibration
     batch data-parallel: each Gram block reduces with a single psum
-    (repro.dist; DESIGN.md §4.2).
+    (repro.dist; DESIGN.md §4.2). A nontrivial "model" axis additionally
+    shards every column-shardable leaf solve (per-channel comq_blocked /
+    rtn — see _col_shardable) over the mesh columns, bit-identical to the
+    replicated solve with zero solve-time collectives (DESIGN.md §4.3);
+    other methods keep replicated solves. With a multi-device "data" axis
+    the MoE routing capacity is rounded up to it (BuildPlan.
+    moe_capacity_multiple) so expert taps always take the Gram-psum path.
 
     Returns (qparams, QuantReport). qparams has QTensor leaves; use
     `dequantize_tree` (or the quantized serving path) to run it.
@@ -463,9 +522,18 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
     report = QuantReport()
     pending: List[tuple] = []
     gram_fn, batched_fn = _gram_fns(mesh)
+    solve_sh = None
     if mesh is not None:
-        from repro.dist import shard_batch
+        from repro.dist import model_size, shard_batch, sharded_solve
         tokens = shard_batch(mesh, tokens)
+        ndata = int(mesh.shape.get("data", 1))
+        if ndata > 1 and cfg.moe is not None:
+            # align routed-expert capacity so (E, C, d) taps divide the
+            # data axis and never fall off the Gram-psum path
+            plan = plan.replace(moe_capacity_multiple=ndata)
+        if model_size(mesh) > 1 and _col_shardable(spec, method):
+            solve_sh = functools.partial(sharded_solve, mesh, spec=spec,
+                                         method=method)
     x = embed_tokens(params, cfg, plan, tokens)
     qparams = jax.tree_util.tree_map(lambda a: a, params)  # shallow copy
     tapmap = taps_for(cfg)
@@ -473,7 +541,7 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
     if cfg.family == "vlm":
         qparams = _quantize_vlm(params, cfg, plan, x, spec, method,
                                 vision_embeds, pending, propagation,
-                                gram_fn, batched_fn)
+                                gram_fn, batched_fn, solve_sh=solve_sh)
         _finalize_report(report, pending)
         report.wall_seconds = time.time() - t_start
         return qparams, report
@@ -493,7 +561,8 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
             lp = _tree_slice(params["layers"], l)
             _, taps, _ = layer_full_j(lp, x, state)
             lp_q = _quantize_layer_leaves(lp, taps, tapmap, spec, method,
-                                          pending, l, gram_fn, batched_fn)
+                                          pending, l, gram_fn, batched_fn,
+                                          solve_sh=solve_sh)
             # propagate through the *quantized* layer
             lp_deq = dequantize_tree(lp_q)
             x, _, state = layer_full_j(lp_deq, x, state)
@@ -503,14 +572,14 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
             lp = _tree_slice(params["layers"], l)
             lp_q, x, state = _quantize_layer_staged(
                 lp, x, state, cfg, plan, tapmap, spec, method, pending, l,
-                gram_fn, batched_fn)
+                gram_fn, batched_fn, solve_sh=solve_sh)
             qparams = _store_layer(qparams, l, lp_q)
 
     if quantize_unembed and "unembed" in params:
         xn = apply_norm(params["final_norm"], x, cfg)
         h = gram_fn(xn)
         qt, eb, ea, secs = _solve_group([params["unembed"]], h, spec,
-                                        method)[0]
+                                        method, solve_sh=solve_sh)[0]
         qparams["unembed"] = qt
         pending.append((-1, "unembed", eb, ea, secs))
     _finalize_report(report, pending)
@@ -546,7 +615,7 @@ def _layer_with_taps(lp, x, state, cfg, plan):
 
 
 def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
-                  pending, propagation, gram_fn, batched_fn):
+                  pending, propagation, gram_fn, batched_fn, solve_sh=None):
     from repro.models.model import _vlm_group_counts
     g, spg = _vlm_group_counts(cfg)
     cd = x.dtype
@@ -562,14 +631,15 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
             if staged:
                 lp_q, x, _ = _quantize_layer_staged(
                     lp, x, None, cfg, plan, DENSE_TAPS, spec, method,
-                    pending, lidx, gram_fn, batched_fn)
+                    pending, lidx, gram_fn, batched_fn, solve_sh=solve_sh)
             else:
                 taps: Dict[str, Array] = {}
                 y, _, _, _ = tfm.layer_full(lp, x, cfg, plan, False,
                                             taps=taps)
                 lp_q = _quantize_layer_leaves(lp, taps, DENSE_TAPS, spec,
                                               method, pending, lidx,
-                                              gram_fn, batched_fn)
+                                              gram_fn, batched_fn,
+                                              solve_sh=solve_sh)
                 x, _, _, _ = tfm.layer_full(dequantize_tree(lp_q), x, cfg,
                                             plan, False)
             table[f"self_{gi}_{si}"] = lp_q
@@ -579,7 +649,8 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
         if staged:
             taps, holder, cb = _staged_ctx(cp, CROSS_TAPS, spec, method,
                                            pending, lidx, gram_fn,
-                                           batched_fn, prefix="cross.")
+                                           batched_fn, prefix="cross.",
+                                           solve_sh=solve_sh)
             x = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps,
                                      quantize_cb=cb)
             cp_q = holder["lp_q"]
@@ -588,7 +659,7 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
             _ = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps)
             cp_q = _quantize_layer_leaves(cp, taps, CROSS_TAPS, spec, method,
                                           pending, lidx, gram_fn, batched_fn,
-                                          prefix="cross.")
+                                          prefix="cross.", solve_sh=solve_sh)
             x = tfm.cross_layer_full(dequantize_tree(cp_q), x, cfg, plan,
                                      vkv)
         table[f"cross_{gi}"] = cp_q

@@ -4,7 +4,9 @@ mesh partition-spec helpers used by the launchers (DESIGN.md §4).
 Everything here is mesh-mechanics only — the math stays in `core/` and the
 models stay mesh-agnostic (they only see a `BuildPlan.constrain` callback).
 """
-from repro.dist.calibrate import (data_mesh, shard_batch,  # noqa: F401
-                                  sharded_batched_gram, sharded_gram)
+from repro.dist.calibrate import (calib_mesh, data_mesh,  # noqa: F401
+                                  model_size, shard_batch,
+                                  sharded_batched_gram, sharded_gram,
+                                  sharded_solve)
 from repro.dist.collectives import (compressed_psum,  # noqa: F401
                                     init_error_state, psum_gram)

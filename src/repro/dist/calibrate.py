@@ -1,9 +1,14 @@
-"""Data-parallel COMQ calibration (DESIGN.md §4.2).
+"""Data-parallel COMQ calibration + column-sharded solves (DESIGN.md §4.2/§4.3).
 
 The calibration batch is sharded over the mesh's "data" axis; every tap
 forward then runs SPMD on the local shard, and the only communication the
 whole pipeline needs is one `psum` of each (m, m) Gram block — solves run
-replicated on the maintained-P blocked solver (ROADMAP constraint).
+on the maintained-P blocked solver (ROADMAP constraint), either replicated
+or, with a nontrivial "model" axis, with W's output columns sharded over
+"model" (`sharded_solve`): H is replicated, every per-column operand is
+partitioned, and the solve issues zero collectives (the shared greedy
+order — the only column-coupled quantity — is precomputed on the full W
+and passed in replicated).
 
 Communication accounting per transformer layer (dense family): 4 taps →
 4 Gram all-reduces of m·m f32 ≈ 4·d² + (Hp·hd)² + f² bytes·4, independent
@@ -13,6 +18,7 @@ all-gather of the (N, m) features would move N·m·4 bytes per tap.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -33,6 +39,26 @@ def data_mesh(n: Optional[int] = None) -> Mesh:
     devices = jax.devices()
     n = n or len(devices)
     return Mesh(np.asarray(devices[:n]).reshape(n), ("data",))
+
+
+def calib_mesh(model: int = 1, data: Optional[int] = None) -> Mesh:
+    """("data", "model") calibration mesh: the batch (and Gram psum) use
+    "data"; solve columns shard over "model" (`sharded_solve`). With
+    data=None the data axis takes all devices the model axis leaves."""
+    devices = jax.devices()
+    n = len(devices)
+    if model < 1 or n % model:
+        raise ValueError(f"model axis {model} must divide {n} devices")
+    data = n // model if data is None else data
+    if data < 1 or data * model > n:
+        raise ValueError(f"mesh ({data}, {model}) needs {data * model} "
+                         f"devices, have {n}")
+    return Mesh(np.asarray(devices[:data * model]).reshape(data, model),
+                ("data", "model"))
+
+
+def model_size(mesh: Optional[Mesh]) -> int:
+    return 1 if mesh is None else int(mesh.shape.get("model", 1))
 
 
 def shard_batch(mesh: Mesh, x: Array) -> Array:
@@ -68,8 +94,11 @@ def sharded_gram(mesh: Mesh, tap: Array) -> Array:
     shard_map computes the local-shard XᵀX and all-reduces it with a single
     psum — the only cross-device traffic of the calibration walk."""
     if tap.shape[0] % mesh.shape["data"]:
-        # batch doesn't divide the axis (e.g. routed expert buffers):
-        # fall back to the replicated Gram
+        # batch doesn't divide the axis: fall back to the replicated Gram
+        warnings.warn(
+            f"sharded_gram: tap batch {tap.shape[0]} does not divide the "
+            f"data axis {mesh.shape['data']}; falling back to the "
+            "replicated Gram (no psum) for this tap", stacklevel=2)
         from repro.core.calibrate import gram_from_tap
         return gram_from_tap(tap)
     return _gram_fn(mesh)(tap)
@@ -77,8 +106,101 @@ def sharded_gram(mesh: Mesh, tap: Array) -> Array:
 
 def sharded_batched_gram(mesh: Mesh, tap: Array) -> Array:
     """(E, C, d) stacked-expert tap with the capacity axis sharded ->
-    replicated (E, d, d) per-expert Grams, one psum."""
+    replicated (E, d, d) per-expert Grams, one psum.
+
+    The capacity axis must divide the data axis — `quantize_model` aligns
+    MoE routing capacity via BuildPlan.moe_capacity_multiple precisely so
+    expert taps never take the replicated fallback; if one still does
+    (e.g. a hand-built tap), warn rather than silently leaving the psum
+    path."""
     if tap.shape[1] % mesh.shape["data"]:
+        warnings.warn(
+            f"sharded_batched_gram: expert capacity {tap.shape[1]} does not "
+            f"divide the data axis {mesh.shape['data']}; falling back to "
+            "the replicated per-expert Gram (no psum). Align the routing "
+            "capacity (BuildPlan.moe_capacity_multiple) to stay on the "
+            "psum path.", stacklevel=2)
         from repro.core.calibrate import batched_gram
         return batched_gram(tap)
     return _batched_gram_fn(mesh)(tap)
+
+
+# ---------------------------------------------------------------------------
+# column-sharded solves (DESIGN.md §4.3)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _solve_fn(mesh: Mesh, spec, method: str, block: int):
+    """Jitted shard_map'd column-sharded solve, cached per
+    (mesh, spec, method, block); jit caches per operand shape.
+
+    The local function runs the *unmodified* solver on this shard's column
+    slice — bit-identical to the replicated solve because every operand it
+    touches is column-offset-invariant (the shared visit order arrives
+    precomputed via `perm`). It also computes the per-column squared
+    errors for reporting (one local H·R matmul each for the RTN init and
+    the final codes), so nothing downstream needs the solver's scalar
+    error trajectory — the shard_map body contains zero collectives."""
+    from repro.core.baselines import rtn_quantize
+    from repro.core.comq_hessian import comq_quantize_blocked
+    from repro.core.pipeline import _col_err2
+    from repro.dist.sharding import solver_specs
+
+    def local(h, w, perm):
+        if method == "comq_blocked":
+            r = comq_quantize_blocked(h, w, spec, block=block, perm=perm)
+        elif method == "rtn":
+            r = rtn_quantize(w, spec, h=h)
+        else:
+            raise ValueError(f"method {method!r} is not column-shardable")
+        wq = r.q.astype(jnp.float32) * r.delta
+        e2_after = _col_err2(h, w, wq)
+        rt = rtn_quantize(w, spec)
+        e2_before = _col_err2(h, w, rt.q.astype(jnp.float32) * rt.delta)
+        return r.q, r.delta, r.z_lo, e2_before, e2_after
+
+    s = solver_specs(mesh)
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(s["h"], s["w"], s["perm"]),
+        out_specs=(s["q"], s["delta"], s["z"], s["col_err2"],
+                   s["col_err2"]),
+        check_rep=False))
+
+
+def sharded_solve(mesh: Mesh, h: Array, w2d: Array, spec, method: str,
+                  block: int = 256):
+    """Column-sharded COMQ solve: W's output columns partition over the
+    "model" axis; H and the shared visit order are replicated; the solve
+    issues no collectives (asserted in tests on the compiled HLO).
+
+    Returns (q, delta, z_lo, e2_before, e2_after) with the column-
+    partitioned outputs still sharded — callers slice them per leaf
+    exactly like the fused replicated path. Columns are zero-padded up to
+    a multiple of the model axis (trailing pad; column independence makes
+    the shard assignment irrelevant to bit-identity) and stripped before
+    returning.
+    """
+    from repro.core.comq_hessian import shared_order
+    from repro.models.common import pad_to_multiple
+
+    tp = model_size(mesh)
+    h = h.astype(jnp.float32)
+    w2d = w2d.astype(jnp.float32)
+    n = w2d.shape[1]
+    n_pad = pad_to_multiple(n, tp)
+    wp = (jnp.pad(w2d, ((0, 0), (0, n_pad - n))) if n_pad != n else w2d)
+    if method == "comq_blocked":
+        # the one column-coupled quantity, computed once on the full W —
+        # from the *unpadded* columns so the order (and therefore every
+        # code) matches the replicated solve exactly
+        perm = shared_order(h, w2d, spec)
+    else:
+        perm = jnp.arange(h.shape[0], dtype=jnp.int32)
+    q, delta, z_lo, e2b, e2a = _solve_fn(mesh, spec, method, block)(
+        h, wp, perm)
+    if n_pad != n:
+        q, delta, z_lo = q[:, :n], delta[:n], z_lo[:n]
+        e2b, e2a = e2b[:n], e2a[:n]
+    return q, delta, z_lo, e2b, e2a

@@ -42,6 +42,27 @@ def batch_dim_spec(mesh: Mesh, global_batch: int):
     return b if global_batch % dp_size(mesh) == 0 else None
 
 
+def solver_specs(mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpecs for the column-sharded COMQ solve (DESIGN.md §4.3).
+
+    Per-channel COMQ is column-separable given H: every per-column operand
+    — W, the residual R, the maintained product P = H·R, HW, codes Q, and
+    the per-column grids (δ, z_lo, z_hi) — partitions over the "model" axis
+    along the output-column dim, while H (m, m) and the shared visit order
+    stay replicated. The solve itself then needs zero communication: the
+    only collective in the whole calibration path remains the Gram psum
+    over "data"."""
+    return {
+        "h": P(),                    # (m, m) Gram — replicated
+        "perm": P(),                 # (m,) shared visit order — replicated
+        "w": P(None, "model"),       # (m, n) weight columns
+        "q": P(None, "model"),       # (m, n) bit-codes
+        "delta": P("model"),         # (n,) per-column scales
+        "z": P("model"),             # (n,) per-column zero-points
+        "col_err2": P("model"),      # (n,) per-column squared errors
+    }
+
+
 def named(mesh: Mesh, specs: PyTree) -> PyTree:
     """PartitionSpec pytree -> NamedSharding pytree."""
     return jax.tree_util.tree_map(

@@ -110,7 +110,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                     default_microbatches(shape.global_batch, dp_size(mesh))))
             step_fn = make_train_step(cfg, plan, run_cfg, adamw_cfg)
             state_shape = jax.eval_shape(
-                lambda ps: init_train_state(ps, adamw_cfg), params_shape)
+                lambda ps: init_train_state(ps, adamw_cfg, run_cfg),
+                params_shape)
             ospecs = _opt_specs(state_shape, pspecs)
             in_shardings = (named(mesh, ospecs), named(mesh, bspecs))
             out_shardings = (named(mesh, ospecs),
@@ -194,27 +195,40 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def _opt_specs(state_shape, pspecs):
     """Build shardings for the whole train state from the param specs.
-    int8 moment dicts ({"q","scale"}) inherit the param's spec."""
+    int8 moment dicts ({"q","scale"[,"ef"]}) inherit the param's spec;
+    the first ("m") and second ("v") moments are specced separately —
+    their codecs differ (only m carries the packed 2-bit EF residual)."""
     from jax.sharding import PartitionSpec as PS
 
     def moment_spec(ps, leaf):
         if isinstance(leaf, dict):
-            # the blockwise scale shrinks the last dim ~256×: replicate it
-            # on that axis (tiny) so divisibility never constrains specs
-            scale_spec = PS(*ps[:-1], None) if len(ps) else ps
-            return {"q": ps, "scale": scale_spec}
+            # the blockwise scale (last dim /256) and packed EF residual
+            # (last dim /4) both shrink the last dim: replicate it (small)
+            # so divisibility never constrains specs
+            small_spec = PS(*ps[:-1], None) if len(ps) else ps
+            out = {"q": ps, "scale": small_spec}
+            if "ef" in leaf:
+                out["ef"] = small_spec
+            return out
         return ps
 
-    is_enc = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
-    m = state_shape["opt"]["m"]
+    is_enc = lambda x: isinstance(x, dict) and {"q", "scale"} <= set(x)
     flat_p = jax.tree_util.tree_leaves(
         pspecs, is_leaf=lambda x: isinstance(x, PS))
-    flat_m = jax.tree_util.tree_leaves(m, is_leaf=is_enc)
-    mspecs = [moment_spec(ps, lf) for ps, lf in zip(flat_p, flat_m)]
-    mdef = jax.tree_util.tree_structure(m, is_leaf=is_enc)
-    mspec = jax.tree_util.tree_unflatten(mdef, mspecs)
-    return {"params": pspecs,
-            "opt": {"step": PS(), "m": mspec, "v": mspec}}
+
+    def tree_spec(moments):
+        flat = jax.tree_util.tree_leaves(moments, is_leaf=is_enc)
+        specs = [moment_spec(ps, lf) for ps, lf in zip(flat_p, flat)]
+        tdef = jax.tree_util.tree_structure(moments, is_leaf=is_enc)
+        return jax.tree_util.tree_unflatten(tdef, specs)
+
+    out = {"params": pspecs,
+           "opt": {"step": PS(),
+                   "m": tree_spec(state_shape["opt"]["m"]),
+                   "v": tree_spec(state_shape["opt"]["v"])}}
+    if "grad_err" in state_shape:      # int8_ef carry: same tree as params
+        out["grad_err"] = pspecs
+    return out
 
 
 def _prefill_cache_shardings(cfg, plan, shape, mesh):

@@ -43,8 +43,15 @@ def main():
                     help="staged = one forward per layer (default); "
                          "legacy = two-forward A/B schedule")
     ap.add_argument("--shard-data", action="store_true",
-                    help="shard the calibration batch over all local "
-                         "devices (repro.dist: one Gram psum per tap)")
+                    help="shard the calibration batch over the mesh data "
+                         "axis (repro.dist: one Gram psum per tap)")
+    ap.add_argument("--shard-solve", type=int, default=0, metavar="TP",
+                    help="shard solve columns over a model axis of this "
+                         "size (0 = off; with --shard-data the remaining "
+                         "devices form the data axis). Zero-communication, "
+                         "bit-identical for per-channel comq_blocked/rtn "
+                         "(DESIGN.md §4.3); other methods keep replicated "
+                         "solves.")
     ap.add_argument("--out-dir", default="/tmp/repro_quant")
     args = ap.parse_args()
 
@@ -63,7 +70,16 @@ def main():
     spec = QuantSpec(bits=args.bits, granularity=args.granularity,
                      lam=args.lam, sweeps=args.sweeps, order=args.order)
     mesh = None
-    if args.shard_data:
+    if args.shard_solve:
+        from repro.dist import calib_mesh
+        mesh = calib_mesh(model=args.shard_solve,
+                          data=None if args.shard_data else 1)
+        from repro.core.pipeline import _col_shardable
+        if not _col_shardable(spec, args.method):
+            print(f"# note: method={args.method} granularity="
+                  f"{args.granularity} is not column-shardable; solves "
+                  "stay replicated (see DESIGN.md §4.3)")
+    elif args.shard_data:
         from repro.dist import data_mesh
         mesh = data_mesh()
     t0 = time.time()
@@ -93,6 +109,8 @@ def main():
         "arch": cfg.name, "method": args.method, "bits": args.bits,
         "propagation": args.propagation,
         "data_shards": 1 if mesh is None else int(mesh.shape["data"]),
+        "model_shards": 1 if mesh is None else int(mesh.shape.get("model",
+                                                                  1)),
         "order": args.order, "granularity": args.granularity,
         "layers_quantized": len(report.layers),
         "comq_vs_rtn_error_improvement": round(report.total_improvement(), 4),

@@ -16,7 +16,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import Array, act_fn, dense_init
+from repro.models.common import Array, act_fn, dense_init, pad_to_multiple
 
 
 def init_moe(key: Array, cfg, n_experts_padded: int, stack=()) -> dict:
@@ -96,8 +96,16 @@ def _dispatch_chunk(x: Array, p: dict, cfg, n_real: int, capacity: int,
 
 def apply_moe(p: dict, x: Array, cfg, n_experts_padded: int,
               token_chunk: int = 4096, taps=None,
-              quantize_cb=None) -> Tuple[Array, Array]:
-    """x: (B, T, d) -> (y, aux_loss). Token axis chunked with lax.scan."""
+              quantize_cb=None, capacity_multiple: int = 1
+              ) -> Tuple[Array, Array]:
+    """x: (B, T, d) -> (y, aux_loss). Token axis chunked with lax.scan.
+
+    `capacity_multiple` (BuildPlan.moe_capacity_multiple) rounds the
+    routing capacity up so the (E, C, d) expert buffers divide the mesh
+    "data" axis — calibration taps then always reduce via the Gram psum
+    instead of the replicated fallback (dist.calibrate). Rounding up only
+    *adds* capacity slots, so no token that would have been kept is
+    dropped."""
     B, T, d = x.shape
     n_real = cfg.moe.n_experts
     flat = x.reshape(B * T, d)
@@ -106,17 +114,20 @@ def apply_moe(p: dict, x: Array, cfg, n_experts_padded: int,
     while N % chunk:
         chunk //= 2
     n_chunks = N // chunk
-    capacity = max(8, int(chunk * cfg.moe.top_k * cfg.moe.capacity_factor
-                          / max(cfg.moe.n_experts, 1)))
+    capacity = pad_to_multiple(
+        max(8, int(chunk * cfg.moe.top_k * cfg.moe.capacity_factor
+                   / max(cfg.moe.n_experts, 1))), capacity_multiple)
 
     if taps is not None:
         # calibration path: single pass over the routed expert buffers; taps
         # (and the staged quantize_cb swaps) happen inside _dispatch_chunk
         taps["router_in"] = x
         y, a = _dispatch_chunk(flat, p, cfg, n_real,
-                               max(8, int(N * cfg.moe.top_k *
-                                          cfg.moe.capacity_factor /
-                                          max(cfg.moe.n_experts, 1))),
+                               pad_to_multiple(
+                                   max(8, int(N * cfg.moe.top_k *
+                                              cfg.moe.capacity_factor /
+                                              max(cfg.moe.n_experts, 1))),
+                                   capacity_multiple),
                                taps=taps, quantize_cb=quantize_cb)
         return y.reshape(B, T, d), a
 

@@ -41,6 +41,10 @@ class BuildPlan:
     tp: int = 1
     attn_block_size: int = 512
     moe_token_chunk: int = 4096
+    # round MoE routing capacity up to this multiple: quantize_model sets
+    # it to the mesh "data" axis so (E, C, d) expert taps always divide it
+    # and calibration Grams stay on the psum path (dist.calibrate)
+    moe_capacity_multiple: int = 1
     remat: bool = True
     cache_dtype: Any = jnp.bfloat16
     cache_quant: bool = False    # int8 KV cache (per-entry absmax scales)
@@ -188,7 +192,9 @@ def layer_full(p: dict, x: Array, cfg, plan: BuildPlan, make_cache: bool,
         m_out, aux = moe_mod.apply_moe(p["moe"], xn, cfg,
                                        plan.experts_padded(cfg),
                                        plan.moe_token_chunk, taps=taps,
-                                       quantize_cb=quantize_cb)
+                                       quantize_cb=quantize_cb,
+                                       capacity_multiple=
+                                       plan.moe_capacity_multiple)
     else:
         m_out = mlp_mod.apply_mlp(p["mlp"], xn, cfg, taps=taps,
                                   constrain=plan.constrain,
@@ -286,7 +292,9 @@ def layer_decode(p: dict, x: Array, cfg, plan: BuildPlan, kv_cache, pos,
     if cfg.moe is not None:
         m_out, _ = moe_mod.apply_moe(p["moe"], xn, cfg,
                                      plan.experts_padded(cfg),
-                                     plan.moe_token_chunk)
+                                     plan.moe_token_chunk,
+                                     capacity_multiple=
+                                     plan.moe_capacity_multiple)
     else:
         m_out = mlp_mod.apply_mlp(p["mlp"], xn, cfg)
     return x + m_out, kv_cache, None, new_ssm

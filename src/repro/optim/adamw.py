@@ -1,10 +1,22 @@
 """AdamW in pure JAX with optional 8-bit (blockwise-quantized) moments.
 
 The 8-bit moment state (per-block absmax scales, block=256) cuts optimizer
-memory from 8 to ~2 bytes/param — what lets the 400B llama4-maverick config
-fit a single 256-chip pod (DESIGN.md §4). Quantization uses stochastic-free
-deterministic rounding with error-carrying scales; the update math runs in
-f32 after dequantization.
+memory from 8 to ~2.3 bytes/param — what lets the 400B llama4-maverick
+config fit a single 256-chip pod (DESIGN.md §4). Quantization uses
+stochastic-free deterministic rounding; the update math runs in f32 after
+dequantization.
+
+The signed first moment carries *error feedback*: the int8 rounding
+residual (≤ scale/2 per element) is re-quantized to 2-bit codes on the
+same block scale and stored packed 4-per-byte next to the int8 codes, and
+decoding adds it back. The EMA recursion m ← β₁·decode(m) + (1−β₁)·g then
+runs on a value within scale/6 of the exact f32 moment instead of scale/2,
+so the quantization error no longer compounds as a β₁-geometric drift of
+the whole trajectory (the compressed_psum EF principle, at 1/4 bit cost;
+without it the int8 run walks off the f32 one — the former
+test_int8_moments_track_f32 failure). The non-negative second moment keeps
+the power-law codec: its error enters through a sqrt in the denominator
+and is not integrated by an EMA of comparable decay, so it stays EF-free.
 """
 from __future__ import annotations
 
@@ -41,21 +53,45 @@ def _blocked(x: Array):
     return xp, xp.reshape(*xp.shape[:-1], -1, BLOCK)
 
 
+def _pack2(c: Array) -> Array:
+    """{0..3} codes (last dim % 4 == 0) packed 4-per-uint8, low pair first."""
+    c4 = c.reshape(*c.shape[:-1], -1, 4)
+    return (c4[..., 0] | (c4[..., 1] << 2) | (c4[..., 2] << 4)
+            | (c4[..., 3] << 6)).astype(jnp.uint8)
+
+
+def _unpack2(b: Array) -> Array:
+    parts = jnp.stack([(b >> (2 * i)) & jnp.uint8(3) for i in range(4)],
+                      axis=-1)
+    return parts.reshape(*b.shape[:-1], b.shape[-1] * 4)
+
+
 def _q8_encode(x: Array) -> Dict[str, Array]:
-    """Blockwise (last-dim, 256) linear int8 for the signed first moment.
-    q/scale keep the param's rank so its PartitionSpec applies to both."""
+    """Blockwise (last-dim, 256) linear int8 for the signed first moment,
+    with the rounding residual carried as 2-bit error-feedback codes
+    ("ef", packed 4/byte on the same block scale; see module docstring).
+    q/scale/ef keep the param's rank so its PartitionSpec applies to all."""
     xp, blocks = _blocked(x)
     absmax = jnp.max(jnp.abs(blocks), axis=-1)
     scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
     q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    resid = blocks - q * scale[..., None]          # |resid| ≤ scale/2
+    step = scale[..., None] / 3.0
+    eq = (jnp.clip(jnp.round(resid / step), -2, 1) + 2).astype(jnp.uint8)
     return {"q": q.reshape(xp.shape).astype(jnp.int8),
-            "scale": scale.astype(jnp.float32)}
+            "scale": scale.astype(jnp.float32),
+            "ef": _pack2(eq.reshape(xp.shape))}
 
 
 def _q8_decode(enc: Dict[str, Array], shape) -> Array:
     q = enc["q"]
     blocks = q.reshape(*q.shape[:-1], -1, BLOCK).astype(jnp.float32)
-    x = (blocks * enc["scale"][..., None]).reshape(q.shape)
+    x = blocks * enc["scale"][..., None]
+    if "ef" in enc:                                # error-feedback add-back
+        eq = _unpack2(enc["ef"]).astype(jnp.float32) - 2.0
+        x = x + (eq.reshape(*q.shape[:-1], -1, BLOCK)
+                 * (enc["scale"][..., None] / 3.0))
+    x = x.reshape(q.shape)
     d = shape[-1] if len(shape) else 1
     return x[..., :d].reshape(shape)
 

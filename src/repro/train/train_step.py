@@ -1,9 +1,16 @@
 """Training step: microbatched gradient accumulation + AdamW.
 
 The microbatch loop is a `lax.scan` (one rolled body in HLO); gradients
-accumulate in f32 master-param space; optional int8 error-feedback gradient
-compression runs inside an explicitly shard_map'd variant (see
-dist/collectives.py). Remat policy is owned by the model's BuildPlan.
+accumulate in f32 master-param space. With `RunConfig.grad_compression=
+"int8_ef"` the cross-shard gradient mean runs through
+`dist.collectives.compressed_psum` — int8 codes on a shared absmax grid
+move over the wire instead of f32 values, and each shard's quantization
+residual is carried in the train state (`grad_err`, threaded by
+`init_train_state`) so compression error never accumulates. That path
+needs a named mesh axis, so the step must run under `shard_map` with
+`axis_name=` passed to `make_train_step`; the default "none" path stays
+mesh-agnostic (jit/GSPMD handles the reduction implicitly). Remat policy
+is owned by the model's BuildPlan.
 """
 from __future__ import annotations
 
@@ -20,12 +27,26 @@ from repro.optim import (AdamWConfig, adamw_init, adamw_update,
 PyTree = Any
 
 
-def init_train_state(params: PyTree, adamw_cfg: AdamWConfig) -> Dict:
-    return {"params": params, "opt": adamw_init(params, adamw_cfg)}
+def init_train_state(params: PyTree, adamw_cfg: AdamWConfig,
+                     run_cfg=None) -> Dict:
+    state = {"params": params, "opt": adamw_init(params, adamw_cfg)}
+    if run_cfg is not None and run_cfg.grad_compression == "int8_ef":
+        from repro.dist.collectives import init_error_state
+        state["grad_err"] = init_error_state(params)
+    return state
 
 
-def make_train_step(cfg, plan, run_cfg, adamw_cfg: AdamWConfig):
+def make_train_step(cfg, plan, run_cfg, adamw_cfg: AdamWConfig,
+                    axis_name: Optional[str] = None):
     nm = max(1, run_cfg.microbatches)
+    compress = run_cfg.grad_compression == "int8_ef"
+    if run_cfg.grad_compression not in ("none", "int8_ef"):
+        raise ValueError(
+            f"unknown grad_compression {run_cfg.grad_compression!r}")
+    if compress and axis_name is None:
+        raise ValueError(
+            "grad_compression='int8_ef' all-reduces int8 codes over a named "
+            "mesh axis: run the step under shard_map and pass axis_name=")
 
     def loss_fn(params, mb):
         return lm_loss(params, cfg, plan, mb)
@@ -72,10 +93,21 @@ def make_train_step(cfg, plan, run_cfg, adamw_cfg: AdamWConfig):
                 lambda g: g.astype(jnp.float32), grads)
 
         grads = jax.tree_util.tree_map(lambda g: g / nm, gacc)
+        new_state = {}
+        if compress:
+            # int8-EF all-reduce of the *local* gradient mean; the carried
+            # residual rides in the state so no mass is ever lost
+            from repro.dist.collectives import compressed_psum
+            n_shards = jax.lax.psum(1, axis_name)
+            grads, new_err = compressed_psum(grads, axis_name,
+                                             state["grad_err"], n_shards)
+            new_state["grad_err"] = new_err
+            loss = jax.lax.pmean(loss, axis_name)
         grads, gnorm = clip_by_global_norm(grads, run_cfg.grad_clip)
         new_params, new_opt = adamw_update(grads, opt, params, adamw_cfg, lr)
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
                    "step": new_opt["step"]}
-        return {"params": new_params, "opt": new_opt}, metrics
+        new_state.update({"params": new_params, "opt": new_opt})
+        return new_state, metrics
 
     return train_step

@@ -38,15 +38,31 @@ class Trainer:
                                    host_id)
         self.failure_hook = failure_hook
         self.shard_state_fn = shard_state_fn   # elastic re-shard on restore
-        self.step_fn = jax.jit(
-            make_train_step(cfg, plan, run_cfg, self.adamw_cfg),
-            donate_argnums=(0,))
+        if run_cfg.grad_compression == "int8_ef":
+            # compressed_psum needs a named mesh axis: run the step under a
+            # shard_map over a 1-shard "data" axis — the single-process
+            # Trainer's whole batch is one shard, so this exercises the
+            # int8-EF quantize/carry path end-to-end; multi-shard
+            # deployments wire their own shard_map (see train_step.py)
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from repro.dist import data_mesh
+            step = make_train_step(cfg, plan, run_cfg, self.adamw_cfg,
+                                   axis_name="data")
+            self.step_fn = jax.jit(
+                shard_map(step, mesh=data_mesh(1), in_specs=(P(), P()),
+                          out_specs=(P(), P()), check_rep=False),
+                donate_argnums=(0,))
+        else:
+            self.step_fn = jax.jit(
+                make_train_step(cfg, plan, run_cfg, self.adamw_cfg),
+                donate_argnums=(0,))
         self.metrics_log = []
 
     def init_state(self):
         params = init_params(jax.random.PRNGKey(self.run.seed), self.cfg,
                              self.plan)
-        return init_train_state(params, self.adamw_cfg)
+        return init_train_state(params, self.adamw_cfg, self.run)
 
     def resume_or_init(self):
         latest = self.ckpt.latest_step()

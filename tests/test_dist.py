@@ -19,8 +19,9 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.core import QuantSpec, quantize_model
 from repro.core.calibrate import batched_gram, gram_from_tap
-from repro.dist import (compressed_psum, data_mesh, init_error_state,
-                        shard_batch, sharded_batched_gram, sharded_gram)
+from repro.dist import (calib_mesh, compressed_psum, data_mesh,
+                        init_error_state, shard_batch, sharded_batched_gram,
+                        sharded_gram, sharded_solve)
 from repro.models import BuildPlan, init_params
 
 KEY = jax.random.PRNGKey(0)
@@ -115,6 +116,94 @@ def test_sharded_quantize_model_matches_single_device(arch):
     assert checked > 0
 
 
+def test_sharded_gram_fallback_warns():
+    """The replicated-Gram fallback must never be silent."""
+    mesh = data_mesh()
+    if mesh.shape["data"] == 1:
+        pytest.skip("needs a multi-device data axis")
+    odd = mesh.shape["data"] + 1
+    with pytest.warns(UserWarning, match="falling back"):
+        sharded_gram(mesh, jax.random.normal(KEY, (odd, 4, 8)))
+    with pytest.warns(UserWarning, match="moe_capacity_multiple"):
+        sharded_batched_gram(mesh, jax.random.normal(KEY, (2, odd, 8)))
+
+
+def test_moe_capacity_aligns_to_data_axis():
+    """With a multi-device data axis, quantize_model rounds the MoE routing
+    capacity up so (E, C, d) expert taps divide it — the expert Gram never
+    leaves the psum path (no fallback warning)."""
+    from repro.models import moe as moe_mod
+    cfg = get_smoke_config("granite-moe-3b-a800m")
+    plan = BuildPlan(remat=False, moe_capacity_multiple=8)
+    params = init_params(KEY, cfg, plan)
+    lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    taps = {}
+    moe_mod.apply_moe(lp["moe"], x, cfg, plan.experts_padded(cfg),
+                      plan.moe_token_chunk, taps=taps,
+                      capacity_multiple=plan.moe_capacity_multiple)
+    assert taps["expert_in"].shape[1] % 8 == 0
+    assert taps["expert_down_in"].shape[1] % 8 == 0
+    # multiple=1 keeps the historical (unrounded) capacity exactly
+    from repro.models.common import pad_to_multiple
+    N = int(np.prod(x.shape[:2]))
+    hist = max(8, int(N * cfg.moe.top_k * cfg.moe.capacity_factor
+                      / max(cfg.moe.n_experts, 1)))
+    taps1 = {}
+    moe_mod.apply_moe(lp["moe"], x, cfg, plan.experts_padded(cfg),
+                      plan.moe_token_chunk, taps=taps1)
+    assert taps1["expert_in"].shape[1] == hist
+    assert taps["expert_in"].shape[1] == pad_to_multiple(hist, 8)
+
+
+def test_sharded_solve_matches_replicated():
+    """Column-sharded solve on whatever local mesh exists: bit-identical
+    codes/zero-points to the replicated trailing-update solve, scales to
+    f32 rounding, per-column errors to tolerance — incl. padded columns
+    and the shared-greedy order (perm precomputed on the full W)."""
+    from repro.core.comq_hessian import comq_quantize_blocked, gram
+    mesh = calib_mesh(model=jax.device_count())
+    for (m, n, order) in ((64, 96, "cyclic"), (64, 90, "cyclic"),
+                          (96, 100, "greedy_shared")):
+        spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9,
+                         sweeps=2, order=order)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(m + n))
+        h = gram(jax.random.normal(k1, (2 * m, m)))
+        w = jax.random.normal(k2, (m, n)) * 0.05
+        ref = comq_quantize_blocked(h, w, spec, block=32)
+        q, delta, z_lo, e2b, e2a = sharded_solve(mesh, h, w, spec,
+                                                 "comq_blocked", block=32)
+        assert bool(jnp.all(q == ref.q)), (m, n, order)
+        assert bool(jnp.all(z_lo == ref.z_lo))
+        np.testing.assert_allclose(np.asarray(delta), np.asarray(ref.delta),
+                                   rtol=2e-6)
+        # per-column errors sum to the solver's trajectory error
+        err = float(jnp.sqrt(jnp.maximum(jnp.sum(e2a), 0.0)))
+        np.testing.assert_allclose(err, float(ref.errors[-1]), rtol=1e-3,
+                                   atol=1e-4)
+
+
+def test_sharded_solve_issues_no_collectives():
+    """DESIGN.md §4.3: between the Gram psum and the final quantized
+    weights the column-sharded solve is zero-communication — the compiled
+    HLO contains no collective ops at all."""
+    from repro.dist.calibrate import _solve_fn
+    mesh = calib_mesh(model=jax.device_count())
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
+                     order="cyclic")
+    f = _solve_fn(mesh, spec, "comq_blocked", 32)
+    m, n = 64, 96
+    h = jnp.eye(m)
+    w = jnp.ones((m, n))
+    perm = jnp.arange(m, dtype=jnp.int32)
+    hlo = f.lower(h, w, perm).compile().as_text()
+    bad = [l for l in hlo.splitlines()
+           if any(t in l for t in ("all-reduce", "all-gather",
+                                   "collective-permute", "reduce-scatter",
+                                   "all-to-all"))]
+    assert not bad, bad[:3]
+
+
 def test_shard_batch_rejects_indivisible():
     mesh = data_mesh()
     if mesh.shape["data"] == 1:
@@ -197,3 +286,74 @@ def test_forced_8_device_sharded_calibration():
                          capture_output=True, text=True, timeout=420)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "FORCED_OK" in out.stdout
+
+
+_COLSHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import QuantSpec
+from repro.core.comq_hessian import comq_quantize_blocked, gram
+from repro.core.pipeline import _solve_group
+from repro.dist import calib_mesh, sharded_solve
+import functools
+
+assert jax.device_count() == 8
+mesh = calib_mesh(model=4)                     # the forced (2, 4) mesh
+assert dict(mesh.shape) == {"data": 2, "model": 4}
+
+# --- dense + padded column counts + shared-greedy order -------------------
+for (m, n, order) in ((96, 192, "cyclic"), (96, 100, "cyclic"),
+                      (64, 90, "greedy_shared")):
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=3,
+                     order=order)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m + n))
+    h = gram(jax.random.normal(k1, (2 * m, m)))
+    w = jax.random.normal(k2, (m, n)) * 0.05
+    ref = comq_quantize_blocked(h, w, spec, block=32)
+    q, delta, z_lo, _, _ = sharded_solve(mesh, h, w, spec, "comq_blocked",
+                                         block=32)
+    assert bool(jnp.all(q == ref.q)), (m, n, order, "codes")
+    assert bool(jnp.all(z_lo == ref.z_lo)), (m, n, order, "z_lo")
+    np.testing.assert_allclose(np.asarray(delta), np.asarray(ref.delta),
+                               rtol=2e-6)
+
+# --- fused shared-tap solve through the pipeline group path ---------------
+# three leaves on one Gram, fused into [wq|wk|wv]: the sharded group must
+# reproduce the replicated group's QTensors bit-for-bit (codes/z_lo; the
+# per-shard reduction tiling moves scales by <= 2 ulp)
+spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
+                 order="cyclic")
+m = 96
+k = jax.random.PRNGKey(7)
+h = gram(jax.random.normal(k, (2 * m, m)))
+ws = [jax.random.normal(jax.random.fold_in(k, i), (m, 64 + 13 * i)) * 0.05
+      for i in range(3)]                       # ragged: 64, 77, 90 cols
+solve_sh = functools.partial(sharded_solve, mesh, spec=spec,
+                             method="comq_blocked")
+rep = _solve_group(ws, h, spec, "comq_blocked")
+sh = _solve_group(ws, h, spec, "comq_blocked", solve_sh=solve_sh)
+for (qt_r, _, ea_r, _), (qt_s, _, ea_s, _) in zip(rep, sh):
+    assert bool(jnp.all(qt_r["codes"] == qt_s["codes"])), "fused codes"
+    assert bool(jnp.all(qt_r["z_lo"] == qt_s["z_lo"])), "fused z_lo"
+    np.testing.assert_allclose(np.asarray(qt_s["scale"]),
+                               np.asarray(qt_r["scale"]), rtol=2e-6)
+    np.testing.assert_allclose(float(ea_s), float(ea_r), rtol=1e-3,
+                               atol=1e-4)
+print("COLSHARD_OK")
+"""
+
+
+def test_forced_2x4_column_sharded_solve_bit_identity():
+    """Acceptance: on a forced (2, 4) mesh the column-sharded solve is
+    bit-identical to the replicated trailing-update solve — dense, fused
+    shared-tap, padded column counts, and the shared-greedy order."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _COLSHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "COLSHARD_OK" in out.stdout

@@ -68,15 +68,20 @@ def test_adamw_matches_reference_math():
     np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-5)
 
 
-def test_int8_moments_track_f32():
+@pytest.mark.parametrize("shape", [(64, 300), (7, 130)])
+def test_int8_moments_track_f32(shape):
+    """The int8 trajectory must track f32 within 10% of the max param
+    change — the first-moment codec's 2-bit error-feedback residual keeps
+    the EMA recursion from compounding rounding error (optim/adamw.py);
+    both shapes are block-unaligned (300 and 130 pad to 512/256)."""
     k = jax.random.PRNGKey(3)
-    p = {"w": jax.random.normal(k, (64, 300))}
+    p = {"w": jax.random.normal(k, shape)}
     cfg8 = AdamWConfig(moment_dtype="int8")
     cfg32 = AdamWConfig(moment_dtype="float32")
     s8, s32 = adamw_init(p, cfg8), adamw_init(p, cfg32)
     p8 = p32 = p
     for i in range(5):
-        g = {"w": jax.random.normal(jax.random.fold_in(k, i), (64, 300))}
+        g = {"w": jax.random.normal(jax.random.fold_in(k, i), shape)}
         p8, s8 = adamw_update(g, s8, p8, cfg8, jnp.float32(1e-2))
         p32, s32 = adamw_update(g, s32, p32, cfg32, jnp.float32(1e-2))
     diff = float(jnp.max(jnp.abs(p8["w"] - p32["w"])))
@@ -105,6 +110,111 @@ def test_grad_clip_and_schedule():
                                total_steps=100)) for s in (0, 5, 10, 100)]
     assert lrs[0] == 0.0 and abs(lrs[1] - 0.5) < 1e-6
     assert abs(lrs[2] - 1.0) < 1e-6 and lrs[3] < 0.2
+
+
+def test_train_step_int8_ef_grad_compression():
+    """RunConfig.grad_compression="int8_ef": the train step all-reduces
+    gradients through compressed_psum under shard_map, with the carried
+    residual threaded through the state by init_train_state. On a 1-shard
+    axis the compressed step must match the uncompressed one to int8-EF
+    rounding, and the error state must be populated."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import data_mesh
+
+    cfg = get_smoke_config("qwen2-7b")
+    plan = BuildPlan(remat=False)
+    params = init_params(jax.random.PRNGKey(0), cfg, plan)
+    acfg = AdamWConfig()
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                                     cfg.vocab_size),
+    }
+    rc = dict(arch="q", learning_rate=1e-3, warmup_steps=1, total_steps=10)
+    run_c = RunConfig(**rc, grad_compression="int8_ef")
+    run_n = RunConfig(**rc)
+
+    with pytest.raises(ValueError, match="axis_name"):
+        make_train_step(cfg, plan, run_c, acfg)
+
+    step_c = make_train_step(cfg, plan, run_c, acfg, axis_name="data")
+    step_n = make_train_step(cfg, plan, run_n, acfg)
+    state_c = init_train_state(params, acfg, run_c)
+    state_n = init_train_state(params, acfg, run_n)
+    assert "grad_err" in state_c and "grad_err" not in state_n
+
+    mesh = data_mesh(1)
+    new_c, metrics_c = jax.jit(shard_map(
+        step_c, mesh=mesh, in_specs=(P(), P("data")),
+        out_specs=(P(), P()), check_rep=False))(state_c, batch)
+    new_n, _ = jax.jit(step_n)(state_n, batch)
+
+    # residual is populated (quantization error is carried, not dropped)
+    errs = jax.tree_util.tree_leaves(new_c["grad_err"])
+    assert any(float(jnp.max(jnp.abs(e))) > 0 for e in errs)
+    # params match the uncompressed step to int8-EF rounding (scale/254
+    # per grad leaf, one step at lr=1e-3)
+    for a, b in zip(jax.tree_util.tree_leaves(new_c["params"]),
+                    jax.tree_util.tree_leaves(new_n["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-4)
+    assert float(metrics_c["loss"]) > 0
+
+
+def test_dryrun_opt_specs_cover_int8_moment_state():
+    """_opt_specs must structurally match the int8 moment codec — incl.
+    the packed "ef" residual on m (absent on v) and the int8_ef grad_err
+    tree — or big-arch dryrun train cells fail to unflatten."""
+    from jax.sharding import PartitionSpec as PS
+    from repro.launch.dryrun import _opt_specs
+    params = {"a": {"w": jnp.zeros((8, 512))}, "b": jnp.zeros((256,))}
+    pspecs = {"a": {"w": PS(None, "data")}, "b": PS(None)}
+    run_c = RunConfig(arch="x", grad_compression="int8_ef")
+    state = jax.eval_shape(
+        lambda p: init_train_state(p, AdamWConfig(moment_dtype="int8"),
+                                   run_c), params)
+    specs = _opt_specs(state, pspecs)
+    mspec = specs["opt"]["m"]["a"]["w"]
+    assert set(mspec) == {"q", "scale", "ef"}
+    assert mspec["q"] == PS(None, "data")
+    assert set(specs["opt"]["v"]["a"]["w"]) == {"q", "scale"}
+    assert specs["grad_err"] == pspecs
+    # every state leaf gets a spec (unflatten would throw otherwise)
+    jax.tree_util.tree_map(lambda s, l: None, specs, state,
+                           is_leaf=lambda x: isinstance(x, PS))
+
+
+def test_trainer_runs_with_int8_ef(tmp_path):
+    """End-to-end Trainer with grad_compression="int8_ef": the step runs
+    under the 1-shard shard_map wrap, grad_err is threaded through the
+    state (and checkpoints), and restoring a checkpoint written *without*
+    the new optional state backfills it instead of erroring."""
+    from repro.train.trainer import Trainer
+    cfg = get_smoke_config("qwen2-7b")
+    plan = BuildPlan(remat=False)
+    run_cfg = RunConfig(arch="qwen2-7b", ckpt_dir=str(tmp_path),
+                        ckpt_every=2, total_steps=3, learning_rate=1e-3,
+                        warmup_steps=1, async_ckpt=False,
+                        grad_compression="int8_ef")
+    t = Trainer(cfg, plan, run_cfg)
+    out = t.run_loop(total_steps=3, seq_len=32, global_batch=4)
+    assert out["final_step"] == 3
+    assert "grad_err" in out["state"]
+    errs = jax.tree_util.tree_leaves(out["state"]["grad_err"])
+    assert any(float(jnp.max(jnp.abs(e))) > 0 for e in errs)
+
+    # old-checkpoint compat: drop grad_err from the saved arrays and
+    # restore into the new (grad_err-carrying) template
+    import numpy as onp
+    step_dir = t.ckpt.dir + "/step_2"
+    data = dict(onp.load(step_dir + "/arrays.npz"))
+    stripped = {k: v for k, v in data.items()
+                if not k.startswith("grad_err")}
+    onp.savez(step_dir + "/arrays.npz", **stripped)
+    with pytest.warns(UserWarning, match="backfilling"):
+        state, meta = t.ckpt.restore(2, t.init_state())
+    assert meta["step"] == 2 and "grad_err" in state
 
 
 def test_grad_compression_error_feedback():
