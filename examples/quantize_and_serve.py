@@ -1,7 +1,9 @@
 """End-to-end driver (deliverable b): train a ~1M-param reduced config for
 a few hundred steps on the structured synthetic stream, quantize it with
-COMQ at 4 bits, write a packed quantized checkpoint, then serve batched
-requests from the quantized model — the full production workflow.
+COMQ at 4 bits, write a packed quantized checkpoint, then serve a
+mixed-length continuous-batching request set *directly from the packed
+codes* (serve.Runtime + core.serving_params — no materialize) — the full
+production workflow.
 
     PYTHONPATH=src python examples/quantize_and_serve.py [--steps 200]
 """
@@ -12,13 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import CheckpointManager, pack_tree, tree_bytes
+from repro.ckpt import (CheckpointManager, pack_tree, strip_for_serving,
+                        tree_bytes)
 from repro.configs import get_smoke_config
 from repro.configs.base import RunConfig
-from repro.core import QuantSpec, materialize, quantize_model
+from repro.core import QuantSpec, quantize_model, serving_params
 from repro.data import SyntheticLM
 from repro.models import BuildPlan, count_params, lm_loss
-from repro.serve.engine import Engine
+from repro.serve import Runtime, ServeConfig
 from repro.train.trainer import Trainer
 
 
@@ -55,7 +58,7 @@ def main():
           f" error vs RTN improved {report.total_improvement():.1%}")
 
     print("[3/4] packed quantized checkpoint")
-    packed = pack_tree(qparams["__qlayers__"])
+    packed = pack_tree(strip_for_serving(qparams))
     mgr = CheckpointManager(args.workdir + "/quant", keep=1)
     mgr.save(0, packed, extra={"bits": args.bits})
     dense_bytes = sum(l.size * l.dtype.itemsize
@@ -63,20 +66,26 @@ def main():
     print(f"      {tree_bytes(packed):,} bytes vs {dense_bytes:,} dense "
           f"({dense_bytes / tree_bytes(packed):.1f}x smaller)")
 
-    print("[4/4] serving batched requests from the quantized model")
-    mat = materialize(qparams, cfg)
+    print("[4/4] continuous-batching serve straight from the packed codes")
+    sp = serving_params(qparams, cfg)     # QT leaves — never materialized
     data = SyntheticLM(cfg.vocab_size, 0).sample(4, 32, step=31337)
-    eng = Engine(mat, cfg, plan)
+    toks = np.asarray(data["tokens"])
+    prompts = [toks[i, :l] for i, l in enumerate((32, 20, 27, 12))]
+    rt = Runtime(sp, cfg, plan,
+                 ServeConfig(max_slots=4, block_size=16, num_blocks=16,
+                             buckets=(16, 32)))
     t0 = time.time()
-    outs = eng.generate_batch(np.asarray(data["tokens"]),
-                              max_new_tokens=16)
+    rt.generate(prompts, max_new_tokens=16)
     dt = time.time() - t0
+    n_new = 4 * 16
+    print(f"      {n_new} tokens in {dt:.1f}s ({n_new / dt:.1f} tok/s CPU, "
+          f"mixed prompt lens {[len(p) for p in prompts]}, "
+          f"peak cache occupancy "
+          f"{rt.allocator.peak_in_use}/{rt.allocator.num_blocks} pages)")
     ev = {"tokens": jnp.asarray(data["tokens"]),
           "labels": jnp.asarray(data["labels"])}
-    print(f"      {outs.size} tokens in {dt:.1f}s "
-          f"({outs.size / dt:.1f} tok/s CPU)")
     print(f"      fp-loss {float(lm_loss(params, cfg, plan, ev)[0]):.3f}  "
-          f"quant-loss {float(lm_loss(mat, cfg, plan, ev)[0]):.3f}")
+          f"quant-loss {float(lm_loss(sp, cfg, plan, ev)[0]):.3f}")
     print("done.")
 
 

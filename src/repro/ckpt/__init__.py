@@ -1,2 +1,3 @@
 from repro.ckpt.checkpoint import CheckpointManager  # noqa: F401
-from repro.ckpt.quantized import pack_tree, tree_bytes, unpack_tree  # noqa: F401
+from repro.ckpt.quantized import (pack_tree, strip_for_serving,  # noqa: F401
+                                  tree_bytes, unpack_tree)

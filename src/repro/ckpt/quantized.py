@@ -54,6 +54,20 @@ def unpack_tree(tree):
     return walk(tree)
 
 
+def strip_for_serving(qparams):
+    """Drop the stacked dense copies of quantized layers from a
+    `quantize_model` output — the on-disk checkpoint form (4.25 bits/param
+    instead of carrying both the codes *and* the superseded dense stack).
+    Everything serving needs survives: the top-level params and the
+    __qlayers__ table, which stores each layer's dense non-quantized
+    leaves (norms, biases) alongside its QTensors — for VLM trees the
+    per-group "groups" stacks are dropped the same way. `core.
+    serving_params` and `core.materialize` both accept the stripped
+    form."""
+    return {k: v for k, v in qparams.items()
+            if k not in ("layers", "groups")}
+
+
 def tree_bytes(tree) -> int:
     return sum(leaf.size * leaf.dtype.itemsize
                for leaf in jax.tree_util.tree_leaves(tree)

@@ -3,6 +3,7 @@ from repro.core.baselines import gptq_quantize, rtn_quantize  # noqa: F401
 from repro.core.comq import QuantResult, comq_quantize, make_orders  # noqa: F401
 from repro.core.comq_hessian import (comq_quantize_blocked,  # noqa: F401
                                      comq_quantize_h, gram)
+from repro.core.apply import serving_params  # noqa: F401
 from repro.core.pipeline import (QuantReport, dequantize_tree,  # noqa: F401
                                  materialize, quantize_model)
 from repro.core.quantizer import QuantSpec  # noqa: F401

@@ -42,8 +42,13 @@ class QT:
             z = z[..., None, :]
         q = u.astype(jnp.float32) + z.astype(jnp.float32)
         w = q * s
-        # codes keep the logical rank (scan slicing drops leading dims, so
-        # `self.shape` is metadata only — u.shape IS the current shape)
+        # COMQ checkpoints store codes 2D-flattened (tap_dim, cols); restore
+        # the logical trailing shape. Scan slicing drops leading stack dims,
+        # so match the suffix of `self.shape` with the current element count.
+        if w.shape != tuple(self.shape):
+            target = _suffix_shape(self.shape, w.size)
+            if target is not None and w.shape != target:
+                w = w.reshape(target)
         return w.astype(dtype)
 
 
@@ -62,11 +67,91 @@ def is_qt(x) -> bool:
     return isinstance(x, QT)
 
 
-def dequantize_qt_tree(tree, dtype=jnp.bfloat16):
-    """Replace QT leaves with dense weights (called inside scan bodies)."""
-    return jax.tree_util.tree_map(
-        lambda x: x.dequant(dtype) if is_qt(x) else x, tree,
-        is_leaf=is_qt)
+def _suffix_shape(shape, size):
+    """Shortest suffix of `shape` whose element count equals `size`.
+
+    Shortest (not longest) so that scan-sliced codes resolve to the
+    logical per-layer shape even when a leading stack dim is 1: a
+    (1, d, H, hd) QT sliced inside the scan must dequantize to
+    (d, H, hd), not rebroadcast the stack dim."""
+    for i in range(len(shape), -1, -1):
+        p = 1
+        for s in shape[i:]:
+            p *= s
+        if p == size:
+            return tuple(shape[i:])
+    return None
+
+
+def qt_out_dims(qt: QT):
+    """Logical trailing dims of a 2D-codes QT's output axis (e.g. the
+    (H, hd) of a wq whose codes are stored (d, H·hd)).
+
+    The output suffix must be preceded by dims multiplying to the codes'
+    input dim K (with any leading stack dims before those) — that
+    constraint disambiguates unit axes: a (L, d, 1, hd) MQA wk resolves
+    to (1, hd), not (hd,), while a (1, d, H, hd) single-layer stack still
+    resolves to (H, hd). Longest valid suffix wins."""
+    import math
+    n = qt.codes.shape[-1] * (2 if qt.bits == 4 else 1)
+    k = qt.codes.shape[0]
+    shp = qt.shape
+    for i in range(len(shp)):               # longest suffix first
+        if math.prod(shp[i:]) != n:
+            continue
+        if any(math.prod(shp[j:i]) == k for j in range(i)):
+            return tuple(shp[i:])
+    return (n,)
+
+
+def qt_fusable(x) -> bool:
+    """True when a QT leaf can feed the fused quant_matmul path directly:
+    2D codes (tap_dim, cols) with one per-column scale — the layout COMQ
+    checkpoints store. fake_quantize_params trees (logical-rank codes,
+    per-row-per-channel scales) fall back to dequant-then-einsum."""
+    return is_qt(x) and x.codes.ndim == 2 and x.scale.ndim == 1
+
+
+def qt_linear(qt: QT, x2d: Array, out_dtype=None) -> Array:
+    """x2d: (M, K) · QT codes (K, N) through the dequant-fused GEMM —
+    backend-dispatched (Pallas on TPU, factored-jnp oracle on CPU), so
+    decode streams int4/int8 codes from HBM instead of bf16 weights."""
+    from repro.kernels import ops
+    y = ops.quant_matmul(x2d.astype(jnp.float32), qt.codes, qt.scale,
+                         qt.z_lo.astype(jnp.float32), bits=qt.bits,
+                         out_dtype=jnp.float32)
+    return y.astype(out_dtype if out_dtype is not None else x2d.dtype)
+
+
+# leaves whose apply sites (qkv_project / out_project / apply_mlp) know how
+# to consume a fused-layout QT directly
+FUSED_QT_LEAVES = frozenset(
+    {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"})
+
+
+def dequantize_qt_tree(tree, dtype=jnp.bfloat16, keep_fused: bool = False):
+    """Replace QT leaves with dense weights (called inside scan bodies).
+
+    keep_fused=True leaves QT leaves in place when (a) the projection code
+    consuming them is QT-aware (FUSED_QT_LEAVES) and (b) the layout feeds
+    quant_matmul (qt_fusable) — the packed-QT decode path."""
+    if not keep_fused:
+        return jax.tree_util.tree_map(
+            lambda x: x.dequant(dtype) if is_qt(x) else x, tree,
+            is_leaf=is_qt)
+
+    def walk(node, name=""):
+        if is_qt(node):
+            if name in FUSED_QT_LEAVES and qt_fusable(node):
+                return node
+            return node.dequant(dtype)
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, name) for v in node)
+        return node
+
+    return walk(tree)
 
 
 def fake_quantize_params(params, cfg, plan, bits: int = 4,
@@ -115,6 +200,62 @@ def fake_quantize_params(params, cfg, plan, bits: int = 4,
         return node
 
     return walk(params)
+
+
+def _qt_from_qtensors(ts, pack: bool = True, stacked: bool = True) -> QT:
+    """Stack per-layer pipeline QTensors (offset-binary uint8 codes, f32
+    per-column scales, int32 zero-points) into one scan-able QT leaf."""
+    if stacked:
+        codes = jnp.stack([t["codes"] for t in ts])
+        scale = jnp.stack([t["scale"] for t in ts])
+        z_lo = jnp.stack([t["z_lo"] for t in ts])
+        shape = (len(ts), *ts[0]["shape"])
+    else:
+        codes = ts[0]["codes"]
+        scale = ts[0]["scale"]
+        z_lo = ts[0]["z_lo"]
+        shape = tuple(ts[0]["shape"])
+    bits = 8
+    if pack and codes.shape[-1] % 2 == 0 and int(jnp.max(codes)) < 16:
+        codes = pack_int4(codes)
+        bits = 4
+    return QT(codes, scale, z_lo, shape, bits)
+
+
+def serving_params(qparams, cfg, *, pack: bool = True):
+    """Fold a quantize_model output (__qlayers__ QTensor side table) into a
+    stacked params tree with QT leaves — the *packed* serving form. Unlike
+    `materialize` no dense weights are ever built: prefill/decode dequantize
+    (or quant_matmul-fuse) per layer inside the compiled scan, so HBM holds
+    int4/int8 codes end-to-end."""
+    params = {k: v for k, v in qparams.items() if k != "__qlayers__"}
+    table = qparams.get("__qlayers__", {})
+    for k, v in list(params.items()):
+        if is_qtensor(v):
+            params[k] = _qt_from_qtensors([v], pack=pack, stacked=False)
+    if not table:
+        return params
+    if cfg.family == "vlm":
+        raise NotImplementedError(
+            "packed-QT serving covers homogeneous stacks; materialize() "
+            "the VLM group table instead")
+    per_layer = [table[k] for k in sorted(table, key=int)]
+
+    def walk(stacked, slices):
+        if is_qtensor(slices[0]):
+            return _qt_from_qtensors(slices, pack=pack)
+        if isinstance(slices[0], dict):
+            return {k: walk(None if stacked is None else stacked[k],
+                            [s[k] for s in slices])
+                    for k in slices[0]}
+        if stacked is not None:
+            return stacked   # dense leaf: keep the original stacked array
+        # stripped checkpoint (ckpt.strip_for_serving): restack the dense
+        # leaves from the table's per-layer slices
+        return jnp.stack(slices)
+
+    params["layers"] = walk(params.get("layers"), per_layer)
+    return params
 
 
 def qt_param_specs(qparams, dense_specs):

@@ -680,26 +680,48 @@ def materialize(qparams, cfg) -> Any:
     if cfg.family == "vlm":
         from repro.models.model import _vlm_group_counts
         g, spg = _vlm_group_counts(cfg)
-        self_p = params["groups"]["self"]
-        cross_p = params["groups"]["cross"]
-        for gi in range(g):
-            for si in range(spg):
-                deq = dequantize_tree(table[f"self_{gi}_{si}"])
-                self_p = jax.tree_util.tree_map(
-                    lambda a, s: a.at[gi, si].set(s.astype(a.dtype)),
-                    self_p, deq)
-            deq = dequantize_tree(table[f"cross_{gi}"])
+        if "groups" in params:
+            self_p = params["groups"]["self"]
+            cross_p = params["groups"]["cross"]
+            for gi in range(g):
+                for si in range(spg):
+                    deq = dequantize_tree(table[f"self_{gi}_{si}"])
+                    self_p = jax.tree_util.tree_map(
+                        lambda a, s: a.at[gi, si].set(s.astype(a.dtype)),
+                        self_p, deq)
+                deq = dequantize_tree(table[f"cross_{gi}"])
+                cross_p = jax.tree_util.tree_map(
+                    lambda a, s: a.at[gi].set(s.astype(a.dtype)),
+                    cross_p, deq)
+        else:
+            # stripped checkpoint (ckpt.strip_for_serving): rebuild the
+            # (G, spg, ...) / (G, ...) stacks from the table
+            self_rows = [
+                jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[dequantize_tree(table[f"self_{gi}_{si}"])
+                      for si in range(spg)])
+                for gi in range(g)]
+            self_p = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                            *self_rows)
             cross_p = jax.tree_util.tree_map(
-                lambda a, s: a.at[gi].set(s.astype(a.dtype)), cross_p, deq)
+                lambda *xs: jnp.stack(xs),
+                *[dequantize_tree(table[f"cross_{gi}"]) for gi in range(g)])
         params = dict(params)
         params["groups"] = {"self": self_p, "cross": cross_p}
         return params
-    layers = params["layers"]
-    for key, lp_q in table.items():
-        l = int(key)
-        deq = dequantize_tree(lp_q)
-        layers = jax.tree_util.tree_map(
-            lambda a, s: a.at[l].set(s.astype(a.dtype)), layers, deq)
+    if "layers" in params:
+        layers = params["layers"]
+        for key, lp_q in table.items():
+            l = int(key)
+            deq = dequantize_tree(lp_q)
+            layers = jax.tree_util.tree_map(
+                lambda a, s: a.at[l].set(s.astype(a.dtype)), layers, deq)
+    else:
+        # stripped checkpoint (ckpt.strip_for_serving): rebuild the stack
+        # from the table (it carries every per-layer leaf, dense included)
+        per = [dequantize_tree(table[k]) for k in sorted(table, key=int)]
+        layers = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
     params = dict(params)
     params["layers"] = layers
     if is_qtensor(params.get("unembed", None)):

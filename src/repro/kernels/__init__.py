@@ -5,6 +5,8 @@
   fused `comq_panel_dq` variant also emits the scaled code delta ΔW that
   drives the blocked solver's trailing update (DESIGN.md §3.2–3.3)
 - flash_attention: block-causal flash with GQA index maps (train/prefill)
+- paged_attention: decode attention over a block-table KV page pool with
+  scalar-prefetched page indexing (continuous-batching serve; DESIGN §5.1)
 
 Each <name>.py holds the pl.pallas_call + BlockSpec; ops.py the jit'd
 wrappers; ref.py the pure-jnp oracles used by the shape/dtype sweep tests.

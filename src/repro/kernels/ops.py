@@ -19,6 +19,7 @@ from repro.kernels import ref
 from repro.kernels.comq_panel import (comq_panel_dq_pallas,
                                       comq_panel_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
 
 Array = jax.Array
@@ -77,6 +78,22 @@ def comq_panel_dq(h_bb: Array, s0: Array, qf: Array, delta: Array,
                                 jnp.asarray(z_lo, jnp.float32),
                                 jnp.asarray(z_hi, jnp.float32), hdiag,
                                 interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "mode"))
+def paged_attention(q: Array, k_pool: Array, v_pool: Array,
+                    block_tables: Array, lengths: Array, *,
+                    window: int = 0, mode: Optional[str] = None) -> Array:
+    """Decode attention over a paged KV pool (serve/kv_cache.py layout):
+    q (B, Hp, hd) single query token per slot; block_tables (B, MAXB)
+    physical page ids; lengths (B,) valid tokens (0 = inactive slot)."""
+    mode = resolve_mode(mode)
+    if mode == "xla":
+        return ref.paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                       lengths, window=window).astype(q.dtype)
+    return paged_attention_pallas(q, k_pool, v_pool, block_tables, lengths,
+                                  window=window,
+                                  interpret=(mode == "interpret"))
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: paged decode attention over a block-table KV pool.
+
+One query token per slot attends over that slot's KV blocks. The pool is
+(num_blocks, block_size, KV, hd) in HBM; each slot owns a row of the block
+table mapping logical block i -> physical block id. The grid is
+(batch, blocks_per_slot) with the block table and per-slot lengths passed
+as scalar-prefetch operands, so the K/V BlockSpec index maps read the
+table and DMA exactly the pages a slot references — non-contiguous pages
+stream HBM->VMEM with no gather materialization (guide: paged attention,
+§8-10). Online-softmax state (m, l, acc) lives in VMEM scratch; blocks
+past a slot's length are skipped with `pl.when` (zero MXU work), and an
+inactive slot (length 0) produces exact zeros.
+
+GQA is expressed by reshaping q to (KV, G, hd) — requires Hp % KV == 0
+(every production config after TP head padding; the hymba 5-kv case uses
+the XLA gather fallback in models/attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, bs: int, n_blocks: int, scale: float, window: int,
+            n_kv: int, group: int):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    H = n_kv * group
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    @pl.when(i * bs < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32).reshape(n_kv, group, -1)
+        k = k_ref[0].astype(jnp.float32)              # (bs, KV, hd)
+        s = jnp.einsum("kgh,skh->kgs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = i * bs + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (n_kv, group, bs), 2)
+        mask = kpos < length
+        if window > 0:   # query sits at position length-1
+            mask = jnp.logical_and(mask, (length - 1) - kpos < window)
+        s = jnp.where(mask, s, NEG_INF).reshape(H, bs)
+        m_prev = m_ref[...]                           # (H, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jnp.einsum("kgs,skh->kgh", p.reshape(n_kv, group, bs), v,
+                        preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv.reshape(H, -1)
+        m_ref[...] = m_new
+
+    @pl.when(i == n_blocks - 1)
+    def _epilogue():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q: Array, k_pool: Array, v_pool: Array,
+                           block_tables: Array, lengths: Array, *,
+                           window: int = 0,
+                           interpret: bool = False) -> Array:
+    """q: (B, Hp, hd); k_pool/v_pool: (NB, BS, KV, hd); block_tables:
+    (B, MAXB) int32 physical block ids; lengths: (B,) valid tokens per slot
+    (0 = inactive -> zero output). Returns (B, Hp, hd) in q.dtype."""
+    B, H, hd = q.shape
+    NB, BS, KV, _ = k_pool.shape
+    MAXB = block_tables.shape[1]
+    assert H % KV == 0, "pallas paged kernel needs grouped GQA (Hp % KV == 0)"
+    group = H // KV
+    scale = 1.0 / float(hd) ** 0.5
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, MAXB),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, i, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, BS, KV, hd),
+                         lambda b, i, bt, ln: (bt[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, BS, KV, hd),
+                         lambda b, i, bt, ln: (bt[b, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, i, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bs=BS, n_blocks=MAXB, scale=scale,
+                          window=window, n_kv=KV, group=group),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)

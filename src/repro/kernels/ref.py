@@ -20,6 +20,34 @@ def quant_matmul_ref(x: Array, codes_u: Array, scale: Array, z_lo: Array,
     return (x.astype(jnp.float32) @ w).astype(out_dtype)
 
 
+def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array,
+                        block_tables: Array, lengths: Array, *,
+                        window: int = 0) -> Array:
+    """q: (B, H, hd); k_pool/v_pool: (NB, BS, KV, hd); block_tables:
+    (B, MAXB); lengths: (B,). Pure-XLA oracle: gather the slot's pages into
+    a contiguous (B, MAXB·BS, KV, hd) view, then masked softmax attention.
+    Inactive slots (length 0) return exact zeros, matching the kernel."""
+    B, H, hd = q.shape
+    NB, BS, KV, _ = k_pool.shape
+    S = block_tables.shape[1] * BS
+    idx = (block_tables[:, :, None] * BS
+           + jnp.arange(BS, dtype=jnp.int32)[None, None]).reshape(B, S)
+    kg = k_pool.reshape(NB * BS, KV, hd)[idx].astype(jnp.float32)
+    vg = v_pool.reshape(NB * BS, KV, hd)[idx].astype(jnp.float32)
+    g = H // KV
+    qg = q.astype(jnp.float32).reshape(B, KV, g, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, kg) * scale
+    kpos = jnp.arange(S, dtype=jnp.int32)[None]
+    mask = kpos < lengths[:, None]
+    if window > 0:
+        mask &= (lengths[:, None] - 1) - kpos < window
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where((lengths > 0)[:, None, None, None], p, 0.0)
+    return jnp.einsum("bkgs,bskh->bkgh", p, vg).reshape(B, H, hd)
+
+
 def comq_panel_ref(h_bb: Array, s0: Array, qf: Array, delta: Array,
                    z_lo: Array, z_hi: Array, hdiag: Array) -> Array:
     """Intra-panel COMQ sweep oracle — delegates to the core reference."""

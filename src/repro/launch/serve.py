@@ -1,23 +1,56 @@
-"""Serving launcher: batched generation from a (optionally COMQ-quantized)
-checkpoint or a fresh init.
+"""Serving launcher: continuous-batching generation from a (optionally
+COMQ-quantized, optionally packed-on-disk) checkpoint or a fresh init.
 
+    # quantize, save the packed checkpoint, serve packed (no materialize)
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-        --quantize --bits 4 --num-requests 4 --max-new 16
+        --quantize --bits 4 --save-quantized /tmp/q.pkl \
+        --num-requests 4 --max-new 16 --mixed --stagger 2
+
+    # later runs start straight from the packed checkpoint
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+        --load-quantized /tmp/q.pkl --num-requests 4 --max-new 16
+
+`--engine paged` (default) drives serve.Runtime — paged KV cache, FCFS
+scheduler, mixed prompt lengths, staggered arrivals. `--engine static`
+keeps the equal-length Engine baseline. `--materialize` dequantizes to a
+dense tree first (the pre-runtime behavior); without it quantized params
+are served as a packed QT-leaf tree.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pickle
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt import (pack_tree, strip_for_serving, tree_bytes,
+                        unpack_tree)
 from repro.configs import get_config, get_smoke_config
-from repro.core import QuantSpec, materialize, quantize_model
-from repro.models import BuildPlan, init_params
-from repro.serve.engine import Engine
+from repro.core import (QuantSpec, materialize, quantize_model,
+                        serving_params)
+from repro.models import BuildPlan, count_params, init_params
+from repro.serve import Engine, Runtime, ServeConfig, blocks_for
+
+
+def _quantize(params, cfg, plan, bits: int):
+    key = jax.random.PRNGKey(0)
+    calib = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
+    ve = None
+    if cfg.family == "vlm":
+        ve = jax.random.normal(
+            key, (4, cfg.cross_attn.n_vision_tokens,
+                  cfg.cross_attn.vision_dim), jnp.bfloat16)
+    spec = QuantSpec(bits=bits, granularity="per_channel",
+                     lam=0.9, sweeps=3, order="greedy")
+    qparams, report = quantize_model(params, cfg, plan, calib, spec,
+                                     vision_embeds=ve)
+    print(f"quantized {len(report.layers)} projections; COMQ vs RTN "
+          f"reconstruction improvement {report.total_improvement():.1%}")
+    return qparams
 
 
 def main():
@@ -26,45 +59,143 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--bits", type=int, default=4)
+    ap.add_argument("--save-quantized", metavar="PATH", default=None,
+                    help="pack_tree the quantized tree to PATH (pickle)")
+    ap.add_argument("--load-quantized", metavar="PATH", default=None,
+                    help="serve from a packed quantized tree on disk "
+                         "instead of re-quantizing")
+    ap.add_argument("--materialize", action="store_true",
+                    help="dequantize to dense before serving (default: "
+                         "serve the packed QT tree)")
+    ap.add_argument("--engine", choices=("paged", "static"), default="paged")
     ap.add_argument("--num-requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--mixed", action="store_true",
+                    help="vary prompt lengths across requests")
+    ap.add_argument("--stagger", type=int, default=0, metavar="N",
+                    help="submit N requests up front, the rest one per "
+                         "decode step (arrival-over-time)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="0 -> sized for num_requests at full length")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     plan = BuildPlan(remat=False)
-    key = jax.random.PRNGKey(0)
-    params = init_params(key, cfg, plan)
+    if args.engine == "paged" and (cfg.attn_free or cfg.parallel_ssm_heads
+                                   or cfg.family == "vlm"):
+        print(f"note: {cfg.family}/attention-free archs use the dense-"
+              "cache static engine (paged runtime is attention-family "
+              "only; see ROADMAP)")
+        args.engine = "static"
+    # bf16 deployment baseline: 2 bytes/param regardless of master dtype
+    # (analytic count — no dense tree is allocated just to measure it)
+    bf16_bytes = 2 * count_params(cfg, plan)
 
-    if args.quantize:
-        calib = jax.random.randint(key, (4, 64), 0, cfg.vocab_size)
-        ve = None
-        if cfg.family == "vlm":
-            ve = jax.random.normal(
-                key, (4, cfg.cross_attn.n_vision_tokens,
-                      cfg.cross_attn.vision_dim), jnp.bfloat16)
-        spec = QuantSpec(bits=args.bits, granularity="per_channel",
-                         lam=0.9, sweeps=3, order="greedy")
-        qparams, report = quantize_model(params, cfg, plan, calib, spec,
-                                         vision_embeds=ve)
-        params = materialize(qparams, cfg)
-        print(f"quantized {len(report.layers)} projections; COMQ vs RTN "
-              f"reconstruction improvement {report.total_improvement():.1%}")
+    params = None
+    qparams = None
+    if args.load_quantized:
+        with open(args.load_quantized, "rb") as f:
+            blob = pickle.load(f)
+        saved_arch = blob.get("arch")
+        if saved_arch is not None and saved_arch != cfg.name:
+            raise SystemExit(
+                f"--load-quantized checkpoint is for arch {saved_arch!r}, "
+                f"not {cfg.name!r} (pass the matching --arch/--smoke)")
+        packed = jax.tree_util.tree_map(
+            lambda x: jnp.asarray(x) if isinstance(x, np.ndarray) else x,
+            blob["tree"])
+        print(f"loaded packed tree: {tree_bytes(packed):,} bytes vs "
+              f"{bf16_bytes:,} bf16 "
+              f"({bf16_bytes / max(tree_bytes(packed), 1):.1f}x smaller)")
+        qparams = unpack_tree(packed)
+    elif args.quantize:
+        params = init_params(jax.random.PRNGKey(0), cfg, plan)
+        qparams = _quantize(params, cfg, plan, args.bits)
 
-    engine = Engine(params, cfg, plan, max_len=args.prompt_len + args.max_new)
-    prompts = np.random.RandomState(0).randint(
-        0, cfg.vocab_size, (args.num_requests, args.prompt_len))
+    if qparams is not None and args.save_quantized:
+        packed = pack_tree(strip_for_serving(qparams))
+        host = jax.tree_util.tree_map(
+            lambda a: np.asarray(jax.device_get(a))
+            if hasattr(a, "dtype") else a, packed)
+        with open(args.save_quantized, "wb") as f:
+            pickle.dump({"tree": host, "bits": args.bits, "arch": cfg.name},
+                        f)
+        print(f"saved packed tree to {args.save_quantized}: "
+              f"{tree_bytes(packed):,} bytes vs {bf16_bytes:,} bf16 "
+              f"({bf16_bytes / tree_bytes(packed):.1f}x smaller)")
+
+    packed_serve = False
+    if qparams is not None:
+        if args.materialize or args.engine == "static":
+            params = materialize(qparams, cfg)
+        else:
+            params = serving_params(qparams, cfg)
+            packed_serve = True
+    elif params is None:
+        params = init_params(jax.random.PRNGKey(0), cfg, plan)
+
+    rs = np.random.RandomState(0)
+    lens = [args.prompt_len] * args.num_requests
+    if args.mixed:
+        if args.engine == "static":
+            print("note: --engine static only batches equal-length "
+                  "prompts; ignoring --mixed")
+        else:
+            lens = [max(4, int(l)) for l in
+                    rs.randint(args.prompt_len // 2, args.prompt_len + 1,
+                               args.num_requests)]
+    prompts = [rs.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in lens]
+
     t0 = time.time()
-    out = engine.generate_batch(prompts, max_new_tokens=args.max_new,
-                                temperature=args.temperature)
-    dt = time.time() - t0
-    print(json.dumps({
-        "arch": cfg.name, "requests": args.num_requests,
-        "new_tokens": int(out.size), "seconds": round(dt, 2),
-        "tok_per_s": round(out.size / dt, 1),
-        "sample": out[0, :8].tolist(),
-    }))
+    if args.engine == "static":
+        engine = Engine(params, cfg, plan,
+                        max_len=args.prompt_len + args.max_new)
+        out = engine.generate_batch(
+            np.stack(prompts),
+            max_new_tokens=args.max_new, temperature=args.temperature)
+        dt = time.time() - t0
+        print(json.dumps({
+            "arch": cfg.name, "engine": "static",
+            "requests": args.num_requests, "new_tokens": int(out.size),
+            "seconds": round(dt, 2),
+            "tok_per_s": round(out.size / dt, 1),
+            "sample": out[0, :8].tolist(),
+        }))
+        return
+
+    bucket = 1 << max(args.prompt_len - 1, 1).bit_length()
+    maxb = blocks_for(bucket + args.max_new, args.block_size)
+    num_blocks = args.num_blocks or maxb * min(args.num_requests, 8)
+    rt = Runtime(params, cfg, plan,
+                 ServeConfig(max_slots=min(args.num_requests, 8),
+                             block_size=args.block_size,
+                             num_blocks=num_blocks,
+                             buckets=(bucket // 4, bucket // 2, bucket),
+                             max_blocks_per_slot=maxb))
+    kw = dict(max_new_tokens=args.max_new, temperature=args.temperature,
+              top_k=args.top_k, top_p=args.top_p)
+    n_up_front = args.stagger if args.stagger > 0 else len(prompts)
+    reqs = [rt.submit(p, **kw) for p in prompts[:n_up_front]]
+    for p in prompts[n_up_front:]:
+        rt.step()
+        reqs.append(rt.submit(p, **kw))
+    metrics = rt.run()
+    metrics.update({
+        "arch": cfg.name, "engine": "paged",
+        "packed_qt": packed_serve,
+        "prompt_lens": lens,
+        "ttft_s": [round(t, 4) for t in metrics["ttft_s"]],
+        "sample": reqs[0].out_tokens[:8],
+    })
+    metrics = {k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in metrics.items()}
+    print(json.dumps(metrics))
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
 from repro.models.transformer import BuildPlan  # noqa: F401
 from repro.models.model import (count_params, count_params_analytic,  # noqa: F401
-                                decode_step, forward, init_cache,
-                                init_params, input_specs, lm_loss, prefill)
+                                decode_step, decode_step_paged, forward,
+                                init_cache, init_params, input_specs,
+                                lm_loss, prefill)

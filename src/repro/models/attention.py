@@ -88,13 +88,25 @@ def head_to_kv_map(n_heads: int, n_heads_padded: int, n_kv: int) -> Array:
 # projections
 # ---------------------------------------------------------------------------
 
+def _project_in(w, x: Array, cd) -> Array:
+    """(B, T, d) · w -> (B, T, H, hd); w dense (d, H, hd) or a fused-layout
+    QT whose codes are (d, H·hd) — routed through the dequant-fused GEMM
+    (repro.kernels.ops.quant_matmul) so decode streams int4/int8 codes."""
+    from repro.core.apply import is_qt, qt_linear, qt_out_dims
+    if is_qt(w):
+        B, T, d = x.shape
+        y = qt_linear(w, x.reshape(B * T, d), out_dtype=cd)
+        return y.reshape(B, T, *qt_out_dims(w))
+    return jnp.einsum("btd,dhk->bthk", x, w.astype(cd))
+
+
 def qkv_project(p: dict, x: Array, kv_x: Optional[Array] = None):
     """x: (B, T, d) -> q (B,T,Hp,hd), k/v (B,T,KV,hd)."""
     kv_x = x if kv_x is None else kv_x
     cd = x.dtype
-    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(cd))
-    k = jnp.einsum("btd,dhk->bthk", kv_x, p["wk"].astype(cd))
-    v = jnp.einsum("btd,dhk->bthk", kv_x, p["wv"].astype(cd))
+    q = _project_in(p["wq"], x, cd)
+    k = _project_in(p["wk"], kv_x, cd)
+    v = _project_in(p["wv"], kv_x, cd)
     if "bq" in p:
         q = q + p["bq"].astype(cd)
         k = k + p["bk"].astype(cd)
@@ -103,7 +115,13 @@ def qkv_project(p: dict, x: Array, kv_x: Optional[Array] = None):
 
 
 def out_project(p: dict, o: Array) -> Array:
-    return jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(o.dtype))
+    from repro.core.apply import is_qt, qt_linear, qt_out_dims
+    w = p["wo"]
+    if is_qt(w):
+        B, T, H, hd = o.shape
+        y = qt_linear(w, o.reshape(B * T, H * hd), out_dtype=o.dtype)
+        return y.reshape(B, T, *qt_out_dims(w))
+    return jnp.einsum("bthk,hkd->btd", o, w.astype(o.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -434,3 +452,69 @@ def decode_attend(q: Array, cache: KVCache, head_map: Array, *,
     return _dense_attention(q, k, v, head_map, causal=True,
                             window=window, q_positions=qp,
                             kv_positions=cache.pos, kv_valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (serve/kv_cache.py owns the pool + block tables; these are
+# the per-layer device ops the decode scan body runs)
+# ---------------------------------------------------------------------------
+
+def paged_insert(k_pool: Array, v_pool: Array, k_new: Array, v_new: Array,
+                 block_tables: Array, pos: Array):
+    """Write one token per slot into the paged pool.
+
+    k_pool/v_pool: (NB, BS, KV, hd); k_new/v_new: (B, 1, KV, hd);
+    block_tables: (B, MAXB) physical block ids; pos: (B,) absolute write
+    position, -1 = inactive slot (write dropped). Slots own disjoint blocks
+    so the B scattered rows never collide."""
+    NB, BS = k_pool.shape[0], k_pool.shape[1]
+    safe = jnp.maximum(pos, 0)
+    phys = jnp.take_along_axis(block_tables, (safe // BS)[:, None],
+                               axis=1)[:, 0]
+    dest = jnp.where(pos >= 0, phys * BS + safe % BS, NB * BS)  # OOB -> drop
+    kf = k_pool.reshape(NB * BS, *k_pool.shape[2:])
+    vf = v_pool.reshape(NB * BS, *v_pool.shape[2:])
+    kf = kf.at[dest].set(k_new[:, 0].astype(kf.dtype), mode="drop")
+    vf = vf.at[dest].set(v_new[:, 0].astype(vf.dtype), mode="drop")
+    return kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
+
+
+def paged_gather(pool: Array, block_tables: Array) -> Array:
+    """(NB, BS, KV, hd) + (B, MAXB) -> (B, MAXB·BS, KV, hd): a slot's pages
+    in logical order (row i holds position i)."""
+    NB, BS = pool.shape[0], pool.shape[1]
+    B, MAXB = block_tables.shape
+    idx = (block_tables[:, :, None] * BS
+           + jnp.arange(BS, dtype=jnp.int32)[None, None])
+    return pool.reshape(NB * BS, *pool.shape[2:])[idx.reshape(B, MAXB * BS)]
+
+
+def paged_decode_attend(q: Array, k_pool: Array, v_pool: Array,
+                        block_tables: Array, lengths: Array,
+                        head_map: Array, *, window: int = 0,
+                        mode: Optional[str] = None) -> Array:
+    """q: (B, 1, Hp, hd); lengths: (B,) valid tokens per slot (0 inactive).
+
+    Backend dispatch mirrors kernels/ops.py: on TPU (or forced interpret)
+    the Pallas paged kernel DMAs pages via scalar-prefetched block tables;
+    the default XLA path gathers the slot's pages into logical order and
+    runs the same `_dense_attention` the dense decode path uses — so paged
+    and dense decode agree bitwise for equal cache extents."""
+    H, KV = q.shape[2], k_pool.shape[2]
+    if mode is None:
+        from repro.kernels.ops import resolve_mode
+        mode = resolve_mode(None)
+    if mode in ("pallas", "interpret") and H % KV == 0:
+        from repro.kernels import ops
+        o = ops.paged_attention(q[:, 0], k_pool, v_pool, block_tables,
+                                lengths, window=window, mode=mode)
+        return o[:, None].astype(q.dtype)
+    kg = paged_gather(k_pool, block_tables).astype(q.dtype)
+    vg = paged_gather(v_pool, block_tables).astype(q.dtype)
+    B, S = kg.shape[0], kg.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    valid = kpos < lengths[:, None]
+    qp = jnp.maximum(lengths - 1, 0)[:, None].astype(jnp.int32)
+    return _dense_attention(q, kg, vg, head_map, causal=True, window=window,
+                            q_positions=qp, kv_positions=kpos,
+                            kv_valid=valid)

@@ -19,6 +19,17 @@ def init_mlp(key: Array, cfg, stack=()) -> dict:
             "w_down": dense_init(ks[2], (*stack, f, d))}
 
 
+def _ff(w, x: Array, cd) -> Array:
+    """(B, T, a) · w(a, b) -> (B, T, b); dense einsum or, for a fused-layout
+    QT leaf (2D codes, per-column scale), the dequant-fused GEMM."""
+    from repro.core.apply import is_qt, qt_linear
+    if is_qt(w):
+        B, T, a = x.shape
+        return qt_linear(w, x.reshape(B * T, a), out_dtype=cd).reshape(
+            B, T, -1)
+    return jnp.einsum("btd,df->btf", x, w.astype(cd))
+
+
 def apply_mlp(p: dict, x: Array, cfg, taps=None, constrain=None,
               quantize_cb=None) -> Array:
     cd = x.dtype
@@ -28,15 +39,15 @@ def apply_mlp(p: dict, x: Array, cfg, taps=None, constrain=None,
         if quantize_cb is not None:
             p = {**p, **quantize_cb("mlp_in")}
     if "w_gate" in p:
-        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(cd))
-        u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(cd))
+        g = _ff(p["w_gate"], x, cd)
+        u = _ff(p["w_up"], x, cd)
         h = act(g) * u
     else:
-        h = act(jnp.einsum("btd,df->btf", x, p["w_up"].astype(cd)))
+        h = act(_ff(p["w_up"], x, cd))
     if constrain is not None:
         h = constrain(h, "ffn_hidden")
     if taps is not None:
         taps["down_in"] = h       # feeds w_down
         if quantize_cb is not None:
             p = {**p, **quantize_cb("down_in")}
-    return jnp.einsum("btf,fd->btd", h, p["w_down"].astype(cd))
+    return _ff(p["w_down"], h, cd)

@@ -361,7 +361,10 @@ def decode_step(p: Params, cfg, plan: BuildPlan, cache, tokens: Array,
 
         def body(x, xs):
             lp, kv, st = xs
-            lp = dequantize_qt_tree(lp, dtype_of(cfg.compute_dtype))
+            # keep_fused: COMQ-layout QT projections stay packed and route
+            # through the dequant-fused quant_matmul (core/apply.qt_linear)
+            lp = dequantize_qt_tree(lp, dtype_of(cfg.compute_dtype),
+                                    keep_fused=True)
             x, kv, _, new_ssm = tfm.layer_decode(lp, x, cfg, plan, kv, pos,
                                                  ssm_state=st)
             return plan.constrain(x, "residual"), (kv, new_ssm)
@@ -377,6 +380,41 @@ def decode_step(p: Params, cfg, plan: BuildPlan, cache, tokens: Array,
     x = apply_norm(p["final_norm"], x, cfg)
     logits = unembed(p, cfg, plan, x)
     return logits[:, 0], new_cache
+
+
+def decode_step_paged(p: Params, cfg, plan: BuildPlan, pool, block_tables,
+                      tokens: Array, pos: Array):
+    """One continuous-batching decode step against a paged KV pool.
+
+    tokens: (B, 1) int32; pos: (B,) int32 absolute write positions per slot
+    (-1 = inactive slot: K/V write dropped, logits garbage the runtime
+    masks); pool: {"k","v"} of (L, NB, BS, KV, hd) pages (serve/kv_cache);
+    block_tables: (B, MAXB) physical page ids.
+
+    Unlike `decode_step`, every slot carries its own position — a mixed-
+    length, staggered-arrival batch decodes in one jitted program. Covers
+    the attention families (dense/MoE/GQA/SWA); attention-free, parallel-
+    SSM and VLM archs keep the dense-cache path."""
+    if cfg.attn_free or cfg.parallel_ssm_heads or cfg.family == "vlm":
+        raise NotImplementedError(
+            f"paged decode does not cover family={cfg.family!r} "
+            "(attention-free / ssm / vlm use the dense-cache decode_step)")
+    from repro.core.apply import dequantize_qt_tree
+    x = embed_tokens(p, cfg, plan, tokens)
+    cd = dtype_of(cfg.compute_dtype)
+
+    def body(x, xs):
+        lp, kl, vl = xs
+        lp = dequantize_qt_tree(lp, cd, keep_fused=True)
+        x, kl, vl = tfm.layer_decode_paged(lp, x, cfg, plan, kl, vl,
+                                           block_tables, pos)
+        return plan.constrain(x, "residual"), (kl, vl)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (p["layers"], pool["k"], pool["v"]))
+    from repro.models.common import apply_norm
+    x = apply_norm(p["final_norm"], x, cfg)
+    logits = unembed(p, cfg, plan, x)
+    return logits[:, 0], {"k": nk, "v": nv}
 
 
 # ---------------------------------------------------------------------------

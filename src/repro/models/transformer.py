@@ -27,7 +27,8 @@ from repro.models import ssm as ssm_mod
 from repro.models.attention import (KVCache, cache_insert, cache_prefill,
                                     decode_attend, flash_attention,
                                     head_to_kv_map, init_kv_cache,
-                                    out_project, qkv_project)
+                                    out_project, paged_decode_attend,
+                                    paged_insert, qkv_project)
 from repro.models.common import (Array, apply_norm, apply_rope, dense_init,
                                  norm_params, pad_to_multiple, zeros_init)
 
@@ -138,10 +139,13 @@ def _self_attention_full(p, x, cfg, plan, make_cache: bool, taps=None,
     cache = None
     if make_cache:
         B, T = x.shape[:2]
-        # SWA: always allocate the full window so decode can continue past
-        # the prompt without evicting in-window entries.
+        # SWA: allocate at least the full window so decode can continue
+        # past the prompt without evicting in-window entries. A larger
+        # prefill_cache_len (serving runtimes pad prompts to bucket
+        # lengths) also wins: right-pad rows must never ring-evict real
+        # in-window rows before the paged scatter drops them.
         if cfg.sliding_window:
-            clen = cfg.sliding_window
+            clen = max(cfg.sliding_window, plan.prefill_cache_len)
         else:
             clen = max(plan.prefill_cache_len, T)
         cache = init_kv_cache(B, clen, cfg.n_kv_heads,
@@ -288,6 +292,11 @@ def layer_decode(p: dict, x: Array, cfg, plan: BuildPlan, kv_cache, pos,
         s_out, new_ssm = ssm_mod.decode_ssm(p["ssm"], xn, cfg, ssm_state)
         a_out = 0.5 * (a_out + s_out)
     x = x + a_out
+    x = x + _decode_ffn(p, x, cfg, plan)
+    return x, kv_cache, None, new_ssm
+
+
+def _decode_ffn(p: dict, x: Array, cfg, plan: BuildPlan) -> Array:
     xn = apply_norm(p["ln2"], x, cfg)
     if cfg.moe is not None:
         m_out, _ = moe_mod.apply_moe(p["moe"], xn, cfg,
@@ -295,6 +304,32 @@ def layer_decode(p: dict, x: Array, cfg, plan: BuildPlan, kv_cache, pos,
                                      plan.moe_token_chunk,
                                      capacity_multiple=
                                      plan.moe_capacity_multiple)
-    else:
-        m_out = mlp_mod.apply_mlp(p["mlp"], xn, cfg)
-    return x + m_out, kv_cache, None, new_ssm
+        return m_out
+    return mlp_mod.apply_mlp(p["mlp"], xn, cfg)
+
+
+def layer_decode_paged(p: dict, x: Array, cfg, plan: BuildPlan,
+                       k_pool: Array, v_pool: Array, block_tables: Array,
+                       pos: Array):
+    """One decode step against the paged KV pool (serve/kv_cache.py).
+
+    x: (B, 1, d); k_pool/v_pool: this layer's (NB, BS, KV, hd) pages;
+    block_tables: (B, MAXB) physical page ids per slot; pos: (B,) absolute
+    write position per slot, -1 = inactive (write dropped, output garbage
+    that the runtime masks). Unlike `layer_decode`, positions are per-slot
+    vectors — slots sit at different sequence lengths (continuous batching).
+    Returns (x, k_pool, v_pool)."""
+    hp = plan.heads_padded(cfg)
+    hmap = head_to_kv_map(cfg.n_heads, hp, cfg.n_kv_heads)
+    xn = apply_norm(p["ln1"], x, cfg)
+    q, k, v = qkv_project(p["attn"], xn)
+    posb = jnp.maximum(pos, 0)[:, None]                   # (B, 1)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    k_pool, v_pool = paged_insert(k_pool, v_pool, k, v, block_tables, pos)
+    lengths = jnp.maximum(pos + 1, 0)
+    o = paged_decode_attend(q, k_pool, v_pool, block_tables, lengths, hmap,
+                            window=cfg.sliding_window)
+    x = x + attn_mod.out_project(p["attn"], o)
+    x = x + _decode_ffn(p, x, cfg, plan)
+    return x, k_pool, v_pool

@@ -1,14 +1,15 @@
-"""Batched serving engine: prefill + decode over a static slot batch.
+"""Static-slot batched engine: prefill + decode over equal-length prompts.
 
-The engine owns jitted `prefill` / `decode_step` closures and a slot table
-(continuous-batching-lite): finished sequences free their slot, new requests
-prefill into it. Works with dense params or COMQ-quantized params (pass the
-materialized tree, or enable the fused quant_matmul path on TPU).
+Kept as the equivalence baseline for the continuous-batching `Runtime`
+(serve/runtime.py): dense per-slot `max_len` KV cache, one shared scalar
+position, equal-length right-aligned prompts. The request dataclass lives
+in serve/scheduler.py (`Request`) and is shared by both.
+
+Works with dense params or COMQ-quantized params: pass the materialized
+tree, or a packed QT-leaf tree (`core/apply.serving_params`) — QT leaves
+dequantize (or quant_matmul-fuse) per layer inside the compiled step.
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,14 +17,6 @@ import numpy as np
 
 from repro.models.model import decode_step, init_cache, prefill
 from repro.serve.sampler import sample
-
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray              # (T,) int32
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    out_tokens: Optional[List[int]] = None
 
 
 class Engine:

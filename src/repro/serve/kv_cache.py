@@ -1,0 +1,107 @@
+"""Paged KV-cache pool: fixed-size pages + per-slot block tables.
+
+The dense engine allocates a (B, max_len) cache per slot — every slot pays
+for the longest possible sequence. The paged pool instead owns
+`num_blocks` pages of `block_size` tokens shared by all slots; a slot maps
+logical block i -> physical page via its block-table row, pages are
+allocated at admission and freed at completion, and attention walks the
+table (kernels/paged_attention.py Pallas kernel on TPU, gather fallback on
+XLA — models/attention.paged_decode_attend). Memory scales with the
+*live* tokens, not max_slots x max_len.
+
+Device layout (models/model.decode_step_paged scans layers over the pool):
+
+    pool["k"], pool["v"]: (L, num_blocks, block_size, KV, hd)
+    block_tables:         (max_slots, max_blocks_per_slot) int32
+    pos:                  (max_slots,) absolute next position, -1 inactive
+
+`BlockAllocator` is plain host state (the scheduler thread owns it); the
+jitted `write_prefill` scatters a prefilled dense cache's rows into the
+slot's pages (ring-aware: rows route by their absolute `pos`, so SWA
+prefill caches land on the right pages).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    """Pages needed to hold `tokens` positions."""
+    return max(1, math.ceil(tokens / block_size))
+
+
+def init_paged_cache(cfg, plan, num_blocks: int,
+                     block_size: int) -> Dict[str, Array]:
+    """Zeroed K/V page pools, stacked over layers for the decode scan."""
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, num_blocks, block_size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, plan.cache_dtype),
+            "v": jnp.zeros(shape, plan.cache_dtype)}
+
+
+def paged_cache_bytes(cfg, plan, num_blocks: int, block_size: int) -> int:
+    hd = cfg.resolved_head_dim
+    itemsize = jnp.dtype(plan.cache_dtype).itemsize
+    return 2 * cfg.n_layers * num_blocks * block_size * cfg.n_kv_heads \
+        * hd * itemsize
+
+
+class BlockAllocator:
+    """Host-side free list over the physical pages. No device state: the
+    pool itself never moves — allocation only decides which page ids a
+    slot's block-table row points at."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.peak_in_use = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None when exhausted (admission backpressure)."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b < 0 or b >= self.num_blocks:
+                raise ValueError(f"freeing unknown block {b}")
+            if b in self._free:
+                raise ValueError(f"double free of block {b}")
+        self._free.extend(blocks)
+
+
+def write_prefill(pool: Dict[str, Array], k_seq: Array, v_seq: Array,
+                  pos_row: Array, table_row: Array) -> Dict[str, Array]:
+    """Scatter one request's prefilled K/V rows into its pages.
+
+    k_seq/v_seq: (L, S, KV, hd) from the dense prefill cache; pos_row: (S,)
+    absolute positions (-1 = unwritten row, dropped); table_row: (MAXB,)
+    physical page ids. Rows route by position — block pos//BS, offset
+    pos%BS — so ring-buffer (SWA) prefill caches scatter correctly."""
+    k_pool, v_pool = pool["k"], pool["v"]
+    L, NB, BS = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    safe = jnp.maximum(pos_row, 0)
+    phys = table_row[safe // BS]
+    dest = jnp.where(pos_row >= 0, phys * BS + safe % BS, NB * BS)
+    kf = k_pool.reshape(L, NB * BS, *k_pool.shape[3:])
+    vf = v_pool.reshape(L, NB * BS, *v_pool.shape[3:])
+    kf = kf.at[:, dest].set(k_seq.astype(kf.dtype), mode="drop")
+    vf = vf.at[:, dest].set(v_seq.astype(vf.dtype), mode="drop")
+    return {"k": kf.reshape(k_pool.shape), "v": vf.reshape(v_pool.shape)}

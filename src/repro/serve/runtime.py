@@ -1,0 +1,267 @@
+"""Continuous-batching serving runtime over the paged KV cache.
+
+The runtime ties together:
+
+* `serve/scheduler.py` — FCFS admission, prefill buckets, backpressure;
+* `serve/kv_cache.py` — the paged pool + block tables + host allocator;
+* `models/model.py::decode_step_paged` — one jitted decode program with
+  per-slot positions, so slots at different sequence lengths (mixed
+  lengths, staggered arrivals) share every decode step;
+* `serve/sampler.py::sample_batch` — per-slot sampling settings as arrays.
+
+Compile surface is bounded and static: one prefill program per bucket
+length, one scatter program per prefill-cache extent, one decode program,
+one sampler program. The pool is donated through prefill-writes and decode
+steps so XLA updates pages in place.
+
+Params may be dense, materialized, or a *packed* QT-leaf tree
+(`core/apply.serving_params`) — QT projections stay packed in HBM and
+route through the dequant-fused quant_matmul inside the decode scan; no
+`materialize` call anywhere on the serve path.
+
+Host/device traffic per decode step: one (B,) token fetch (required to
+stream tokens and retire finished requests) and the small int32 control
+arrays (tokens, positions, block tables) going down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import decode_step_paged, forward
+from repro.serve.kv_cache import (BlockAllocator, init_paged_cache,
+                                  paged_cache_bytes, write_prefill)
+from repro.serve.sampler import sample_batch
+from repro.serve.scheduler import DEFAULT_BUCKETS, Request, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 4
+    block_size: int = 16
+    num_blocks: int = 64
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS
+    max_blocks_per_slot: Optional[int] = None
+    rng_seed: int = 0
+
+
+class Runtime:
+    """Continuous-batching runtime: submit() requests, run() to drain."""
+
+    def __init__(self, params, cfg, plan, serve_cfg: ServeConfig = None):
+        if cfg.attn_free or cfg.parallel_ssm_heads or cfg.family == "vlm":
+            raise NotImplementedError(
+                f"paged runtime does not cover family={cfg.family!r} / "
+                "attention-free / parallel-ssm archs — use serve.Engine")
+        if plan.cache_quant:
+            raise NotImplementedError(
+                "int8 KV quantization is dense-cache only for now "
+                "(ROADMAP open item); use serve.Engine")
+        self.params = params
+        self.cfg = cfg
+        self.plan = plan
+        sc = serve_cfg or ServeConfig()
+        self.serve_cfg = sc
+        self.rng = jax.random.PRNGKey(sc.rng_seed)
+
+        self.allocator = BlockAllocator(sc.num_blocks)
+        self.scheduler = Scheduler(sc.max_slots, self.allocator,
+                                   buckets=sc.buckets,
+                                   block_size=sc.block_size,
+                                   max_blocks_per_slot=sc.max_blocks_per_slot)
+        self.maxb = self.scheduler.max_blocks_per_slot
+        self.pool = init_paged_cache(cfg, plan, sc.num_blocks, sc.block_size)
+
+        B = sc.max_slots
+        # host-side decode state, one row per slot
+        self._bt = np.zeros((B, self.maxb), np.int32)
+        self._pos = np.full((B,), -1, np.int32)
+        self._tok = np.zeros((B,), np.int32)
+        self._temp = np.zeros((B,), np.float32)
+        self._topk = np.zeros((B,), np.int32)
+        self._topp = np.zeros((B,), np.float32)
+
+        self._prefill_cache: Dict[int, object] = {}
+        self._write_cache: Dict[int, object] = {}
+        self._decode = jax.jit(
+            lambda p, pool, bt, t, pos: decode_step_paged(
+                p, cfg, plan, pool, bt, t, pos),
+            donate_argnums=(1,))
+        self._sample = jax.jit(
+            lambda lg, k, t, tk, tp: sample_batch(
+                lg, k, temperature=t, top_k=tk, top_p=tp))
+        # all-greedy fast path: skips the (B, V) sort/softmax machinery
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        # run() metrics
+        self.steps = 0
+        self.decode_seconds = 0.0
+
+    # -- jitted closures (bounded: one per bucket / cache extent) ------------
+
+    def _prefill_fn(self, bucket: int):
+        fn = self._prefill_cache.get(bucket)
+        if fn is None:
+            cfg = self.cfg
+            # cache capacity >= bucket even for SWA archs: the right-pad
+            # rows must not ring-evict real in-window rows (the scatter
+            # drops the pads afterwards; attention masks by window)
+            plan = self.plan.replace(prefill_cache_len=bucket)
+
+            def prefill_full(p, t):
+                logits, _, cache = forward(p, cfg, plan, t, make_cache=True)
+                return logits, cache
+
+            fn = jax.jit(prefill_full)
+            self._prefill_cache[bucket] = fn
+        return fn
+
+    def _write_fn(self, cache_len: int):
+        fn = self._write_cache.get(cache_len)
+        if fn is None:
+            def write(pool, k_seq, v_seq, kv_pos, tlen, table_row):
+                # exclude right-pad rows: only positions < true length
+                pos_row = jnp.where((kv_pos >= 0) & (kv_pos < tlen),
+                                    kv_pos, -1)
+                return write_prefill(pool, k_seq, v_seq, pos_row, table_row)
+            fn = jax.jit(write, donate_argnums=(0,))
+            self._write_cache[cache_len] = fn
+        return fn
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 32,
+               temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
+               stream_cb=None) -> Request:
+        req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
+                      max_new_tokens=max_new_tokens, temperature=temperature,
+                      top_k=top_k, top_p=top_p, stream_cb=stream_cb)
+        return self.scheduler.submit(req)
+
+    # -- serving loop --------------------------------------------------------
+
+    def _admit_one(self, req: Request) -> None:
+        sched = self.scheduler
+        bucket = sched.bucket_for(req.prompt_len)
+        tlen = req.prompt_len
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :tlen] = req.prompt
+        logits, cache = self._prefill_fn(bucket)(self.params,
+                                                 jnp.asarray(tokens))
+        kv = cache["kv"]
+        table_row = np.zeros((self.maxb,), np.int32)
+        table_row[:len(req.blocks)] = req.blocks
+        table_row_j = jnp.asarray(table_row)
+        self.pool = self._write_fn(int(kv.k.shape[2]))(
+            self.pool, kv.k[:, 0], kv.v[:, 0], kv.pos[0, 0],
+            jnp.int32(tlen), table_row_j)
+        # first token comes straight from the prefill logits (TTFT token)
+        if req.temperature <= 0.0:
+            first = self._argmax(logits[:, tlen - 1])
+        else:
+            self.rng, key = jax.random.split(self.rng)
+            first = self._sample(
+                logits[:, tlen - 1],
+                key,
+                jnp.asarray([req.temperature], jnp.float32),
+                jnp.asarray([req.top_k], jnp.int32),
+                jnp.asarray([req.top_p], jnp.float32))
+        first = int(np.asarray(first)[0])
+        req.emit(first, time.time())
+        s = req.slot
+        self._bt[s] = table_row
+        self._pos[s] = tlen          # next decode writes the first token here
+        self._tok[s] = first
+        self._temp[s] = req.temperature
+        self._topk[s] = req.top_k
+        self._topp[s] = req.top_p
+        if len(req.out_tokens) >= req.max_new_tokens:  # max_new == 1
+            self._retire(req)
+
+    def _retire(self, req: Request) -> None:
+        s = req.slot
+        self.scheduler.release(req)
+        self._pos[s] = -1
+        self._bt[s] = 0
+        self._tok[s] = 0
+
+    def step(self) -> int:
+        """Admit what fits, then run one decode step for all active slots.
+        Returns the number of tokens emitted (prefill first-tokens
+        included)."""
+        emitted = 0
+        for req in self.scheduler.admit():
+            self._admit_one(req)
+            emitted += 1          # the prefill-sampled first token
+        running = dict(self.scheduler.running)
+        if not running:
+            return emitted
+        t0 = time.time()
+        logits, self.pool = self._decode(
+            self.params, self.pool, jnp.asarray(self._bt),
+            jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos))
+        if (self._temp > 0.0).any():
+            self.rng, key = jax.random.split(self.rng)
+            toks = np.asarray(self._sample(
+                logits, key, jnp.asarray(self._temp),
+                jnp.asarray(self._topk), jnp.asarray(self._topp)))
+        else:
+            toks = np.asarray(self._argmax(logits))
+        now = time.time()
+        self.steps += 1
+        self.decode_seconds += now - t0
+        for s, req in running.items():
+            req.emit(int(toks[s]), now)
+            emitted += 1
+            self._pos[s] += 1
+            self._tok[s] = int(toks[s])
+            if len(req.out_tokens) >= req.max_new_tokens:
+                self._retire(req)
+        return emitted
+
+    def run(self) -> Dict[str, object]:
+        """Drain the queue; returns aggregate + per-request metrics for
+        *this* call (tokens emitted and requests completed while run()
+        was draining — pre-run step() calls and earlier run()s are not
+        re-counted, so wall-clock rates stay honest)."""
+        t0 = time.time()
+        done_before = len(self.scheduler.completed)
+        steps_before = self.steps
+        new_tokens = 0
+        while not self.scheduler.idle:
+            new_tokens += self.step()
+        wall = time.time() - t0
+        done = self.scheduler.completed[done_before:]
+        itls = [dt for r in done for dt in r.itl]
+        return {
+            "requests": len(done),
+            "new_tokens": new_tokens,
+            "wall_seconds": wall,
+            "tok_per_s": new_tokens / max(wall, 1e-9),
+            "ttft_s": [r.ttft for r in done],
+            "itl_mean_s": float(np.mean(itls)) if itls else 0.0,
+            "decode_steps": self.steps - steps_before,
+            "cache_blocks": self.allocator.num_blocks,
+            "cache_peak_blocks": self.allocator.peak_in_use,
+            "cache_peak_occupancy": (self.allocator.peak_in_use
+                                     / self.allocator.num_blocks),
+            "cache_bytes": paged_cache_bytes(
+                self.cfg, self.plan, self.serve_cfg.num_blocks,
+                self.serve_cfg.block_size),
+        }
+
+    # -- convenience ---------------------------------------------------------
+
+    def generate(self, prompts, max_new_tokens: int = 32, **kw
+                 ) -> List[np.ndarray]:
+        """Submit `prompts` (list of 1-D int arrays) FCFS, drain, and return
+        each request's tokens in submission order."""
+        reqs = [self.submit(p, max_new_tokens=max_new_tokens, **kw)
+                for p in prompts]
+        self.run()
+        return [np.asarray(r.out_tokens, np.int32) for r in reqs]

@@ -1,17 +1,66 @@
-"""Token samplers (pure functions over logits)."""
+"""Token samplers (pure functions over logits).
+
+`sample` keeps the engine's static-config API (python-scalar temperature /
+top_k / top_p); `sample_batch` is the continuous-batching form — per-slot
+temperature/top_k/top_p arrive as (B,) arrays so one jitted program serves
+a batch of requests with heterogeneous sampling settings (no recompile per
+mix)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+NEG = -1e30
 
-def sample(logits, rng, *, temperature: float = 0.0, top_k: int = 0):
-    """logits: (B, V) -> (B,) int32."""
+
+def _nucleus_mask(scaled, top_k, top_p):
+    """Mask (B, V) logits outside per-row top-k / top-p; top_k<=0 and
+    top_p<=0 disable the respective filter. The most-likely token always
+    survives."""
+    B, V = scaled.shape
+    order = jnp.argsort(-scaled, axis=-1)           # descending
+    sorted_l = jnp.take_along_axis(scaled, order, axis=-1)
+    rank = jnp.arange(V, dtype=jnp.int32)[None]
+    k_eff = jnp.where(top_k > 0, top_k, V).astype(jnp.int32)[:, None]
+    keep = rank < k_eff
+    probs = jax.nn.softmax(sorted_l, axis=-1)
+    csum_excl = jnp.cumsum(probs, axis=-1) - probs  # mass *before* token
+    p_eff = jnp.where(top_p > 0, top_p, 1.0)[:, None]
+    keep &= csum_excl < p_eff
+    keep = keep.at[:, 0].set(True)
+    masked_sorted = jnp.where(keep, sorted_l, NEG)
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(masked_sorted, inv, axis=-1)
+
+
+def sample_batch(logits, rng, *, temperature, top_k, top_p):
+    """logits: (B, V); temperature/top_p: (B,) f32; top_k: (B,) int32.
+    Per-row: temperature<=0 -> greedy argmax; otherwise top-k/top-p-
+    filtered categorical. Returns (B,) int32."""
+    temperature = jnp.asarray(temperature, jnp.float32)
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature,
+                                                      1e-6)[:, None]
+    masked = _nucleus_mask(scaled, top_k, top_p)
+    drawn = jax.random.categorical(rng, masked, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(temperature <= 0.0, greedy, drawn).astype(jnp.int32)
+
+
+def sample(logits, rng, *, temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 0.0):
+    """logits: (B, V) -> (B,) int32. Static (python-scalar) config form."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
     if top_k > 0:
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[:, -1:]
-        logits = jnp.where(logits < cutoff, -1e30, logits)
+        logits = jnp.where(logits < cutoff, NEG, logits)
+    if top_p > 0.0:
+        B = logits.shape[0]
+        logits = _nucleus_mask(logits,
+                               jnp.zeros((B,), jnp.int32),
+                               jnp.full((B,), top_p, jnp.float32))
     return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

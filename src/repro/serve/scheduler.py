@@ -1,0 +1,161 @@
+"""FCFS continuous-batching scheduler: admission, bucketing, backpressure.
+
+Host-side policy only — no device arrays. The runtime asks the scheduler
+which queued requests can start *now*; a request is admissible when a
+decode slot is free AND the block allocator can reserve every page the
+request will ever need (prompt + max_new tokens). Reserving the full
+lifetime up front keeps the system deadlock-free without preemption: an
+admitted request always runs to completion. When the pool is exhausted the
+queue simply waits (cache-exhaustion backpressure) and drains FCFS as
+completions free pages.
+
+Prompts are padded to a small static set of bucket lengths so the jitted
+prefill closures recompile at most once per bucket (right-padding: causal
+attention makes the prefix K/V and the last-prompt-token logits exact; pad
+rows are never copied into the paged pool).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.kv_cache import BlockAllocator, blocks_for
+
+DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512)
+
+
+@dataclasses.dataclass
+class Request:
+    """A generation request and its full lifecycle record (absorbs the old
+    serve/engine.py Request, whose out_tokens were never written)."""
+    prompt: np.ndarray                  # (T,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 0.0
+    stream_cb: Optional[Callable[["Request", int], None]] = None
+    # filled by scheduler/runtime
+    rid: int = -1
+    state: str = "queued"               # queued | running | done
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    itl: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    def emit(self, token: int, now: float) -> None:
+        if self.out_tokens:
+            self.itl.append(now - self._t_last)
+        else:
+            self.t_first_token = now
+        self._t_last = now
+        self.out_tokens.append(int(token))
+        if self.stream_cb is not None:
+            self.stream_cb(self, int(token))
+
+
+class Scheduler:
+    """FCFS queue + slot table + page accounting over a BlockAllocator."""
+
+    def __init__(self, max_slots: int, allocator: BlockAllocator,
+                 buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
+                 block_size: int = 16,
+                 max_blocks_per_slot: Optional[int] = None):
+        self.max_slots = max_slots
+        self.allocator = allocator
+        self.buckets = tuple(sorted(buckets))
+        self.block_size = block_size
+        self.max_blocks_per_slot = (
+            max_blocks_per_slot
+            if max_blocks_per_slot is not None
+            else blocks_for(self.buckets[-1] + 64, block_size))
+        self.queue: Deque[Request] = deque()
+        self.running: Dict[int, Request] = {}     # slot -> request
+        self._free_slots = list(range(max_slots - 1, -1, -1))
+        self._rid = itertools.count()
+        self.completed: List[Request] = []
+
+    # -- intake --------------------------------------------------------------
+
+    def bucket_for(self, prompt_len: int) -> int:
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(f"prompt length {prompt_len} exceeds the largest "
+                         f"prefill bucket {self.buckets[-1]}")
+
+    def lifetime_blocks(self, req: Request) -> int:
+        """Pages reserved at admission: every position the request can
+        ever write (prompt rows + max_new-1 decoded K/V rows; the final
+        sampled token is never fed back)."""
+        n = blocks_for(req.prompt_len + max(req.max_new_tokens - 1, 0),
+                       self.block_size)
+        if n > self.max_blocks_per_slot:
+            raise ValueError(
+                f"request needs {n} pages > max_blocks_per_slot="
+                f"{self.max_blocks_per_slot} (prompt {req.prompt_len} + "
+                f"max_new {req.max_new_tokens})")
+        return n
+
+    def submit(self, req: Request) -> Request:
+        req.rid = next(self._rid)
+        req.t_submit = time.time()
+        self.bucket_for(req.prompt_len)       # validate early
+        need = self.lifetime_blocks(req)
+        if need > self.allocator.num_blocks:
+            raise ValueError(
+                f"request needs {need} pages but the pool only has "
+                f"{self.allocator.num_blocks} — it could never be admitted")
+        self.queue.append(req)
+        return req
+
+    # -- admission -----------------------------------------------------------
+
+    def admit(self) -> List[Request]:
+        """Admit queued requests FCFS while a slot + pages are available.
+        Strict FCFS: the head of the queue blocks later (smaller) requests
+        — no head-of-line bypass, so admission order is arrival order."""
+        admitted = []
+        while self.queue and self._free_slots:
+            req = self.queue[0]
+            blocks = self.allocator.alloc(self.lifetime_blocks(req))
+            if blocks is None:       # pool exhausted: backpressure
+                break
+            self.queue.popleft()
+            req.blocks = blocks
+            req.slot = self._free_slots.pop()
+            req.state = "running"
+            self.running[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def release(self, req: Request) -> None:
+        """Return a finished request's slot and pages to the pool."""
+        assert self.running.get(req.slot) is req, "release of non-running"
+        del self.running[req.slot]
+        self.allocator.free(req.blocks)
+        req.blocks = []
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        req.state = "done"
+        req.t_done = time.time()
+        self.completed.append(req)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.running

@@ -34,6 +34,53 @@ def test_sampler_modes():
     assert set(np.asarray(s).tolist()) <= {1, 2}
 
 
+def test_sampler_top_p_restricts_support():
+    # token 1 carries ~98% of the mass: top_p=0.5 keeps only token 1
+    logits = jnp.tile(jnp.asarray([[0.0, 5.0, 1.0]]), (512, 1))
+    s = sample(logits, KEY, temperature=1.0, top_p=0.5)
+    assert set(np.asarray(s).tolist()) == {1}
+    # near-flat logits with top_p=0.6: exactly the two most likely survive
+    logits2 = jnp.tile(jnp.asarray([[2.0, 2.1, 1.9, -5.0]]), (512, 1))
+    s = sample(logits2, KEY, temperature=1.0, top_p=0.6)
+    assert set(np.asarray(s).tolist()) == {0, 1}
+
+
+def test_sampler_seeded_determinism():
+    from repro.serve.sampler import sample_batch
+    logits = jax.random.normal(jax.random.PRNGKey(3), (8, 32))
+    temp = jnp.asarray([0.0, 1.0, 0.7, 1.3, 0.0, 1.0, 1.0, 0.5])
+    top_k = jnp.asarray([0, 5, 0, 3, 0, 0, 8, 0], jnp.int32)
+    top_p = jnp.asarray([0.0, 0.0, 0.9, 0.5, 0.0, 0.3, 0.0, 0.95])
+    a = np.asarray(sample_batch(logits, KEY, temperature=temp, top_k=top_k,
+                                top_p=top_p))
+    b = np.asarray(sample_batch(logits, KEY, temperature=temp, top_k=top_k,
+                                top_p=top_p))
+    np.testing.assert_array_equal(a, b)          # same seed -> same draw
+    c = np.asarray(sample_batch(logits, jax.random.PRNGKey(9),
+                                temperature=temp, top_k=top_k, top_p=top_p))
+    assert (a != c).any()                        # seed actually matters
+    # greedy rows ignore the rng entirely
+    greedy = np.asarray(jnp.argmax(logits, -1))
+    for row in (0, 4):
+        assert a[row] == greedy[row] == c[row]
+
+
+def test_sample_batch_per_slot_filters():
+    from repro.serve.sampler import sample_batch
+    logits = jnp.tile(jnp.asarray([[0.0, 5.0, 1.0, 4.0]]), (256, 1))
+    temp = jnp.ones((256,))
+    # top_k=2 keeps {1, 3}; top_p tiny keeps only argmax {1}
+    ks = jax.random.split(KEY, 2)
+    s_k = np.asarray(sample_batch(logits, ks[0], temperature=temp,
+                                  top_k=jnp.full((256,), 2, jnp.int32),
+                                  top_p=jnp.zeros((256,))))
+    assert set(s_k.tolist()) <= {1, 3}
+    s_p = np.asarray(sample_batch(logits, ks[1], temperature=temp,
+                                  top_k=jnp.zeros((256,), jnp.int32),
+                                  top_p=jnp.full((256,), 0.05)))
+    assert set(s_p.tolist()) == {1}
+
+
 @pytest.mark.parametrize("bits", [8, 4])
 def test_qt_weights_exact_vs_dense_dequant(bits):
     cfg = get_smoke_config("mistral-large-123b").replace(
