@@ -25,6 +25,7 @@ MODULES = [
     ("t7_iterations", "benchmarks.ablation_iterations"),
     ("t8_fig3_order", "benchmarks.ablation_order"),
     ("t9_runtime", "benchmarks.runtime_compare"),
+    ("policy", "benchmarks.policy_compare"),
     ("serve", "benchmarks.serve_bench"),
     ("solver_shard", "benchmarks.shard_compare"),
     ("t10_lambda", "benchmarks.ablation_lambda"),

@@ -1,3 +1,4 @@
 from repro.ckpt.checkpoint import CheckpointManager  # noqa: F401
-from repro.ckpt.quantized import (pack_tree, strip_for_serving,  # noqa: F401
+from repro.ckpt.quantized import (pack_tree, policy_extra,  # noqa: F401
+                                  restore_policy, strip_for_serving,
                                   tree_bytes, unpack_tree)

@@ -1,34 +1,42 @@
 """Quantized checkpoint format: COMQ codes packed to their bit width.
 
-A quantized model checkpoint stores, per QTensor: packed codes (int4: two
-per byte), f32 scales and int32 zero-points — 4.25 bits/param at b=4 vs 16
-for bf16. `pack_tree`/`unpack_tree` convert between the runtime QTensor
-pytree and the storage form; CheckpointManager handles the IO.
+A quantized model checkpoint stores, per QTensor: packed codes (2-bit:
+four per byte, 3/4-bit: two per byte, 5..8-bit: one per byte), f32 scales
+and int32 zero-points — 4.25 bits/param at b=4 vs 16 for bf16, 2.25 at
+b=2 (see DESIGN.md §6 for the bytes-per-param table). The pack width
+comes from the QTensor's recorded `bits` (per-leaf mixed-precision
+policies make this vary leaf-to-leaf); code values are never inspected.
+`pack_tree`/`unpack_tree` convert between the runtime QTensor pytree and
+the storage form; CheckpointManager handles the IO. `policy_extra` builds
+the checkpoint `extra` metadata that records which policy produced the
+codes, so a served checkpoint is self-describing.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import is_qtensor
-from repro.core.quantizer import pack_int4, unpack_int4
+from repro.core.pipeline import is_qtensor, qtensor_bits
+from repro.core.quantizer import pack_codes, unpack_codes
 
 
 def pack_tree(tree):
     def walk(node):
         if is_qtensor(node):
+            bits = qtensor_bits(node)
             codes = node["codes"]
-            n_last = codes.shape[-1]
-            packed4 = (n_last % 2 == 0 and
-                       int(jnp.max(codes)) < 16)
+            packed, cpb = pack_codes(codes, bits)
             out = dict(node)
-            if packed4:
-                out["codes"] = pack_int4(codes)
-                out["packed4"] = True
-                out["unpacked_last"] = n_last
+            if cpb > 1:
+                out["codes"] = packed
+                out["packed_cpb"] = cpb
+                out["unpacked_last"] = codes.shape[-1]
+                if cpb == 2:
+                    # back-compat alias for pre-policy readers
+                    out["packed4"] = True
             return out
         if isinstance(node, dict):
             return {k: walk(v) for k, v in node.items()}
@@ -42,9 +50,19 @@ def unpack_tree(tree):
     def walk(node):
         if is_qtensor(node):
             out = dict(node)
-            if out.pop("packed4", False):
-                out["codes"] = unpack_int4(node["codes"])
+            cpb = out.pop("packed_cpb", None)
+            if cpb is None and out.get("packed4"):
+                cpb = 2            # pre-policy checkpoint
+            out.pop("packed4", None)
+            if cpb:
+                out["codes"] = unpack_codes(node["codes"], int(cpb))
                 out.pop("unpacked_last", None)
+            if "bits" not in out:
+                # pre-policy checkpoint: backfill the width its storage
+                # implies (nibble-packed => 4) so a re-pack or the packed
+                # serving path keeps the original density instead of
+                # defaulting to one code per byte
+                out["bits"] = 4 if cpb == 2 else 8
             return out
         if isinstance(node, dict):
             return {k: walk(v) for k, v in node.items()}
@@ -52,6 +70,29 @@ def unpack_tree(tree):
             return type(node)(walk(v) for v in node)
         return node
     return walk(tree)
+
+
+def policy_extra(policy=None, arch: Optional[str] = None,
+                 **kw) -> Dict[str, Any]:
+    """Checkpoint `extra` metadata for a quantized save: the arch plus the
+    serialized QuantPolicy (core.policy.policy_to_dict) so a restore can
+    rebuild the exact per-leaf bit assignment without re-measuring."""
+    out: Dict[str, Any] = dict(kw)
+    if arch is not None:
+        out["arch"] = arch
+    if policy is not None:
+        from repro.core.policy import as_policy, policy_to_dict
+        out["policy"] = policy_to_dict(as_policy(policy))
+    return out
+
+
+def restore_policy(extra: Dict[str, Any]):
+    """Inverse of policy_extra: the QuantPolicy a checkpoint was solved
+    under, or None for pre-policy checkpoints."""
+    if not extra or "policy" not in extra:
+        return None
+    from repro.core.policy import policy_from_dict
+    return policy_from_dict(extra["policy"])
 
 
 def strip_for_serving(qparams):

@@ -6,4 +6,7 @@ from repro.core.comq_hessian import (comq_quantize_blocked,  # noqa: F401
 from repro.core.apply import serving_params  # noqa: F401
 from repro.core.pipeline import (QuantReport, dequantize_tree,  # noqa: F401
                                  materialize, quantize_model)
+from repro.core.policy import (QuantPolicy, allocate_bits,  # noqa: F401
+                               as_policy, measure_bit_curves, parse_policy,
+                               policy_from_budget)
 from repro.core.quantizer import QuantSpec  # noqa: F401

@@ -9,33 +9,43 @@ codes into a 4× reduction of the decode memory-roofline term (§Perf).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.pipeline import is_qtensor
-from repro.core.quantizer import pack_int4, unpack_int4
+from repro.core.pipeline import is_qtensor, qtensor_bits
+from repro.core.quantizer import pack_codes, unpack_codes
 
 Array = jax.Array
 
 
+def _default_cpb(bits: int) -> int:
+    """Historical storage rule for QTs built before mixed precision:
+    4-bit codes arrived nibble-packed, everything else one-per-byte."""
+    return 2 if bits == 4 else 1
+
+
 class QT:
-    """Quantized tensor: codes (uint8, possibly int4-packed), per-channel
-    scale + zero-point; static logical shape."""
+    """Quantized tensor: codes (uint8, packed `cpb` codes per byte),
+    per-channel scale + zero-point; static logical shape + bit width.
+
+    `bits` is the *logical* width of the codes; `cpb` the achieved storage
+    density (quantizer.codes_per_byte — producers fall back to cpb=1 when
+    the last dim doesn't align to the pack width), so a mixed 2/3/4/8-bit
+    tree is self-describing without inspecting code values."""
 
     def __init__(self, codes, scale, z_lo, shape: Tuple[int, ...],
-                 bits: int):
+                 bits: int, cpb: Optional[int] = None):
         self.codes = codes
         self.scale = scale
         self.z_lo = z_lo
         self.shape = tuple(shape)
         self.bits = int(bits)
+        self.cpb = _default_cpb(self.bits) if cpb is None else int(cpb)
 
     def dequant(self, dtype=jnp.bfloat16) -> Array:
-        u = self.codes
-        if self.bits == 4:
-            u = unpack_int4(u)
+        u = unpack_codes(self.codes, self.cpb)
         s, z = self.scale, self.z_lo
         if u.ndim == s.ndim + 1:   # per-channel scale over the last dim
             s = s[..., None, :]
@@ -53,11 +63,11 @@ class QT:
 
 
 def _qt_flatten(qt: QT):
-    return (qt.codes, qt.scale, qt.z_lo), (qt.shape, qt.bits)
+    return (qt.codes, qt.scale, qt.z_lo), (qt.shape, qt.bits, qt.cpb)
 
 
 def _qt_unflatten(aux, children):
-    return QT(*children, shape=aux[0], bits=aux[1])
+    return QT(*children, shape=aux[0], bits=aux[1], cpb=aux[2])
 
 
 jax.tree_util.register_pytree_node(QT, _qt_flatten, _qt_unflatten)
@@ -65,6 +75,34 @@ jax.tree_util.register_pytree_node(QT, _qt_flatten, _qt_unflatten)
 
 def is_qt(x) -> bool:
     return isinstance(x, QT)
+
+
+class SegmentedLayers:
+    """A stacked-layer tree split into contiguous per-bit-width scan
+    groups: segment s is a homogeneous stacked subtree covering
+    `sizes[s]` consecutive layers, so mixed-bit serving trees keep every
+    segment's QT codes packed at their own width while the model runs one
+    `lax.scan` per segment (models/model.py::scan_layers). Registered as
+    a pytree node — it jits/donates/shards like the plain stacked tree."""
+
+    def __init__(self, segments: Tuple[Any, ...], sizes: Tuple[int, ...]):
+        assert len(segments) == len(sizes) and len(segments) > 0
+        self.segments = tuple(segments)
+        self.sizes = tuple(int(s) for s in sizes)
+
+    @property
+    def n_layers(self) -> int:
+        return sum(self.sizes)
+
+
+jax.tree_util.register_pytree_node(
+    SegmentedLayers,
+    lambda s: (s.segments, s.sizes),
+    lambda sizes, segments: SegmentedLayers(tuple(segments), sizes))
+
+
+def is_segmented(x) -> bool:
+    return isinstance(x, SegmentedLayers)
 
 
 def _suffix_shape(shape, size):
@@ -93,7 +131,7 @@ def qt_out_dims(qt: QT):
     to (1, hd), not (hd,), while a (1, d, H, hd) single-layer stack still
     resolves to (H, hd). Longest valid suffix wins."""
     import math
-    n = qt.codes.shape[-1] * (2 if qt.bits == 4 else 1)
+    n = qt.codes.shape[-1] * qt.cpb
     k = qt.codes.shape[0]
     shp = qt.shape
     for i in range(len(shp)):               # longest suffix first
@@ -119,7 +157,7 @@ def qt_linear(qt: QT, x2d: Array, out_dtype=None) -> Array:
     from repro.kernels import ops
     y = ops.quant_matmul(x2d.astype(jnp.float32), qt.codes, qt.scale,
                          qt.z_lo.astype(jnp.float32), bits=qt.bits,
-                         out_dtype=jnp.float32)
+                         cpb=qt.cpb, out_dtype=jnp.float32)
     return y.astype(out_dtype if out_dtype is not None else x2d.dtype)
 
 
@@ -174,15 +212,14 @@ def fake_quantize_params(params, cfg, plan, bits: int = 4,
             u = (q - z_lo).astype(jnp.uint8)
             return u, delta, z_lo
         us, deltas, zs = jax.vmap(one)(w2)
-        if bits == 4:
-            us = pack_int4(us)
+        us, cpb = pack_codes(us, bits)
         if not lead:
             us, deltas, zs = us[0], deltas[0], zs[0]
         else:
             us = us.reshape(*lead, *us.shape[1:])
             deltas = deltas.reshape(*lead, *deltas.shape[1:])
             zs = zs.reshape(*lead, *zs.shape[1:])
-        return QT(us, deltas, zs, shape, bits)
+        return QT(us, deltas, zs, shape, bits, cpb=cpb)
 
     quantizable = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
                    "w_r", "w_k", "w_v", "w_g", "w_o", "w_in", "w_out",
@@ -204,7 +241,17 @@ def fake_quantize_params(params, cfg, plan, bits: int = 4,
 
 def _qt_from_qtensors(ts, pack: bool = True, stacked: bool = True) -> QT:
     """Stack per-layer pipeline QTensors (offset-binary uint8 codes, f32
-    per-column scales, int32 zero-points) into one scan-able QT leaf."""
+    per-column scales, int32 zero-points) into one scan-able QT leaf.
+
+    The pack width comes from the QTensors' recorded `bits` — never from
+    inspecting code values (the old `max(codes) < 16` probe forced a host
+    sync per leaf and silently nibble-packed 8-bit solves whose codes
+    happened to stay small). All stacked QTensors carry the same bits by
+    construction: serving_params groups mixed-bit tables into homogeneous
+    segments before stacking."""
+    bits = qtensor_bits(ts[0])
+    assert all(qtensor_bits(t) == bits for t in ts), \
+        "cannot stack QTensors of different bit widths into one QT"
     if stacked:
         codes = jnp.stack([t["codes"] for t in ts])
         scale = jnp.stack([t["scale"] for t in ts])
@@ -215,11 +262,28 @@ def _qt_from_qtensors(ts, pack: bool = True, stacked: bool = True) -> QT:
         scale = ts[0]["scale"]
         z_lo = ts[0]["z_lo"]
         shape = tuple(ts[0]["shape"])
-    bits = 8
-    if pack and codes.shape[-1] % 2 == 0 and int(jnp.max(codes)) < 16:
-        codes = pack_int4(codes)
-        bits = 4
-    return QT(codes, scale, z_lo, shape, bits)
+    if pack:
+        codes, cpb = pack_codes(codes, bits)
+    else:
+        cpb = 1
+    return QT(codes, scale, z_lo, shape, bits, cpb=cpb)
+
+
+def _bit_signature(lp) -> Tuple:
+    """Sorted (path, bits) tuple over a layer's QTensor leaves — layers
+    stack into one scan group iff their signatures match."""
+    out = []
+
+    def walk(node, path):
+        if is_qtensor(node):
+            out.append((path, qtensor_bits(node)))
+            return
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(node[k], f"{path}/{k}")
+
+    walk(lp, "")
+    return tuple(sorted(out))
 
 
 def serving_params(qparams, cfg, *, pack: bool = True):
@@ -227,7 +291,15 @@ def serving_params(qparams, cfg, *, pack: bool = True):
     stacked params tree with QT leaves — the *packed* serving form. Unlike
     `materialize` no dense weights are ever built: prefill/decode dequantize
     (or quant_matmul-fuse) per layer inside the compiled scan, so HBM holds
-    int4/int8 codes end-to-end."""
+    packed codes end-to-end.
+
+    Uniform-policy tables stack into the single-scan tree they always did.
+    A mixed-bit table (per-leaf policy) is bucketed into *per-bit-width
+    scan groups*: maximal contiguous runs of layers with the same bit
+    signature become one homogeneous stacked segment each (SegmentedLayers)
+    — every segment keeps its own pack density, and the model runs one
+    scan per segment (models/model.py::scan_layers) so mixed 2/3/4/8-bit
+    trees serve packed with no materialize anywhere."""
     params = {k: v for k, v in qparams.items() if k != "__qlayers__"}
     table = qparams.get("__qlayers__", {})
     for k, v in list(params.items()):
@@ -254,7 +326,27 @@ def serving_params(qparams, cfg, *, pack: bool = True):
         # leaves from the table's per-layer slices
         return jnp.stack(slices)
 
-    params["layers"] = walk(params.get("layers"), per_layer)
+    sigs = [_bit_signature(lp) for lp in per_layer]
+    if all(s == sigs[0] for s in sigs):
+        params["layers"] = walk(params.get("layers"), per_layer)
+        return params
+
+    # mixed-bit: maximal contiguous same-signature runs -> scan segments
+    runs: List[Tuple[int, int]] = []
+    lo = 0
+    for i in range(1, len(sigs) + 1):
+        if i == len(sigs) or sigs[i] != sigs[lo]:
+            runs.append((lo, i))
+            lo = i
+    stacked_all = params.get("layers")
+    segs = []
+    for lo, hi in runs:
+        seg_stacked = (None if stacked_all is None else
+                       jax.tree_util.tree_map(lambda a: a[lo:hi],
+                                              stacked_all))
+        segs.append(walk(seg_stacked, per_layer[lo:hi]))
+    params["layers"] = SegmentedLayers(tuple(segs),
+                                       tuple(hi - lo for lo, hi in runs))
     return params
 
 
@@ -278,7 +370,7 @@ def qt_param_specs(qparams, dense_specs):
             cs = _fit_spec(spec, codes_rank)
             ss = _fit_spec(spec, leaf.scale.ndim, drop_last=True)
             zs = _fit_spec(spec, leaf.z_lo.ndim, drop_last=True)
-            out.append(QT(cs, ss, zs, leaf.shape, leaf.bits))
+            out.append(QT(cs, ss, zs, leaf.shape, leaf.bits, cpb=leaf.cpb))
         else:
             out.append(spec)
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -25,6 +25,12 @@ are materialized by one batched transfer at the end (`_finalize_report`).
 With a ``mesh`` (a "data" axis), calibration is data-parallel: tokens are
 sharded over the mesh and each tap's (m, m) Gram block reduces with a
 single psum — the only communication (repro.dist, DESIGN.md §4.2).
+
+"Which bits" is a per-leaf decision, not a constructor argument: every
+solve receives the QuantSpec a `core.policy.QuantPolicy` resolves for
+that (layer, leaf) — pattern rules, first/last overrides, or a budgeted
+backprop-free allocation (DESIGN.md §6). A plain QuantSpec still works
+everywhere and is bit-identical to the pre-policy pipeline.
 """
 from __future__ import annotations
 
@@ -39,6 +45,7 @@ import jax.numpy as jnp
 from repro.core import calibrate
 from repro.core.baselines import gptq_quantize, rtn_quantize
 from repro.core.comq_hessian import comq_quantize_blocked, comq_quantize_h
+from repro.core.policy import as_policy
 from repro.core.quantizer import QuantSpec
 from repro.models import transformer as tfm
 from repro.models.common import apply_norm
@@ -85,17 +92,29 @@ def taps_for(cfg) -> Dict[Tuple[str, str], str]:
 
 
 def is_qtensor(leaf) -> bool:
-    return isinstance(leaf, dict) and leaf.get("__qtensor__", False) is True
+    # bool(), not `is True`: CheckpointManager restores scalar leaves as
+    # 0-d ndarrays, and a restored QTensor table must still be recognized
+    return isinstance(leaf, dict) and bool(leaf.get("__qtensor__", False))
 
 
-def make_qtensor(q: Array, delta: Array, z_lo: Array, shape) -> dict:
+def make_qtensor(q: Array, delta: Array, z_lo: Array, shape,
+                 bits: int = 8) -> dict:
     """Codes stored offset-binary (q - z_lo ∈ [0, 2^b-1]) as uint8 so any
-    zero-point fits; dequant restores W_q = δ·(u + z)."""
+    zero-point fits; dequant restores W_q = δ·(u + z). `bits` records the
+    width the solve used — the packing/serving layers dispatch on it
+    instead of inspecting code values (core/apply, ckpt/quantized)."""
     u = (q - z_lo).astype(jnp.uint8)
     return {"__qtensor__": True, "codes": u,
             "scale": jnp.asarray(delta, jnp.float32),
             "z_lo": jnp.asarray(z_lo, jnp.int32),
-            "shape": tuple(int(s) for s in shape)}
+            "shape": tuple(int(s) for s in shape),
+            "bits": int(bits)}
+
+
+def qtensor_bits(t: dict) -> int:
+    """Bit width of a pipeline QTensor (pre-policy trees default to 8:
+    codes were stored one-per-byte and packers re-inspect nothing)."""
+    return int(t.get("bits", 8))
 
 
 def dequant_qtensor(t: dict, dtype=jnp.float32) -> Array:
@@ -227,119 +246,136 @@ def _expert_norm_sum(e2: Array) -> Array:
     return jnp.sum(jnp.sqrt(jnp.maximum(jnp.sum(e2, axis=1), 0.0)))
 
 
-def _solve_group(ws, h: Array, spec: QuantSpec, method: str,
-                 block: int = 256, solve_sh=None):
-    """Solve the weight leaves `ws` (all calibrated by the same Gram h).
+def _uniform(specs) -> bool:
+    return all(s == specs[0] for s in specs)
 
-    When exact (see _fusable), the leaves are solved as one column-
-    concatenated [w_a|w_b|…] matrix — one solver invocation and one grid
-    init per tap instead of one per leaf — then split back per leaf.
+
+def _solve_group(ws, h: Array, specs, method: str,
+                 block: int = 256, solve_sh=None):
+    """Solve the weight leaves `ws` (all calibrated by the same Gram h),
+    each under its own resolved per-leaf spec (`specs`, same length).
+
+    When the group's specs are identical AND fusion is exact (see
+    _fusable), the leaves are solved as one column-concatenated
+    [w_a|w_b|…] matrix — one solver invocation and one grid init per tap
+    instead of one per leaf — then split back per leaf. Mixed-bit groups
+    fall back to per-leaf solves: the δ grid init depends on the bit
+    width, so fusing across widths would change every column's grid.
 
     `solve_sh` (from quantize_model when the mesh has a nontrivial "model"
     axis) runs the solve with output columns sharded over "model"
     (dist.sharded_solve): bit-identical codes, zero solve-time collectives.
     The sharded path mirrors the replicated fusion decision exactly — the
     fused concatenation solves as one column-sharded matrix, per-leaf
-    solves shard per leaf — so sharded and replicated pipelines agree.
+    solves shard per leaf (each with its own spec) — so sharded and
+    replicated pipelines agree at every bit width.
     Returns [(qtensor, err_before, err_after, seconds), ...]."""
     m = h.shape[0]
     w2ds = [_w2d(w, m) for w in ws]
+    spec0 = specs[0]
 
-    if solve_sh is not None and _col_shardable(spec, method):
-        fuse = len(ws) > 1 and _fusable(spec, method)
+    if solve_sh is not None and _col_shardable(spec0, method):
+        fuse = len(ws) > 1 and _uniform(specs) and _fusable(spec0, method)
         t0 = time.time()
         if fuse:
             wcat = jnp.concatenate([w.astype(jnp.float32) for w in w2ds],
                                    axis=1)
-            q, delta, z_lo, e2b, e2a = solve_sh(h, wcat, block=block)
+            q, delta, z_lo, e2b, e2a = solve_sh(h, wcat, spec=spec0,
+                                                block=block)
             secs = (time.time() - t0) / len(ws)
             out, lo = [], 0
             for w, w2d in zip(ws, w2ds):
                 hi = lo + w2d.shape[1]
                 qt = make_qtensor(q[:, lo:hi], delta[lo:hi], z_lo[lo:hi],
-                                  w.shape)
+                                  w.shape, bits=spec0.bits)
                 out.append((qt, _norm_of(e2b[lo:hi]), _norm_of(e2a[lo:hi]),
                             secs))
                 lo = hi
             return out
         out = []
-        for w, w2d in zip(ws, w2ds):
+        for w, w2d, spec in zip(ws, w2ds, specs):
             t0 = time.time()
-            q, delta, z_lo, e2b, e2a = solve_sh(h, w2d, block=block)
-            qt = make_qtensor(q, delta, z_lo, w.shape)
+            q, delta, z_lo, e2b, e2a = solve_sh(h, w2d, spec=spec,
+                                                block=block)
+            qt = make_qtensor(q, delta, z_lo, w.shape, bits=spec.bits)
             out.append((qt, _norm_of(e2b), _norm_of(e2a),
                         time.time() - t0))
         return out
 
-    if len(ws) > 1 and _fusable(spec, method):
+    if len(ws) > 1 and _uniform(specs) and _fusable(spec0, method):
         t0 = time.time()
         wcat = jnp.concatenate([w.astype(jnp.float32) for w in w2ds], axis=1)
-        r = solve(h, wcat, spec, method, block=block)
+        r = solve(h, wcat, spec0, method, block=block)
         e2_after = _col_err2(h, wcat, r.q.astype(jnp.float32) * r.delta)
-        rt = rtn_quantize(wcat, spec)
+        rt = rtn_quantize(wcat, spec0)
         e2_before = _col_err2(h, wcat, rt.q.astype(jnp.float32) * rt.delta)
         secs = (time.time() - t0) / len(ws)
         out, lo = [], 0
         for w, w2d in zip(ws, w2ds):
             hi = lo + w2d.shape[1]
             qt = make_qtensor(r.q[:, lo:hi], r.delta[lo:hi], r.z_lo[lo:hi],
-                              w.shape)
+                              w.shape, bits=spec0.bits)
             out.append((qt, _norm_of(e2_before[lo:hi]),
                         _norm_of(e2_after[lo:hi]), secs))
             lo = hi
         return out
 
     out = []
-    for w, w2d in zip(ws, w2ds):
+    for w, w2d, spec in zip(ws, w2ds, specs):
         t0 = time.time()
         r = solve(h, w2d, spec, method, block=block)
         rt = rtn_quantize(w2d, spec, h=h)
-        qt = make_qtensor(r.q, r.delta, r.z_lo, w.shape)
+        qt = make_qtensor(r.q, r.delta, r.z_lo, w.shape, bits=spec.bits)
         out.append((qt, rt.errors[-1], r.errors[-1], time.time() - t0))
     return out
 
 
-def _expert_qtensor(q, delta, z_lo, shape):
+def _expert_qtensor(q, delta, z_lo, shape, bits: int):
     """Per-expert scale/zero reshaped to broadcast against (E, m, n)."""
     delta_b = (jnp.asarray(delta, jnp.float32)[:, None, :]
                if delta.ndim == 2
                else jnp.asarray(delta, jnp.float32)[:, None, None])
     z_b = (z_lo[:, None, :] if z_lo.ndim == 2 else z_lo[:, None, None])
-    return make_qtensor(q, delta_b, z_b, shape)
+    return make_qtensor(q, delta_b, z_b, shape, bits=bits)
 
 
-def _solve_group_experts(ws, hs: Array, spec: QuantSpec, method: str):
+def _solve_group_experts(ws, hs: Array, specs, method: str):
     """Stacked-expert leaves (E, d, f_k) sharing per-expert Grams hs
     (E, d, d): vmapped per-expert solves, column-fused across leaves when
-    exact. Returns [(qtensor, err_before, err_after, seconds), ...]."""
+    exact (identical specs only — mixed-bit expert groups solve per leaf).
+    Returns [(qtensor, err_before, err_after, seconds), ...]."""
 
-    def one(h_e, w_e):
-        r = solve(h_e, w_e, spec, method)
-        rt = rtn_quantize(w_e, spec)
-        e2a = _col_err2(h_e, w_e, r.q.astype(jnp.float32) * r.delta)
-        e2b = _col_err2(h_e, w_e, rt.q.astype(jnp.float32) * rt.delta)
-        return r.q, r.delta, r.z_lo, e2a, e2b
+    def one_fn(spec):
+        def one(h_e, w_e):
+            r = solve(h_e, w_e, spec, method)
+            rt = rtn_quantize(w_e, spec)
+            e2a = _col_err2(h_e, w_e, r.q.astype(jnp.float32) * r.delta)
+            e2b = _col_err2(h_e, w_e, rt.q.astype(jnp.float32) * rt.delta)
+            return r.q, r.delta, r.z_lo, e2a, e2b
+        return one
 
-    if len(ws) > 1 and _fusable(spec, method):
+    spec0 = specs[0]
+    if len(ws) > 1 and _uniform(specs) and _fusable(spec0, method):
         t0 = time.time()
         wcat = jnp.concatenate([w.astype(jnp.float32) for w in ws], axis=-1)
-        q, delta, z_lo, e2a, e2b = jax.vmap(one)(hs, wcat)
+        q, delta, z_lo, e2a, e2b = jax.vmap(one_fn(spec0))(hs, wcat)
         secs = (time.time() - t0) / len(ws)
         out, lo = [], 0
         for w in ws:
             hi = lo + w.shape[-1]
             qt = _expert_qtensor(q[:, :, lo:hi], delta[:, lo:hi],
-                                 z_lo[:, lo:hi], w.shape)
+                                 z_lo[:, lo:hi], w.shape, spec0.bits)
             out.append((qt, _expert_norm_sum(e2b[:, lo:hi]),
                         _expert_norm_sum(e2a[:, lo:hi]), secs))
             lo = hi
         return out
 
     out = []
-    for w in ws:
+    for w, spec in zip(ws, specs):
         t0 = time.time()
-        q, delta, z_lo, e2a, e2b = jax.vmap(one)(hs, w.astype(jnp.float32))
-        qt = _expert_qtensor(q, delta, z_lo, w.shape)
+        q, delta, z_lo, e2a, e2b = jax.vmap(one_fn(spec))(
+            hs, w.astype(jnp.float32))
+        qt = _expert_qtensor(q, delta, z_lo, w.shape, spec.bits)
         out.append((qt, _expert_norm_sum(e2b), _expert_norm_sum(e2a),
                     time.time() - t0))
     return out
@@ -368,52 +404,62 @@ def _gram_fns(mesh):
             lambda tap: dist.sharded_batched_gram(mesh, tap))
 
 
-def _quantize_layer_leaves(lp, taps, tapmap, spec: QuantSpec, method: str,
+def _group_specs(resolve, layer_idx: int, entries, prefix: str = ""):
+    """Resolved per-leaf specs for one tap group, in entry order."""
+    return [resolve(layer_idx, f"{prefix}{mod}.{leaf}")
+            for mod, leaf in entries]
+
+
+def _quantize_layer_leaves(lp, taps, tapmap, resolve, method: str,
                            pending: List[tuple], layer_idx: int,
                            gram_fn=None, batched_fn=None, prefix: str = "",
                            solve_sh=None):
     """Legacy-schedule body: quantize every mapped leaf of one layer from a
     pre-collected `taps` dict, grouped by activation tap (TapGramCache: one
-    Gram per tap; fused solves when exact). Returns the layer params with
-    QTensor leaves; appends per-leaf (idx, name, err, err, secs) records
-    with the errors left on device."""
+    Gram per tap; fused solves when exact). `resolve(layer_idx, name)`
+    supplies each leaf's QuantSpec (core/policy). Returns the layer params
+    with QTensor leaves; appends per-leaf (idx, name, err, err, secs)
+    records with the errors left on device."""
     cache = calibrate.TapGramCache(gram_fn=gram_fn, batched_fn=batched_fn)
     groups = _tap_groups(lp, tapmap)
 
     lp_q = dict(lp)
     for tapname, entries in groups.items():
         ws = [lp[mod][leaf] for mod, leaf in entries]
+        specs = _group_specs(resolve, layer_idx, entries, prefix)
         if tapname.startswith("expert"):
             hs = cache.batched(tapname, taps[tapname])
-            results = _solve_group_experts(ws, hs, spec, method)
+            results = _solve_group_experts(ws, hs, specs, method)
         else:
             h = cache.gram(tapname, taps[tapname])
-            results = _solve_group(ws, h, spec, method, solve_sh=solve_sh)
+            results = _solve_group(ws, h, specs, method, solve_sh=solve_sh)
         for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
             lp_q = _set_nested(lp_q, mod, leaf, qt)
             pending.append((layer_idx, f"{prefix}{mod}.{leaf}", eb, ea, secs))
     return lp_q
 
 
-def _staged_cb(lp, groups, taps, spec: QuantSpec, method: str,
+def _staged_cb(lp, groups, taps, resolve, method: str,
                pending: List[tuple], layer_idx: int, holder: dict,
                gram_fn, batched_fn, prefix: str = "", solve_sh=None):
     """The staged-schedule `quantize_cb`: invoked by the model's tap hooks
     mid-forward, right after tap `tapname` is recorded and before the
-    weights it feeds are applied. Solves the tap's leaf group, stashes the
-    QTensors, and returns dequantized replacements so the rest of the
-    forward runs on the quantized sub-blocks."""
+    weights it feeds are applied. Solves the tap's leaf group (each leaf
+    under its resolved per-leaf spec), stashes the QTensors, and returns
+    dequantized replacements so the rest of the forward runs on the
+    quantized sub-blocks."""
     def cb(tapname: str):
         entries = groups.get(tapname)
         if not entries:
             return {}
         ws = [lp[mod][leaf] for mod, leaf in entries]
+        specs = _group_specs(resolve, layer_idx, entries, prefix)
         if tapname.startswith("expert"):
             hs = batched_fn(taps[tapname])
-            results = _solve_group_experts(ws, hs, spec, method)
+            results = _solve_group_experts(ws, hs, specs, method)
         else:
             h = gram_fn(taps[tapname])
-            results = _solve_group(ws, h, spec, method, solve_sh=solve_sh)
+            results = _solve_group(ws, h, specs, method, solve_sh=solve_sh)
         repl = {}
         for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
             holder["lp_q"] = _set_nested(holder["lp_q"], mod, leaf, qt)
@@ -423,7 +469,7 @@ def _staged_cb(lp, groups, taps, spec: QuantSpec, method: str,
     return cb
 
 
-def _staged_ctx(lp, tapmap, spec: QuantSpec, method: str,
+def _staged_ctx(lp, tapmap, resolve, method: str,
                 pending: List[tuple], layer_idx: int, gram_fn, batched_fn,
                 prefix: str = "", solve_sh=None):
     """(taps, holder, cb) for one staged layer walk — shared by the
@@ -431,21 +477,21 @@ def _staged_ctx(lp, tapmap, spec: QuantSpec, method: str,
     has a single definition."""
     taps: Dict[str, Array] = {}
     holder = {"lp_q": lp}
-    cb = _staged_cb(lp, _tap_groups(lp, tapmap), taps, spec, method,
+    cb = _staged_cb(lp, _tap_groups(lp, tapmap), taps, resolve, method,
                     pending, layer_idx, holder, gram_fn, batched_fn,
                     prefix=prefix, solve_sh=solve_sh)
     return taps, holder, cb
 
 
 def _quantize_layer_staged(lp, x, state, cfg, plan, tapmap,
-                           spec: QuantSpec, method: str,
+                           resolve, method: str,
                            pending: List[tuple], layer_idx: int,
                            gram_fn, batched_fn, solve_sh=None):
     """Staged schedule: ONE `layer_full` evaluation quantizes the layer in
     tap order *and* propagates x through the quantized sub-blocks — every
     downstream tap is exact w.r.t. the quantized upstream. Returns
     (lp_q, new_x, new_state)."""
-    taps, holder, cb = _staged_ctx(lp, tapmap, spec, method, pending,
+    taps, holder, cb = _staged_ctx(lp, tapmap, resolve, method, pending,
                                    layer_idx, gram_fn, batched_fn,
                                    solve_sh=solve_sh)
     rwkv_state = state if cfg.attn_free else None
@@ -491,13 +537,20 @@ def _legacy_layer_fn(cfg, plan):
     return jax.jit(lambda lp, x, st: _layer_with_taps(lp, x, st, cfg, plan))
 
 
-def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
+def quantize_model(params, cfg, plan, tokens: Array, spec,
                    method: str = "comq",
                    vision_embeds: Optional[Array] = None,
                    quantize_unembed: bool = False,
                    propagation: str = "staged",
                    mesh=None):
     """Quantize all projection weights of an LM. `tokens`: (B, T) calib batch.
+
+    `spec` is either a global QuantSpec (every leaf gets it — bit-identical
+    to the historical path) or a `core.policy.QuantPolicy` whose pattern
+    rules / first-last overrides / budget-allocated assignments resolve a
+    *per-leaf* spec (only the bit width varies; granularity/order/λ/sweeps
+    are policy-wide). Fused shared-tap solves require identical resolved
+    specs across the group; mixed-bit groups solve per leaf.
 
     propagation="staged" (default) runs exactly one layer forward per layer
     (leaves quantized mid-forward in tap order, downstream taps exact
@@ -506,18 +559,27 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
     batch data-parallel: each Gram block reduces with a single psum
     (repro.dist; DESIGN.md §4.2). A nontrivial "model" axis additionally
     shards every column-shardable leaf solve (per-channel comq_blocked /
-    rtn — see _col_shardable) over the mesh columns, bit-identical to the
-    replicated solve with zero solve-time collectives (DESIGN.md §4.3);
-    other methods keep replicated solves. With a multi-device "data" axis
-    the MoE routing capacity is rounded up to it (BuildPlan.
-    moe_capacity_multiple) so expert taps always take the Gram-psum path.
+    rtn — see _col_shardable; the gate depends only on policy-wide fields,
+    so it is decided once and each leaf's sharded solve runs under its own
+    resolved spec) over the mesh columns, bit-identical to the replicated
+    solve with zero solve-time collectives (DESIGN.md §4.3); other methods
+    keep replicated solves. With a multi-device "data" axis the MoE
+    routing capacity is rounded up to it (BuildPlan.moe_capacity_multiple)
+    so expert taps always take the Gram-psum path.
 
-    Returns (qparams, QuantReport). qparams has QTensor leaves; use
-    `dequantize_tree` (or the quantized serving path) to run it.
+    Returns (qparams, QuantReport). qparams has QTensor leaves (each
+    carrying its resolved bit width); use `dequantize_tree` (or the
+    quantized serving path) to run it.
     """
     from repro.models.model import embed_tokens
     if propagation not in ("staged", "legacy"):
         raise ValueError(f"unknown propagation {propagation!r}")
+    policy = as_policy(spec)
+    n_layers = cfg.n_layers
+
+    def resolve(layer_idx: int, name: str) -> QuantSpec:
+        return policy.resolve(name, layer_idx, n_layers)
+
     t_start = time.time()
     report = QuantReport()
     pending: List[tuple] = []
@@ -531,15 +593,14 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
             # align routed-expert capacity so (E, C, d) taps divide the
             # data axis and never fall off the Gram-psum path
             plan = plan.replace(moe_capacity_multiple=ndata)
-        if model_size(mesh) > 1 and _col_shardable(spec, method):
-            solve_sh = functools.partial(sharded_solve, mesh, spec=spec,
-                                         method=method)
+        if model_size(mesh) > 1 and _col_shardable(policy.base, method):
+            solve_sh = functools.partial(sharded_solve, mesh, method=method)
     x = embed_tokens(params, cfg, plan, tokens)
     qparams = jax.tree_util.tree_map(lambda a: a, params)  # shallow copy
     tapmap = taps_for(cfg)
 
     if cfg.family == "vlm":
-        qparams = _quantize_vlm(params, cfg, plan, x, spec, method,
+        qparams = _quantize_vlm(params, cfg, plan, x, resolve, method,
                                 vision_embeds, pending, propagation,
                                 gram_fn, batched_fn, solve_sh=solve_sh)
         _finalize_report(report, pending)
@@ -560,7 +621,7 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
         for l in range(cfg.n_layers):
             lp = _tree_slice(params["layers"], l)
             _, taps, _ = layer_full_j(lp, x, state)
-            lp_q = _quantize_layer_leaves(lp, taps, tapmap, spec, method,
+            lp_q = _quantize_layer_leaves(lp, taps, tapmap, resolve, method,
                                           pending, l, gram_fn, batched_fn,
                                           solve_sh=solve_sh)
             # propagate through the *quantized* layer
@@ -571,14 +632,15 @@ def quantize_model(params, cfg, plan, tokens: Array, spec: QuantSpec,
         for l in range(cfg.n_layers):
             lp = _tree_slice(params["layers"], l)
             lp_q, x, state = _quantize_layer_staged(
-                lp, x, state, cfg, plan, tapmap, spec, method, pending, l,
+                lp, x, state, cfg, plan, tapmap, resolve, method, pending, l,
                 gram_fn, batched_fn, solve_sh=solve_sh)
             qparams = _store_layer(qparams, l, lp_q)
 
     if quantize_unembed and "unembed" in params:
         xn = apply_norm(params["final_norm"], x, cfg)
         h = gram_fn(xn)
-        qt, eb, ea, secs = _solve_group([params["unembed"]], h, spec,
+        qt, eb, ea, secs = _solve_group([params["unembed"]], h,
+                                        [resolve(-1, "unembed")],
                                         method, solve_sh=solve_sh)[0]
         qparams["unembed"] = qt
         pending.append((-1, "unembed", eb, ea, secs))
@@ -614,7 +676,7 @@ def _layer_with_taps(lp, x, state, cfg, plan):
     return y, taps, new_state
 
 
-def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
+def _quantize_vlm(params, cfg, plan, x, resolve, method, vision_embeds,
                   pending, propagation, gram_fn, batched_fn, solve_sh=None):
     from repro.models.model import _vlm_group_counts
     g, spg = _vlm_group_counts(cfg)
@@ -630,13 +692,13 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
             lidx = gi * (spg + 1) + si
             if staged:
                 lp_q, x, _ = _quantize_layer_staged(
-                    lp, x, None, cfg, plan, DENSE_TAPS, spec, method,
+                    lp, x, None, cfg, plan, DENSE_TAPS, resolve, method,
                     pending, lidx, gram_fn, batched_fn, solve_sh=solve_sh)
             else:
                 taps: Dict[str, Array] = {}
                 y, _, _, _ = tfm.layer_full(lp, x, cfg, plan, False,
                                             taps=taps)
-                lp_q = _quantize_layer_leaves(lp, taps, DENSE_TAPS, spec,
+                lp_q = _quantize_layer_leaves(lp, taps, DENSE_TAPS, resolve,
                                               method, pending, lidx,
                                               gram_fn, batched_fn,
                                               solve_sh=solve_sh)
@@ -647,7 +709,7 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
         vkv = tfm.vision_kv_for_layer(cp, ve)
         lidx = gi * (spg + 1) + spg
         if staged:
-            taps, holder, cb = _staged_ctx(cp, CROSS_TAPS, spec, method,
+            taps, holder, cb = _staged_ctx(cp, CROSS_TAPS, resolve, method,
                                            pending, lidx, gram_fn,
                                            batched_fn, prefix="cross.",
                                            solve_sh=solve_sh)
@@ -657,9 +719,10 @@ def _quantize_vlm(params, cfg, plan, x, spec, method, vision_embeds,
         else:
             taps = {}
             _ = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps)
-            cp_q = _quantize_layer_leaves(cp, taps, CROSS_TAPS, spec, method,
-                                          pending, lidx, gram_fn, batched_fn,
-                                          prefix="cross.", solve_sh=solve_sh)
+            cp_q = _quantize_layer_leaves(cp, taps, CROSS_TAPS, resolve,
+                                          method, pending, lidx, gram_fn,
+                                          batched_fn, prefix="cross.",
+                                          solve_sh=solve_sh)
             x = tfm.cross_layer_full(dequantize_tree(cp_q), x, cfg, plan,
                                      vkv)
         table[f"cross_{gi}"] = cp_q

@@ -1,0 +1,360 @@
+"""Per-leaf mixed-precision policies + the budgeted backprop-free allocator.
+
+COMQ's decomposition W_q = δ·Q is per-layer by construction, but until this
+module the whole stack hard-coded ONE global `QuantSpec` for every leaf.
+A `QuantPolicy` resolves a (layer, leaf-name) pair to its own spec — the
+pattern rules express the mixes the paper's sensitivity spread motivates
+(first/last layers and down-projections at 8 bits, bulk attention at 4/2),
+and `policy_from_budget` derives an *exact per-leaf* assignment from a
+bits-per-param budget with a greedy knapsack over the layerwise H-space
+reconstruction errors (Hubara et al., "Improving Post Training Neural
+Quantization: Layer-wise Calibration and Integer Programming" — the same
+layerwise quantities COMQ computes anyway, so the allocator stays
+backprop-free).
+
+Resolution order (DESIGN.md §6):
+
+1. pattern ``rules`` — first match wins; matched against the
+   layer-qualified name ``"{layer}.{name}"`` first, then the bare leaf
+   name ``"attn.wq"`` / ``"mlp.w_down"`` / ``"unembed"`` (fnmatch
+   wildcards allowed, e.g. ``("*.w_down", 8)``);
+2. ``first_layer_bits`` / ``last_layer_bits`` overrides (layer 0 /
+   layer n_layers-1);
+3. ``base.bits``.
+
+Only the *bit width* varies per leaf: granularity/order/λ/sweeps are
+policy-wide, which is what keeps the fusion and column-sharding gates
+(`pipeline._fusable` / `pipeline._col_shardable`) decidable per leaf and a
+uniform policy bit-identical to the old global-spec path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from fnmatch import fnmatchcase
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.quantizer import QuantSpec, codes_per_byte
+
+#: bit widths the allocator may assign (all have a packed storage form —
+#: see quantizer.codes_per_byte: 2 → 0.25 B, 3/4 → 0.5 B, 8 → 1 B/param)
+DEFAULT_BIT_CHOICES = (2, 3, 4, 8)
+
+
+@dataclass(frozen=True)
+class QuantPolicy:
+    """A resolved-per-leaf quantization policy.
+
+    ``rules`` are ``(pattern, bits)`` pairs; ``kv_bits`` carries the KV-
+    cache precision the deployment should use (0 = keep the plan's cache
+    dtype, 8 = int8 dense-cache quantization via BuildPlan.cache_quant) —
+    it does not affect weight solves."""
+    base: QuantSpec = QuantSpec()
+    rules: Tuple[Tuple[str, int], ...] = ()
+    first_layer_bits: Optional[int] = None
+    last_layer_bits: Optional[int] = None
+    kv_bits: int = 0
+
+    def resolve(self, name: str, layer: int, n_layers: int) -> QuantSpec:
+        """The spec for leaf `name` ("attn.wq", "cross.mlp.w_down",
+        "unembed", ...) of layer `layer` (-1 for non-layer leaves)."""
+        qualified = f"{layer}.{name}"
+        for pattern, bits in self.rules:
+            if fnmatchcase(qualified, pattern) or fnmatchcase(name, pattern):
+                return dataclasses.replace(self.base, bits=int(bits))
+        if self.first_layer_bits is not None and layer == 0:
+            return dataclasses.replace(self.base,
+                                       bits=int(self.first_layer_bits))
+        if self.last_layer_bits is not None and layer == n_layers - 1:
+            return dataclasses.replace(self.base,
+                                       bits=int(self.last_layer_bits))
+        return self.base
+
+    def is_uniform(self) -> bool:
+        return (not self.rules and self.first_layer_bits is None
+                and self.last_layer_bits is None)
+
+
+def as_policy(spec_or_policy) -> QuantPolicy:
+    """Wrap a plain QuantSpec into the (uniform) policy it denotes."""
+    if isinstance(spec_or_policy, QuantPolicy):
+        return spec_or_policy
+    if isinstance(spec_or_policy, QuantSpec):
+        return QuantPolicy(base=spec_or_policy)
+    raise TypeError(
+        f"expected QuantSpec or QuantPolicy, got {type(spec_or_policy)}")
+
+
+def parse_policy(text: str, base: QuantSpec) -> QuantPolicy:
+    """Parse the launcher's ``--policy`` string: comma-separated
+    ``pattern=bits`` rules plus the shorthands ``first=b`` / ``last=b`` /
+    ``kv=b`` (e.g. ``"*.w_down=8,first=8,last=8,kv=8"``)."""
+    rules: List[Tuple[str, int]] = []
+    first = last = None
+    kv = 0
+    for item in filter(None, (s.strip() for s in text.split(","))):
+        key, _, val = item.partition("=")
+        if not val:
+            raise ValueError(f"policy rule {item!r} is not 'pattern=bits'")
+        bits = int(val)
+        if key == "first":
+            first = bits
+        elif key == "last":
+            last = bits
+        elif key == "kv":
+            kv = bits
+        else:
+            rules.append((key, bits))
+    return QuantPolicy(base=base, rules=tuple(rules), first_layer_bits=first,
+                       last_layer_bits=last, kv_bits=kv)
+
+
+def policy_to_dict(policy: QuantPolicy) -> dict:
+    """JSON/checkpoint-safe metadata form (ckpt extra / --save-quantized)."""
+    return {
+        "base": dataclasses.asdict(policy.base),
+        "rules": [[p, int(b)] for p, b in policy.rules],
+        "first_layer_bits": policy.first_layer_bits,
+        "last_layer_bits": policy.last_layer_bits,
+        "kv_bits": policy.kv_bits,
+    }
+
+
+def policy_from_dict(d: dict) -> QuantPolicy:
+    return QuantPolicy(
+        base=QuantSpec(**d["base"]),
+        rules=tuple((p, int(b)) for p, b in d.get("rules", ())),
+        first_layer_bits=d.get("first_layer_bits"),
+        last_layer_bits=d.get("last_layer_bits"),
+        kv_bits=d.get("kv_bits", 0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# budgeted bit allocation (greedy knapsack on layerwise H-space errors)
+# ---------------------------------------------------------------------------
+
+def allocate_bits(curves: Dict[str, Dict[int, float]],
+                  sizes: Dict[str, int],
+                  budget_bits_per_param: float,
+                  choices: Sequence[int] = DEFAULT_BIT_CHOICES
+                  ) -> Dict[str, int]:
+    """Greedy budgeted allocation: every leaf starts at min(choices); the
+    upgrade with the best error-reduction per extra bit·param is applied
+    until the next one would exceed the budget.
+
+    `curves[leaf][bits]` is the leaf's reconstruction error at that width
+    (any monotone proxy works — we use the H-space ‖X(W − W_q)‖ of the
+    COMQ grid init, see measure_bit_curves). Curves are clipped monotone
+    non-increasing in bits first; the convexified upgrade sequence is
+    computed once (budget-independent) and applied as a strict prefix —
+    so a larger budget's allocation is a superset of a smaller one's and
+    total error is non-increasing in the budget (tested). The assignment
+    never exceeds the budget, and a budget of b bits/param with b in
+    `choices` is satisfied exactly when the curves make the uniform-b
+    point reachable (e.g. budget ≥ max(choices) ⇒ everything at max).
+    """
+    choices = sorted(set(int(c) for c in choices))
+    if not choices:
+        raise ValueError("allocate_bits needs at least one bit choice")
+    leaves = sorted(curves)
+    if set(leaves) != set(sizes):
+        raise ValueError("curves and sizes must cover the same leaves")
+
+    # monotone envelope: err at b = min err over widths <= b in the curve
+    mono: Dict[str, Dict[int, float]] = {}
+    for leaf in leaves:
+        best = float("inf")
+        mono[leaf] = {}
+        for b in choices:
+            if b not in curves[leaf]:
+                raise ValueError(f"curve for {leaf!r} missing bits={b}")
+            best = min(best, float(curves[leaf][b]))
+            mono[leaf][b] = best
+
+    alloc = {leaf: choices[0] for leaf in leaves}
+    total_params = sum(sizes.values())
+    budget_bits = budget_bits_per_param * total_params
+    spent = float(choices[0]) * total_params
+    if spent > budget_bits + 1e-9:
+        raise ValueError(
+            f"budget {budget_bits_per_param} bits/param is below the "
+            f"smallest choice {choices[0]}")
+
+    # Per-leaf upgrade steps, convexified: whenever a later step has a
+    # strictly better gain/cost ratio than its predecessor, the two merge
+    # into one atomic step — so each leaf's step ratios are non-increasing
+    # and the globally sorted sequence visits every leaf's steps in order.
+    ups = []
+    for leaf in leaves:
+        steps = []
+        for lo, hi in zip(choices, choices[1:]):
+            steps.append([(hi - lo) * sizes[leaf],
+                          mono[leaf][lo] - mono[leaf][hi], hi])
+            while (len(steps) >= 2 and steps[-1][1] * steps[-2][0]
+                   > steps[-2][1] * steps[-1][0]):
+                c2, g2, h2 = steps.pop()
+                c1, g1, _ = steps.pop()
+                steps.append([c1 + c2, g1 + g2, h2])
+        for cost, gain, hi in steps:
+            ups.append((-(gain / cost), leaf, hi, cost))
+    # ratio descending; ties broken by (leaf, bits) — deterministic and,
+    # crucially, budget-independent
+    ups.sort(key=lambda t: (t[0], t[1], t[2]))
+
+    # strict prefix application: the first step that does not fit ends the
+    # allocation. A larger budget therefore applies a superset of a
+    # smaller budget's steps — that nesting is what makes total error
+    # non-increasing in the budget.
+    for _, leaf, hi, cost in ups:
+        if spent + cost > budget_bits + 1e-9:
+            break
+        alloc[leaf] = hi
+        spent += cost
+    return alloc
+
+
+def alloc_bits_per_param(alloc: Dict[str, int], sizes: Dict[str, int]
+                         ) -> float:
+    total = sum(sizes.values())
+    return sum(alloc[l] * sizes[l] for l in alloc) / max(total, 1)
+
+
+def alloc_bytes_per_param(alloc: Dict[str, int], sizes: Dict[str, int]
+                          ) -> float:
+    """Packed storage cost of an allocation (codes only, excludes the
+    per-channel scale/zero-point overhead — DESIGN.md §6 table)."""
+    total = sum(sizes.values())
+    return sum(sizes[l] / codes_per_byte(alloc[l])
+               for l in alloc) / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# curve measurement: one float forward per layer, zero backprop
+# ---------------------------------------------------------------------------
+
+def measure_bit_curves(params, cfg, plan, tokens, base: QuantSpec,
+                       choices: Sequence[int] = DEFAULT_BIT_CHOICES,
+                       curve_method: str = "rtn",
+                       include_unembed: bool = False):
+    """Per-leaf error-vs-bits curves from the taps of a single float-model
+    walk (the legacy two-forward machinery minus the second forward).
+
+    curve_method="rtn" (default) prices each width with the H-space error
+    of the COMQ grid init — solver-free, one H·R matmul per (leaf, width).
+    curve_method="comq_blocked" runs the maintained-P blocked solve per
+    width instead (the solver's error trajectory is free once the solve
+    runs; ~len(choices)× the quantization cost, for allocation studies).
+
+    Returns (curves, sizes): {name: {bits: err}}, {name: n_params} with
+    names layer-qualified ("3.attn.wq", "unembed").
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import calibrate, pipeline
+    from repro.core.baselines import rtn_quantize
+    from repro.core.comq_hessian import comq_quantize_blocked
+    from repro.models.common import apply_norm
+    from repro.models.model import embed_tokens
+
+    if cfg.family == "vlm":
+        raise NotImplementedError(
+            "bit-curve measurement covers homogeneous stacks; resolve VLM "
+            "policies with explicit rules instead")
+
+    def leaf_errs(h, w2d):
+        out = {}
+        for b in choices:
+            spec_b = dataclasses.replace(base, bits=int(b))
+            if curve_method == "comq_blocked":
+                r = comq_quantize_blocked(h, w2d, spec_b)
+            else:
+                r = rtn_quantize(w2d, spec_b, h=h)
+            out[int(b)] = r.errors[-1]
+        return out
+
+    curves: Dict[str, Dict[int, float]] = {}
+    sizes: Dict[str, int] = {}
+    pending: List[Tuple[str, Dict[int, object]]] = []
+    tapmap = pipeline.taps_for(cfg)
+    x = embed_tokens(params, cfg, plan, tokens)
+
+    init_states = None
+    if cfg.attn_free:
+        from repro.models.rwkv import init_rwkv_state
+        init_states = init_rwkv_state(x.shape[0], cfg)
+    elif cfg.parallel_ssm_heads:
+        from repro.models.ssm import init_ssm_state
+        init_states = init_ssm_state(x.shape[0], cfg)
+
+    state = init_states
+    layer_fn = pipeline._legacy_layer_fn(cfg, plan)
+    for l in range(cfg.n_layers):
+        lp = pipeline._tree_slice(params["layers"], l)
+        x, taps, state = layer_fn(lp, x, state)
+        cache = calibrate.TapGramCache()
+        for tapname, entries in pipeline._tap_groups(lp, tapmap).items():
+            if tapname.startswith("expert"):
+                hs = cache.batched(tapname, taps[tapname])
+                for mod, leaf in entries:
+                    w = lp[mod][leaf].astype(jnp.float32)   # (E, d, f)
+                    name = f"{l}.{mod}.{leaf}"
+                    sizes[name] = int(w.size)
+                    # one vmapped pricing pass covers every width; sum of
+                    # per-expert error norms matches the pipeline's
+                    # per-leaf MoE reporting
+                    per_e = jax.vmap(leaf_errs)(hs, w)      # {b: (E,)}
+                    pending.append((name, {int(b): jnp.sum(v)
+                                           for b, v in per_e.items()}))
+            else:
+                h = cache.gram(tapname, taps[tapname])
+                for mod, leaf in entries:
+                    w2d = pipeline._w2d(lp[mod][leaf], h.shape[0]).astype(
+                        jnp.float32)
+                    name = f"{l}.{mod}.{leaf}"
+                    sizes[name] = int(w2d.size)
+                    pending.append((name, leaf_errs(h, w2d)))
+
+    if include_unembed and "unembed" in params:
+        xn = apply_norm(params["final_norm"], x, cfg)
+        h = calibrate.gram_from_tap(xn)
+        w2d = params["unembed"].astype(jnp.float32)
+        sizes["unembed"] = int(w2d.size)
+        pending.append(("unembed", leaf_errs(h, w2d)))
+
+    # one batched transfer for all the device scalars
+    flat = jnp.stack([jnp.asarray(v, jnp.float32)
+                      for _, d in pending for v in d.values()])
+    vals = jax.device_get(flat)
+    i = 0
+    for name, d in pending:
+        curves[name] = {}
+        for b in d:
+            curves[name][int(b)] = float(vals[i])
+            i += 1
+    return curves, sizes
+
+
+def policy_from_budget(params, cfg, plan, tokens, base: QuantSpec,
+                       budget_bits_per_param: float,
+                       choices: Sequence[int] = DEFAULT_BIT_CHOICES,
+                       curve_method: str = "rtn",
+                       kv_bits: int = 0):
+    """Measure curves, allocate under the budget, and emit a QuantPolicy
+    whose rules pin every leaf exactly (base.bits = the modal choice so
+    the rule list stays short). Returns (policy, alloc, sizes)."""
+    curves, sizes = measure_bit_curves(params, cfg, plan, tokens, base,
+                                       choices=choices,
+                                       curve_method=curve_method)
+    alloc = allocate_bits(curves, sizes, budget_bits_per_param,
+                          choices=choices)
+    counts: Dict[int, int] = {}
+    for b in alloc.values():
+        counts[b] = counts.get(b, 0) + 1
+    modal = max(counts, key=lambda b: (counts[b], -b))
+    rules = tuple((name, b) for name, b in sorted(alloc.items())
+                  if b != modal)
+    policy = QuantPolicy(base=dataclasses.replace(base, bits=modal),
+                         rules=rules, kv_bits=kv_bits)
+    return policy, alloc, sizes

@@ -90,6 +90,54 @@ def unpack_int4(b: Array) -> Array:
     return out.reshape(*b.shape[:-1], b.shape[-1] * 2)
 
 
+def pack_int2(u: Array) -> Array:
+    """Pack uint2 codes (last dim % 4 == 0) four per byte, lowest bits
+    first — the 0.25 B/param storage of a 2-bit policy leaf."""
+    assert u.shape[-1] % 4 == 0, "pack_int2 needs last dim % 4 == 0"
+    parts = [u[..., i::4].astype(jnp.uint8) << (2 * i) for i in range(4)]
+    return parts[0] | parts[1] | parts[2] | parts[3]
+
+
+def unpack_int2(b: Array) -> Array:
+    parts = [(b >> (2 * i)) & jnp.uint8(0x03) for i in range(4)]
+    out = jnp.stack(parts, axis=-1)
+    return out.reshape(*b.shape[:-1], b.shape[-1] * 4)
+
+
+def codes_per_byte(bits: int) -> int:
+    """Storage density for offset-binary codes of a given bit width:
+    2-bit codes pack four per byte, 3/4-bit codes share the nibble
+    packing (3-bit codes fit a nibble), 5..8-bit codes pass through as
+    one uint8 each (the explicit int8 pass-through)."""
+    if bits <= 2:
+        return 4
+    if bits <= 4:
+        return 2
+    return 1
+
+
+def pack_codes(u: Array, bits: int):
+    """Pack offset-binary uint8 codes to the densest byte layout their bit
+    width allows. Returns (packed, cpb) where cpb is the achieved
+    codes-per-byte — 1 when the last dim doesn't align to the pack width
+    (callers store the codes unpacked rather than padding)."""
+    cpb = codes_per_byte(bits)
+    if cpb == 1 or u.shape[-1] % cpb:
+        return u.astype(jnp.uint8), 1
+    if cpb == 4:
+        return pack_int2(u), 4
+    return pack_int4(u), 2
+
+
+def unpack_codes(b: Array, cpb: int) -> Array:
+    """Inverse of pack_codes for a known codes-per-byte."""
+    if cpb == 4:
+        return unpack_int2(b)
+    if cpb == 2:
+        return unpack_int4(b)
+    return b
+
+
 def reconstruction_error(x: Array, w: Array, w_q: Array) -> Array:
     """‖X W_q − X W‖_F — the paper's layer-wise objective (Fig. 3 metric)."""
     return jnp.linalg.norm(x @ (w_q - w))

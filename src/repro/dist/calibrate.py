@@ -181,6 +181,13 @@ def sharded_solve(mesh: Mesh, h: Array, w2d: Array, spec, method: str,
     a multiple of the model axis (trailing pad; column independence makes
     the shard assignment irrelevant to bit-identity) and stripped before
     returning.
+
+    Per-leaf mixed-precision policies pass each leaf's *resolved* spec
+    here (the pipeline no longer binds one global spec): _solve_fn caches
+    one compiled shard_map per distinct (mesh, spec, method, block), so a
+    first/bulk/last bit mix costs a handful of cache entries, and every
+    leaf's sharded solve stays bit-identical to its replicated solve at
+    its own width (tested on the forced (2, 4) mesh).
     """
     from repro.core.comq_hessian import shared_order
     from repro.models.common import pad_to_multiple

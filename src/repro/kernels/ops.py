@@ -37,19 +37,27 @@ def resolve_mode(mode: Optional[str] = None) -> str:
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "mode", "out_dtype"))
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "cpb", "mode", "out_dtype"))
 def quant_matmul(x: Array, codes_u: Array, scale: Array, z_lo: Array, *,
-                 bits: int = 8, mode: Optional[str] = None,
+                 bits: int = 8, cpb: Optional[int] = None,
+                 mode: Optional[str] = None,
                  out_dtype=jnp.float32) -> Array:
-    """Y = X · (scale ⊙ (codes + z)).  codes packed two-per-byte if bits=4."""
+    """Y = X · (scale ⊙ (codes + z)) — bits-dispatched.
+
+    `cpb` is the storage density (codes per byte, quantizer.codes_per_byte;
+    defaults to the historical rule: nibble-packed iff bits==4). The Pallas
+    kernel covers cpb ∈ {1, 2} — unpacked any-bit codes and nibble-packed
+    3/4-bit codes; the 2-bit 4-per-byte layout takes the XLA fallback
+    (unpack + oracle GEMM) until a quad-unpack kernel exists."""
     mode = resolve_mode(mode)
-    if mode == "xla":
-        u = codes_u
-        if bits == 4:
-            from repro.core.quantizer import unpack_int4
-            u = unpack_int4(codes_u)
+    if cpb is None:
+        cpb = 2 if bits == 4 else 1
+    if mode == "xla" or cpb == 4:
+        from repro.core.quantizer import unpack_codes
+        u = unpack_codes(codes_u, cpb)
         return ref.quant_matmul_ref(x, u, scale, z_lo, out_dtype=out_dtype)
-    return quant_matmul_pallas(x, codes_u, scale, z_lo, bits=bits,
+    return quant_matmul_pallas(x, codes_u, scale, z_lo, cpb=cpb,
                                out_dtype=out_dtype,
                                interpret=(mode == "interpret"))
 

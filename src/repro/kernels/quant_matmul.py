@@ -56,14 +56,21 @@ def _kernel(x_ref, u_ref, scale_ref, z_ref, o_ref, acc_ref, rsum_ref, *,
 
 
 def quant_matmul_pallas(x: Array, codes_u: Array, scale: Array, z_lo: Array,
-                        *, bits: int = 8, bm: int = 128, bn: int = 128,
+                        *, bits: int = 8, cpb: Optional[int] = None,
+                        bm: int = 128, bn: int = 128,
                         bk: int = 512, out_dtype=jnp.float32,
                         interpret: bool = False) -> Array:
-    """x: (M, K) float; codes_u: (K, N) uint8 (bits=8) or (K, N//2) packed
-    (bits=4); scale/z_lo: (N,). Returns (M, N)."""
+    """x: (M, K) float; codes_u: (K, N) uint8 unpacked (cpb=1) or (K, N//2)
+    nibble-packed (cpb=2 — 3/4-bit codes); scale/z_lo: (N,). Returns
+    (M, N). cpb defaults from bits (packed iff bits==4); the 2-bit
+    four-per-byte layout is not kernelized — kernels/ops.quant_matmul
+    routes it to the XLA fallback."""
     M, K = x.shape
-    packed = bits == 4
-    N = codes_u.shape[1] * (2 if packed else 1)
+    if cpb is None:
+        cpb = 2 if bits == 4 else 1
+    assert cpb in (1, 2), f"pallas quant_matmul covers cpb 1/2, got {cpb}"
+    packed = cpb == 2
+    N = codes_u.shape[1] * cpb
     bm = min(bm, M)
     bn = min(bn, N)
     bk = min(bk, K)

@@ -20,6 +20,18 @@ def quant_matmul_ref(x: Array, codes_u: Array, scale: Array, z_lo: Array,
     return (x.astype(jnp.float32) @ w).astype(out_dtype)
 
 
+def quant_matmul_packed_ref(x: Array, codes_p: Array, scale: Array,
+                            z_lo: Array, *, cpb: int,
+                            out_dtype=jnp.float32) -> Array:
+    """Packed-storage oracle: codes_p (K, N/cpb) at `cpb` codes per byte
+    (quantizer.codes_per_byte — 4 for 2-bit, 2 for 3/4-bit, 1 pass-through)
+    is unpacked then contracted; ground truth for every mixed-precision
+    storage layout the serve path streams."""
+    from repro.core.quantizer import unpack_codes
+    return quant_matmul_ref(x, unpack_codes(codes_p, cpb), scale, z_lo,
+                            out_dtype=out_dtype)
+
+
 def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array,
                         block_tables: Array, lengths: Array, *,
                         window: int = 0) -> Array:

@@ -17,9 +17,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.ckpt import CheckpointManager, pack_tree, tree_bytes
+from repro.ckpt import (CheckpointManager, pack_tree, policy_extra,
+                        tree_bytes)
 from repro.configs import get_config, get_smoke_config
-from repro.core import QuantSpec, materialize, quantize_model
+from repro.core import (QuantSpec, materialize, parse_policy,
+                        policy_from_budget, quantize_model)
 from repro.models import BuildPlan, init_params, lm_loss
 
 
@@ -52,6 +54,16 @@ def main():
                          "bit-identical for per-channel comq_blocked/rtn "
                          "(DESIGN.md §4.3); other methods keep replicated "
                          "solves.")
+    ap.add_argument("--policy", default=None, metavar="RULES",
+                    help="per-leaf mixed-precision rules, e.g. "
+                         "'*.w_down=8,first=8,last=8,kv=8' — patterns "
+                         "match '{layer}.{leaf}' then the bare leaf name "
+                         "(core/policy.py; --bits stays the base width)")
+    ap.add_argument("--bits-budget", type=float, default=0.0, metavar="BPP",
+                    help="allocate per-leaf bit widths (2/3/4/8) under "
+                         "this bits-per-param budget with the greedy "
+                         "backprop-free knapsack on layerwise H-space "
+                         "errors (overrides --policy rules)")
     ap.add_argument("--out-dir", default="/tmp/repro_quant")
     args = ap.parse_args()
 
@@ -67,15 +79,41 @@ def main():
                                      cfg.cross_attn.n_vision_tokens,
                                      cfg.cross_attn.vision_dim), jnp.bfloat16)
 
-    spec = QuantSpec(bits=args.bits, granularity=args.granularity,
+    base = QuantSpec(bits=args.bits, granularity=args.granularity,
                      lam=args.lam, sweeps=args.sweeps, order=args.order)
+    spec = base
+    parsed = parse_policy(args.policy, base) if args.policy else None
+    if args.bits_budget:
+        # the budget allocation supersedes explicit bit rules, but the
+        # kv rider still applies (it is orthogonal to weight widths)
+        if parsed is not None and (parsed.rules
+                                   or parsed.first_layer_bits is not None
+                                   or parsed.last_layer_bits is not None):
+            print("# note: --bits-budget supersedes the --policy bit "
+                  "rules; only its kv= rider is kept")
+        kv = parsed.kv_bits if parsed is not None else 0
+        spec, alloc, sizes = policy_from_budget(params, cfg, plan, tokens,
+                                                base, args.bits_budget,
+                                                kv_bits=kv)
+        hist = {}
+        for b in alloc.values():
+            hist[b] = hist.get(b, 0) + 1
+        print(f"# bit allocation under {args.bits_budget} bits/param: "
+              f"{dict(sorted(hist.items()))}")
+    elif parsed is not None:
+        spec = parsed
+    if spec is not base and spec.kv_bits:
+        if spec.kv_bits != 8:
+            raise SystemExit(f"kv={spec.kv_bits} unsupported (0 or 8)")
+        plan = plan.replace(cache_quant=True)
     mesh = None
     if args.shard_solve:
         from repro.dist import calib_mesh
         mesh = calib_mesh(model=args.shard_solve,
                           data=None if args.shard_data else 1)
+        from repro.core import as_policy
         from repro.core.pipeline import _col_shardable
-        if not _col_shardable(spec, args.method):
+        if not _col_shardable(as_policy(spec).base, args.method):
             print(f"# note: method={args.method} granularity="
                   f"{args.granularity} is not column-shardable; solves "
                   "stay replicated (see DESIGN.md §4.3)")
@@ -88,10 +126,12 @@ def main():
                                      propagation=args.propagation, mesh=mesh)
     dt = time.time() - t0
 
-    # quantized checkpoint (packed int4 codes when bits==4)
+    # quantized checkpoint (each QTensor packed to its own bit width) +
+    # the policy metadata that produced it (ckpt.restore_policy reads it)
     packed = pack_tree(qparams["__qlayers__"])
     mgr = CheckpointManager(args.out_dir, keep=2)
-    mgr.save(0, packed, extra={"arch": cfg.name, "bits": args.bits})
+    mgr.save(0, packed, extra=policy_extra(policy=spec, arch=cfg.name,
+                                           bits=args.bits))
 
     # quality: eval loss fp vs quantized on a held-out batch
     ev = jax.random.randint(jax.random.PRNGKey(7),
@@ -105,8 +145,12 @@ def main():
 
     dense_bytes = sum(l.size * l.dtype.itemsize for l in
                       jax.tree_util.tree_leaves(params))
+    from repro.core import QuantPolicy
     print(json.dumps({
         "arch": cfg.name, "method": args.method, "bits": args.bits,
+        "mixed_policy": (isinstance(spec, QuantPolicy)
+                         and not spec.is_uniform()),
+        "bits_budget": args.bits_budget or None,
         "propagation": args.propagation,
         "data_shards": 1 if mesh is None else int(mesh.shape["data"]),
         "model_shards": 1 if mesh is None else int(mesh.shape.get("model",

@@ -76,6 +76,9 @@ def main():
                     help="submit N requests up front, the rest one per "
                          "decode step (arrival-over-time)")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--stop-token", type=int, action="append", default=[],
+                    metavar="ID", help="stop-token id(s): generation ends "
+                    "when one is sampled (repeatable; paged engine only)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=0.0)
@@ -179,7 +182,8 @@ def main():
                              buckets=(bucket // 4, bucket // 2, bucket),
                              max_blocks_per_slot=maxb))
     kw = dict(max_new_tokens=args.max_new, temperature=args.temperature,
-              top_k=args.top_k, top_p=args.top_p)
+              top_k=args.top_k, top_p=args.top_p,
+              stop_tokens=tuple(args.stop_token))
     n_up_front = args.stagger if args.stagger > 0 else len(prompts)
     reqs = [rt.submit(p, **kw) for p in prompts[:n_up_front]]
     for p in prompts[n_up_front:]:

@@ -94,10 +94,8 @@ def embed_tokens(p: Params, cfg, plan: BuildPlan, tokens: Array) -> Array:
     from repro.core.apply import QT, is_qt
     if is_qt(emb):
         # gather code rows first, dequantize only the touched rows
-        from repro.core.quantizer import unpack_int4
-        rows = jnp.take(emb.codes, tokens, axis=0)
-        if emb.bits == 4:
-            rows = unpack_int4(rows)
+        from repro.core.quantizer import unpack_codes
+        rows = unpack_codes(jnp.take(emb.codes, tokens, axis=0), emb.cpb)
         x = ((rows.astype(jnp.float32) + emb.z_lo.astype(jnp.float32))
              * emb.scale).astype(cd)
     else:
@@ -123,6 +121,33 @@ def unembed(p: Params, cfg, plan: BuildPlan, x: Array) -> Array:
 # forward (full sequence: train / prefill)
 # ---------------------------------------------------------------------------
 
+def scan_layers(body, x, layers, *per_layer_xs):
+    """`jax.lax.scan(body, x, (layers, *per_layer_xs))`, segment-aware.
+
+    `layers` is either a plain stacked layer tree (one scan — the
+    historical path, byte-identical) or a `core.apply.SegmentedLayers`
+    (mixed-bit serving_params): then one scan runs per homogeneous
+    segment, each over its slice of the per-layer operands (KV caches,
+    paged pools, states), and the stacked ys re-concatenate along the
+    layer axis — so a mixed 4/8-bit tree keeps every segment's codes
+    packed at their own width inside its own compiled scan."""
+    from repro.core.apply import is_segmented
+    if not is_segmented(layers):
+        return jax.lax.scan(body, x, (layers, *per_layer_xs))
+    lo = 0
+    ys_parts = []
+    for seg, n in zip(layers.segments, layers.sizes):
+        xs = tuple(jax.tree_util.tree_map(lambda a: a[lo:lo + n], xa)
+                   for xa in per_layer_xs)
+        x, ys = jax.lax.scan(body, x, (seg, *xs))
+        ys_parts.append(ys)
+        lo += n
+    ys = jax.tree_util.tree_map(lambda *parts: jnp.concatenate(parts,
+                                                               axis=0),
+                                *ys_parts)
+    return x, ys
+
+
 def _run_homogeneous(p: Params, cfg, plan, x, make_cache: bool,
                      init_states=None):
     """Scan over stacked layers. Returns (x, caches, aux, states)."""
@@ -147,8 +172,8 @@ def _run_homogeneous(p: Params, cfg, plan, x, make_cache: bool,
         x2, ys = body(carry, xs)
         return x2, ys
 
-    x, (caches, auxs, states) = jax.lax.scan(
-        scan_fn, x, (p["layers"], init_states))
+    x, (caches, auxs, states) = scan_layers(scan_fn, x, p["layers"],
+                                            init_states)
     return x, caches, jnp.sum(auxs), states
 
 
@@ -334,7 +359,7 @@ def decode_step(p: Params, cfg, plan: BuildPlan, cache, tokens: Array,
             x, _, new_rwkv, _ = tfm.layer_decode(lp, x, cfg, plan, None, pos,
                                                  rwkv_state=st)
             return plan.constrain(x, "residual"), new_rwkv
-        x, new_states = jax.lax.scan(body, x, (p["layers"], cache["rwkv"]))
+        x, new_states = scan_layers(body, x, p["layers"], cache["rwkv"])
         new_cache = {"rwkv": new_states}
     elif cfg.family == "vlm":
         def self_body(x, xs):
@@ -370,8 +395,8 @@ def decode_step(p: Params, cfg, plan: BuildPlan, cache, tokens: Array,
             return plan.constrain(x, "residual"), (kv, new_ssm)
 
         ssm_in = cache.get("ssm") if has_ssm else None
-        x, (new_kv, new_ssm) = jax.lax.scan(
-            body, x, (p["layers"], cache["kv"], ssm_in))
+        x, (new_kv, new_ssm) = scan_layers(body, x, p["layers"],
+                                           cache["kv"], ssm_in)
         new_cache = {"kv": new_kv}
         if has_ssm:
             new_cache["ssm"] = new_ssm
@@ -410,7 +435,7 @@ def decode_step_paged(p: Params, cfg, plan: BuildPlan, pool, block_tables,
                                            block_tables, pos)
         return plan.constrain(x, "residual"), (kl, vl)
 
-    x, (nk, nv) = jax.lax.scan(body, x, (p["layers"], pool["k"], pool["v"]))
+    x, (nk, nv) = scan_layers(body, x, p["layers"], pool["k"], pool["v"])
     from repro.models.common import apply_norm
     x = apply_norm(p["final_norm"], x, cfg)
     logits = unembed(p, cfg, plan, x)

@@ -137,10 +137,12 @@ class Runtime:
 
     def submit(self, prompt, max_new_tokens: int = 32,
                temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
-               stream_cb=None) -> Request:
+               stop_tokens=(), stream_cb=None) -> Request:
         req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
                       max_new_tokens=max_new_tokens, temperature=temperature,
-                      top_k=top_k, top_p=top_p, stream_cb=stream_cb)
+                      top_k=top_k, top_p=top_p,
+                      stop_tokens=tuple(int(t) for t in stop_tokens),
+                      stream_cb=stream_cb)
         return self.scheduler.submit(req)
 
     # -- serving loop --------------------------------------------------------
@@ -180,7 +182,7 @@ class Runtime:
         self._temp[s] = req.temperature
         self._topk[s] = req.top_k
         self._topp[s] = req.top_p
-        if len(req.out_tokens) >= req.max_new_tokens:  # max_new == 1
+        if req.finished():       # max_new == 1, or the TTFT token is a stop
             self._retire(req)
 
     def _retire(self, req: Request) -> None:
@@ -220,7 +222,10 @@ class Runtime:
             emitted += 1
             self._pos[s] += 1
             self._tok[s] = int(toks[s])
-            if len(req.out_tokens) >= req.max_new_tokens:
+            # stop-token or length: slot + pages free on this very step, so
+            # queued requests can admit next step. Tokens after the stop
+            # are never emitted — metrics count what was actually streamed.
+            if req.finished():
                 self._retire(req)
         return emitted
 
@@ -240,6 +245,7 @@ class Runtime:
         itls = [dt for r in done for dt in r.itl]
         return {
             "requests": len(done),
+            "finish_reasons": [r.finish_reason for r in done],
             "new_tokens": new_tokens,
             "wall_seconds": wall,
             "tok_per_s": new_tokens / max(wall, 1e-9),

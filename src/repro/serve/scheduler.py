@@ -32,12 +32,19 @@ DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512)
 @dataclasses.dataclass
 class Request:
     """A generation request and its full lifecycle record (absorbs the old
-    serve/engine.py Request, whose out_tokens were never written)."""
+    serve/engine.py Request, whose out_tokens were never written).
+
+    `stop_tokens` terminates generation early: the stop token itself is
+    emitted (it closes the stream) and the request retires on the same
+    step — its slot and every reserved page return to the pool
+    immediately, so EOS-heavy traffic frees KV memory long before
+    max_new_tokens. `finish_reason` records which bound fired."""
     prompt: np.ndarray                  # (T,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 0.0
+    stop_tokens: Tuple[int, ...] = ()
     stream_cb: Optional[Callable[["Request", int], None]] = None
     # filled by scheduler/runtime
     rid: int = -1
@@ -49,6 +56,7 @@ class Request:
     t_first_token: float = 0.0
     t_done: float = 0.0
     itl: List[float] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""             # "stop_token" | "length"
 
     @property
     def prompt_len(self) -> int:
@@ -67,6 +75,18 @@ class Request:
         self.out_tokens.append(int(token))
         if self.stream_cb is not None:
             self.stream_cb(self, int(token))
+
+    def finished(self) -> bool:
+        """Stop-token or length bound reached; sets finish_reason. The
+        lifetime page reservation is unchanged — stopping early only
+        *frees* pages sooner, so admission stays deadlock-free."""
+        if self.out_tokens and self.out_tokens[-1] in self.stop_tokens:
+            self.finish_reason = "stop_token"
+            return True
+        if len(self.out_tokens) >= self.max_new_tokens:
+            self.finish_reason = "length"
+            return True
+        return False
 
 
 class Scheduler:

@@ -73,10 +73,58 @@ def test_quantized_pack_roundtrip():
     q = jnp.asarray(np.random.RandomState(0).randint(-8, 8, (32, 64)))
     qt = make_qtensor(q, jnp.full((64,), 0.1), jnp.full((64,), -8,
                                                         jnp.int32),
-                      (32, 64))
+                      (32, 64), bits=4)
     packed = pack_tree({"w": qt})
     assert packed["w"].get("packed4")
+    assert packed["w"].get("packed_cpb") == 2
     assert tree_bytes(packed) < tree_bytes({"w": qt})
     restored = unpack_tree(packed)
     np.testing.assert_array_equal(np.asarray(restored["w"]["codes"]),
                                   np.asarray(qt["codes"]))
+
+
+def test_quantized_pack_dispatches_on_bits_not_values():
+    """Regression: pack_tree probed `max(codes) < 16` — an 8-bit solve
+    whose codes landed below 16 was silently nibble-packed (and paid a
+    host sync per leaf). The recorded bit width now decides: 8-bit stays
+    one code per byte even for tiny code values, 2-bit packs 4/byte."""
+    from repro.core.pipeline import make_qtensor
+    q8 = jnp.asarray(np.random.RandomState(1).randint(0, 12, (16, 32)))
+    z = jnp.zeros((32,), jnp.int32)
+    qt8 = make_qtensor(q8, jnp.full((32,), 0.1), z, (16, 32), bits=8)
+    p8 = pack_tree({"w": qt8})
+    assert "packed_cpb" not in p8["w"] and not p8["w"].get("packed4")
+    assert p8["w"]["codes"].shape == (16, 32)
+
+    q2 = jnp.asarray(np.random.RandomState(2).randint(0, 4, (16, 32)))
+    qt2 = make_qtensor(q2, jnp.full((32,), 0.1), z, (16, 32), bits=2)
+    p2 = pack_tree({"w": qt2})
+    assert p2["w"]["packed_cpb"] == 4
+    assert p2["w"]["codes"].shape == (16, 8)
+    restored = unpack_tree(p2)
+    np.testing.assert_array_equal(np.asarray(restored["w"]["codes"]),
+                                  np.asarray(qt2["codes"]))
+
+
+def test_pre_policy_checkpoint_backfills_bits():
+    """A pre-PR5 packed tree (no 'bits' key, 'packed4' flag) must unpack
+    to a QTensor whose backfilled width keeps the nibble density on
+    re-pack — not fall to the 8-bit one-per-byte default."""
+    from repro.core.pipeline import qtensor_bits
+    from repro.core.quantizer import pack_int4
+    u = jnp.asarray(np.random.RandomState(3).randint(0, 16, (8, 32)),
+                    jnp.uint8)
+    legacy = {"__qtensor__": True, "codes": pack_int4(u),
+              "scale": jnp.full((32,), 0.1), "z_lo": jnp.zeros((32,),
+                                                              jnp.int32),
+              "shape": (8, 32), "packed4": True, "unpacked_last": 32}
+    restored = unpack_tree({"w": legacy})
+    assert qtensor_bits(restored["w"]) == 4
+    np.testing.assert_array_equal(np.asarray(restored["w"]["codes"]),
+                                  np.asarray(u))
+    repacked = pack_tree(restored)
+    assert repacked["w"]["packed_cpb"] == 2     # density preserved
+    # unpacked legacy leaves (never nibble-packed) stay 8-bit
+    legacy8 = {"__qtensor__": True, "codes": u, "scale": legacy["scale"],
+               "z_lo": legacy["z_lo"], "shape": (8, 32)}
+    assert qtensor_bits(unpack_tree({"w": legacy8})["w"]) == 8

@@ -347,3 +347,73 @@ def test_streaming_callback_and_metrics():
     assert m["requests"] == 1 and m["new_tokens"] == 5
     assert m["ttft_s"][0] >= 0.0 and len(req.itl) == 4
     assert 0 < m["cache_peak_occupancy"] <= 1.0
+    assert m["finish_reasons"] == ["length"]
+
+
+# ---------------------------------------------------------------------------
+# EOS / stop-token termination
+# ---------------------------------------------------------------------------
+
+def test_stop_token_terminates_early_and_frees_pages():
+    """A request whose greedy stream hits its stop token retires on that
+    step: the stop token is the last emitted token, no tokens follow it,
+    slot + every reserved page return to the pool, and run() metrics
+    count only the actually-emitted tokens."""
+    cfg, plan, params = _f32_setup()
+    p = np.asarray(jax.random.randint(KEY, (9,), 0, cfg.vocab_size))
+    # discover what greedy would emit, then stop on its 3rd token
+    ref = _runtime(params, cfg, plan).generate([p], max_new_tokens=8)[0]
+    stop = int(ref[2])
+    rt = _runtime(params, cfg, plan)
+    req = rt.submit(p, max_new_tokens=8, stop_tokens=(stop,))
+    m = rt.run()
+    assert req.finish_reason == "stop_token"
+    assert req.out_tokens[-1] == stop
+    assert len(req.out_tokens) == 3
+    np.testing.assert_array_equal(np.asarray(req.out_tokens), ref[:3])
+    assert m["new_tokens"] == 3 and m["finish_reasons"] == ["stop_token"]
+    assert rt.allocator.num_free == rt.allocator.num_blocks
+    assert not rt.scheduler.running and not rt.scheduler.queue
+
+
+def test_stop_token_on_first_prefill_token():
+    """The TTFT token itself can be the stop token — the request retires
+    at admission without entering the decode batch."""
+    cfg, plan, params = _f32_setup()
+    p = np.asarray(jax.random.randint(KEY, (9,), 0, cfg.vocab_size))
+    first = int(_runtime(params, cfg, plan).generate(
+        [p], max_new_tokens=1)[0][0])
+    rt = _runtime(params, cfg, plan)
+    req = rt.submit(p, max_new_tokens=8, stop_tokens=(first,))
+    m = rt.run()
+    assert req.out_tokens == [first]
+    assert req.finish_reason == "stop_token"
+    assert m["decode_steps"] == 0
+    assert rt.allocator.num_free == rt.allocator.num_blocks
+
+
+def test_stop_token_preserves_batchmates_token_identity():
+    """One request stopping early must not perturb the other slots: the
+    surviving requests' tokens equal their solo runs, and the freed pages
+    let a queued request admit sooner."""
+    cfg, plan, params = _f32_setup()
+    rs = np.random.RandomState(5)
+    prompts = [rs.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (9, 12, 7)]
+    solo = [_runtime(params, cfg, plan).generate([p], max_new_tokens=8)[0]
+            for p in prompts]
+    stop = int(solo[0][1])      # request 0 stops after 2 tokens
+    # make the stopper's stop token unique to it: if another stream also
+    # emits it the test would conflate retirements
+    assert stop not in solo[1][:8] and stop not in solo[2][:8]
+    rt = _runtime(params, cfg, plan, max_slots=2, num_blocks=12)
+    reqs = [rt.submit(prompts[0], max_new_tokens=8, stop_tokens=(stop,)),
+            rt.submit(prompts[1], max_new_tokens=8),
+            rt.submit(prompts[2], max_new_tokens=8)]   # queued (2 slots)
+    rt.run()
+    assert reqs[0].finish_reason == "stop_token"
+    np.testing.assert_array_equal(np.asarray(reqs[0].out_tokens),
+                                  solo[0][:2])
+    np.testing.assert_array_equal(np.asarray(reqs[1].out_tokens), solo[1])
+    np.testing.assert_array_equal(np.asarray(reqs[2].out_tokens), solo[2])
+    assert rt.allocator.num_free == rt.allocator.num_blocks
