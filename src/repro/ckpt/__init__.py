@@ -1,4 +1,5 @@
 from repro.ckpt.checkpoint import CheckpointManager  # noqa: F401
-from repro.ckpt.quantized import (pack_tree, policy_extra,  # noqa: F401
-                                  restore_policy, strip_for_serving,
+from repro.ckpt.quantized import (PackedCkptError, load_packed_ckpt,  # noqa: F401,E501
+                                  pack_tree, policy_extra, restore_policy,
+                                  save_packed_ckpt, strip_for_serving,
                                   tree_bytes, unpack_tree)

@@ -13,6 +13,9 @@ codes, so a served checkpoint is self-describing.
 """
 from __future__ import annotations
 
+import pickle
+import warnings
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
@@ -113,3 +116,66 @@ def tree_bytes(tree) -> int:
     return sum(leaf.size * leaf.dtype.itemsize
                for leaf in jax.tree_util.tree_leaves(tree)
                if hasattr(leaf, "size"))
+
+
+# -- packed single-file checkpoints (launch/serve --save/--load-quantized) ---
+
+PACKED_FORMAT = "comq-packed-qt"
+PACKED_VERSION = 1
+
+
+class PackedCkptError(RuntimeError):
+    """A packed quantized checkpoint failed validation (truncated file,
+    checksum mismatch, wrong format/version) — raised with a clear
+    message instead of the deep unflatten crash a blind pickle load
+    produced."""
+
+
+def save_packed_ckpt(path: str, tree, **meta) -> None:
+    """Write a packed quantized tree (host arrays) as a self-describing
+    single file: a format/version header plus a crc32 over the pickled
+    payload, so a truncated or corrupted file fails loudly at load."""
+    payload = pickle.dumps({"tree": tree, **meta})
+    blob = {"format": PACKED_FORMAT, "version": PACKED_VERSION,
+            "crc32": zlib.crc32(payload), "payload": payload}
+    with open(path, "wb") as f:
+        pickle.dump(blob, f)
+
+
+def load_packed_ckpt(path: str) -> Dict[str, Any]:
+    """Load + validate a packed checkpoint; returns the payload dict
+    ({"tree": ..., **meta}). Pre-header files (a bare {"tree", "bits",
+    "arch"} pickle) still load, with a warning — re-save to upgrade."""
+    try:
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+    except (pickle.UnpicklingError, EOFError, AttributeError) as e:
+        raise PackedCkptError(
+            f"{path}: not a readable packed checkpoint — the file is "
+            f"truncated or corrupt ({type(e).__name__}: {e})") from e
+    if not isinstance(blob, dict):
+        raise PackedCkptError(f"{path}: unexpected object of type "
+                              f"{type(blob).__name__}")
+    if "format" not in blob:
+        if "tree" not in blob:
+            raise PackedCkptError(
+                f"{path}: neither a headered packed checkpoint nor a "
+                "legacy tree blob (keys: " + ", ".join(sorted(blob)) + ")")
+        warnings.warn(f"{path}: legacy headerless packed checkpoint — "
+                      "no checksum to verify; re-save to upgrade",
+                      stacklevel=2)
+        return blob
+    if blob["format"] != PACKED_FORMAT:
+        raise PackedCkptError(f"{path}: format {blob['format']!r} is not "
+                              f"{PACKED_FORMAT!r}")
+    if blob["version"] > PACKED_VERSION:
+        raise PackedCkptError(
+            f"{path}: version {blob['version']} is newer than this "
+            f"reader ({PACKED_VERSION}) — upgrade the code")
+    payload = blob["payload"]
+    crc = zlib.crc32(payload)
+    if crc != blob["crc32"]:
+        raise PackedCkptError(
+            f"{path}: checksum mismatch (stored {blob['crc32']:#010x}, "
+            f"computed {crc:#010x}) — the checkpoint is corrupt")
+    return pickle.loads(payload)

@@ -1,0 +1,104 @@
+"""Deterministic fault injection for the serving runtime.
+
+A `FaultInjector` owns a set of named fault points; the runtime (and the
+block allocator's `fail_hook`) call `fire(point)` at each hook site and
+the injector decides — from an explicit occurrence schedule or a seeded
+Bernoulli draw fixed at construction — whether that occurrence faults.
+Schedules are pure functions of the constructor arguments, so a failing
+test replays bit-identically.
+
+Fault points wired through serve/runtime.py:
+
+* ``page_alloc``   — `BlockAllocator.alloc` reports exhaustion with pages
+                     free: exercises backpressure (reserve) and the
+                     preemption-by-page-reclaim path (preempt).
+* ``decode_step``  — raises `InjectedFault` immediately before the decode
+                     program launches: an in-process serving failure the
+                     supervisor loop (`ft.run_with_restarts`) restarts.
+* ``callback``     — the per-token stream callback raises: must be
+                     contained per-request (recorded on `Request.
+                     cb_errors`), never poisoning the shared batch.
+* ``kill``         — raises `SimulatedKill` between steps: models a
+                     process death. No cleanup runs; recovery goes
+                     through the crash-replay journal (ft/journal.py).
+
+Usage::
+
+    inj = FaultInjector({"page_alloc": [3, 7], "kill": [5]})
+    # ... the 3rd and 7th page allocs fail; the 5th kill-site check dies.
+
+    inj = FaultInjector.random(seed=0, rates={"decode_step": 0.1})
+    # ... seeded Bernoulli schedule, identical across replays.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A seeded in-process fault (decode-step / callback site)."""
+
+
+class SimulatedKill(RuntimeError):
+    """A seeded process death: nothing cleans up; recovery must come from
+    the journal. Distinct from InjectedFault so tests can assert *which*
+    failure mode they provoked."""
+
+
+class FaultInjector:
+    """Named fault points with deterministic firing schedules.
+
+    `schedule` maps point name -> iterable of 1-based occurrence indices
+    that fault. Occurrence counters persist for the injector's lifetime
+    (spanning supervisor restarts), so "the 5th alloc ever" means exactly
+    that even if the runtime is rebuilt around the same injector."""
+
+    def __init__(self, schedule: Optional[Dict[str, Iterable[int]]] = None):
+        self.schedule: Dict[str, set] = {
+            k: set(int(i) for i in v) for k, v in (schedule or {}).items()}
+        self.counts: Dict[str, int] = {}
+        self.fired: List[tuple] = []       # (point, occurrence) audit log
+
+    @classmethod
+    def random(cls, seed: int, rates: Dict[str, float],
+               horizon: int = 10_000) -> "FaultInjector":
+        """Seeded Bernoulli schedule: occurrence i of `point` faults with
+        probability rates[point], pre-drawn over `horizon` occurrences so
+        the schedule is fixed at construction (replayable)."""
+        rs = np.random.RandomState(seed)
+        schedule = {}
+        for point in sorted(rates):
+            draws = rs.random_sample(horizon) < rates[point]
+            schedule[point] = [i + 1 for i in np.flatnonzero(draws)]
+        return cls(schedule)
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultInjector":
+        """CLI form: "point:occ[+occ...],point:occ" — e.g.
+        "page_alloc:3+7,kill:5" (launch/serve.py --inject)."""
+        schedule: Dict[str, List[int]] = {}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            point, _, occs = part.partition(":")
+            if not occs:
+                raise ValueError(f"--inject entry {part!r} needs "
+                                 "point:occurrence[+occurrence...]")
+            schedule.setdefault(point, []).extend(
+                int(o) for o in occs.split("+"))
+        return cls(schedule)
+
+    def fire(self, point: str) -> bool:
+        """Count one occurrence of `point`; True when it should fault."""
+        n = self.counts.get(point, 0) + 1
+        self.counts[point] = n
+        hit = n in self.schedule.get(point, ())
+        if hit:
+            self.fired.append((point, n))
+        return hit
+
+    def check(self, point: str, exc=InjectedFault) -> None:
+        """fire() and raise `exc` on a hit (decode_step / kill sites)."""
+        if self.fire(point):
+            raise exc(f"injected fault at {point} occurrence "
+                      f"{self.counts[point]}")

@@ -1,0 +1,161 @@
+"""Crash-replay request journal for the serving runtime.
+
+An append-only JSONL log of request lifecycle events. After a serving
+process dies (crash, OOM-kill, injected fault), `Journal.replay` rebuilds
+exactly which requests were in flight, and the runtime re-submits them
+with their original rid, seed and sampling settings — bit-deterministic
+decode (paged == dense, packed == materialized, per-request seeded
+sampling) then reproduces each stream token-identically, so a crash loses
+no requests and duplicates none (DESIGN.md §7).
+
+Record kinds (one JSON object per line, `crc` = crc32 of the record's
+canonical JSON without the crc field):
+
+* ``submit``      — rid + everything needed to re-create the request:
+                    prompt tokens, max_new, sampling settings, stop
+                    tokens, priority, seed. fsync-gated: a request is
+                    only acknowledged once its submit record is durable.
+* ``first_token`` — rid + the TTFT token (observability + a replay-
+                    identity cross-check). fsync-gated.
+* ``retire``      — rid, finish_reason and the full emitted token list;
+                    a retired request is never replayed and its output
+                    survives the crash. fsync-gated.
+* ``preempt`` / ``resume`` / ``replayed`` — observability only (flushed,
+                    not fsynced): preemption counts and recovery audits.
+
+Torn tails are expected — a crash mid-append leaves a partial last line,
+which replay drops (detected by JSON parse or crc failure on the final
+record). A torn or corrupt record *before* the tail is real corruption
+and raises `JournalCorrupt`. Replay deduplicates by rid (submit is
+idempotent, last retire wins), so recovery after a crash *during*
+recovery converges too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import zlib
+from typing import Any, Dict, List, Optional
+
+JOURNAL_NAME = "requests.jsonl"
+
+
+class JournalCorrupt(RuntimeError):
+    """A non-tail journal record failed to parse or checksum."""
+
+
+def _crc(payload: Dict[str, Any]) -> int:
+    return zlib.crc32(json.dumps(payload, sort_keys=True).encode())
+
+
+class Journal:
+    """Append-only, fsync-gated request log under `directory`."""
+
+    def __init__(self, directory: str, fsync: bool = True):
+        os.makedirs(directory, exist_ok=True)
+        self.path = os.path.join(directory, JOURNAL_NAME)
+        self._fsync = fsync
+        self._f = open(self.path, "a", encoding="utf-8")
+        self._seq = 0
+
+    def append(self, ev: str, durable: bool = True, **fields) -> None:
+        rec = {"ev": ev, "seq": self._seq, **fields}
+        rec["crc"] = _crc(rec)
+        self._seq += 1
+        self._f.write(json.dumps(rec, sort_keys=True) + "\n")
+        self._f.flush()
+        if durable and self._fsync:
+            os.fsync(self._f.fileno())
+
+    # -- lifecycle records ---------------------------------------------------
+
+    def record_submit(self, req) -> None:
+        self.append("submit", rid=req.rid,
+                    prompt=[int(t) for t in req.prompt],
+                    max_new_tokens=req.max_new_tokens,
+                    temperature=req.temperature, top_k=req.top_k,
+                    top_p=req.top_p,
+                    stop_tokens=list(req.stop_tokens),
+                    priority=req.priority, seed=req.seed)
+
+    def record_first_token(self, req, token: int) -> None:
+        self.append("first_token", rid=req.rid, token=int(token))
+
+    def record_retire(self, req) -> None:
+        self.append("retire", rid=req.rid,
+                    finish_reason=req.finish_reason,
+                    tokens=[int(t) for t in req.out_tokens])
+
+    def record_preempt(self, req) -> None:
+        self.append("preempt", durable=False, rid=req.rid,
+                    emitted=len(req.out_tokens))
+
+    def record_resume(self, req) -> None:
+        self.append("resume", durable=False, rid=req.rid,
+                    emitted=len(req.out_tokens))
+
+    def record_replayed(self, rid: int) -> None:
+        self.append("replayed", durable=False, rid=rid)
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+    # -- recovery ------------------------------------------------------------
+
+    @staticmethod
+    def replay(directory: str) -> "JournalState":
+        """Parse the journal, tolerating a torn final record (crash mid-
+        append); classify every submitted rid as completed or in-flight."""
+        path = os.path.join(directory, JOURNAL_NAME)
+        records: List[Dict[str, Any]] = []
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as f:
+                lines = f.read().splitlines()
+            for i, line in enumerate(lines):
+                if not line.strip():
+                    continue
+                try:
+                    rec = json.loads(line)
+                    crc = rec.pop("crc")
+                    if crc != _crc(rec):
+                        raise ValueError("crc mismatch")
+                except (ValueError, KeyError, TypeError) as e:
+                    if i == len(lines) - 1:
+                        break        # torn tail: the crash interrupted it
+                    raise JournalCorrupt(
+                        f"{path}: record {i} is corrupt ({e}) but is not "
+                        "the tail — the journal was damaged, not torn"
+                    ) from e
+                records.append(rec)
+        submits: Dict[int, Dict[str, Any]] = {}
+        retires: Dict[int, Dict[str, Any]] = {}
+        first_tokens: Dict[int, int] = {}
+        for rec in records:
+            rid = rec.get("rid")
+            if rec["ev"] == "submit":
+                submits.setdefault(rid, rec)     # idempotent by rid
+            elif rec["ev"] == "retire":
+                retires[rid] = rec               # last retire wins
+            elif rec["ev"] == "first_token":
+                first_tokens.setdefault(rid, rec["token"])
+        inflight = {rid: rec for rid, rec in submits.items()
+                    if rid not in retires}
+        max_rid = max(submits, default=-1)
+        return JournalState(completed=retires, inflight=inflight,
+                            first_tokens=first_tokens, max_rid=max_rid,
+                            records=records)
+
+
+@dataclasses.dataclass
+class JournalState:
+    completed: Dict[int, Dict[str, Any]]    # rid -> retire record
+    inflight: Dict[int, Dict[str, Any]]     # rid -> submit record
+    first_tokens: Dict[int, int]            # rid -> TTFT token
+    max_rid: int
+    records: List[Dict[str, Any]]
+
+    def completed_tokens(self, rid: int) -> Optional[List[int]]:
+        rec = self.completed.get(rid)
+        return None if rec is None else list(rec["tokens"])

@@ -18,8 +18,8 @@ from __future__ import annotations
 import json
 import os
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple, Type
 
 
 @dataclass
@@ -65,8 +65,20 @@ class Heartbeat:
         self.host_id = host_id
 
     def beat(self, step: int):
-        with open(self.path, "w") as f:
-            json.dump({"step": step, "time": time.time()}, f)
+        # atomic publish: write the record to a temp file and rename it
+        # over the live path, so a concurrent reader can never observe a
+        # truncated JSON document (it sees either the old beat or the new
+        # one — a torn read used to be swallowed as a dead host)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump({"step": step, "time": time.time()}, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
 
     @staticmethod
     def alive_hosts(directory: str, dead_after_s: float = 60.0) -> Dict[int, Dict]:
@@ -104,15 +116,40 @@ def plan_recovery(heartbeat_dir: str, expected_hosts: int,
                         lost_hosts=lost)
 
 
-def run_with_restarts(train_fn: Callable[[Optional[int]], int],
+def run_with_restarts(work_fn: Callable[[Optional[int]], int],
                       latest_step_fn: Callable[[], Optional[int]],
-                      max_restarts: int = 3) -> int:
-    """train_fn(resume_step) -> final step; raises on (injected) failure."""
+                      max_restarts: int = 3,
+                      exceptions: Tuple[Type[BaseException], ...]
+                      = (RuntimeError,),
+                      backoff_s: float = 0.0,
+                      backoff_cap_s: float = 30.0,
+                      sleep_fn: Callable[[float], None] = time.sleep) -> int:
+    """Supervisor loop: `work_fn(resume_point) -> result`, restarted from
+    `latest_step_fn()` after each failure.
+
+    Generalized beyond training (the serving runtime's crash-replay
+    supervisor uses it with the journal's retired-request count as the
+    progress signal): only exception types in `exceptions` trigger a
+    restart — anything else propagates immediately; the attempt budget
+    *resets whenever `latest_step_fn()` advances* between failures, so
+    `max_restarts` bounds consecutive no-progress crashes rather than
+    total lifetime failures; retries back off exponentially
+    (`backoff_s · 2^(attempt-1)`, capped at `backoff_cap_s`; 0 disables —
+    `sleep_fn` is injectable for tests)."""
     attempts = 0
+    last_progress = latest_step_fn()
     while True:
         try:
-            return train_fn(latest_step_fn())
-        except RuntimeError:
+            return work_fn(latest_step_fn())
+        except exceptions:
+            progress = latest_step_fn()
+            if progress is not None and (last_progress is None
+                                         or progress > last_progress):
+                attempts = 0       # forward progress: reset the budget
+                last_progress = progress
             attempts += 1
             if attempts > max_restarts:
                 raise
+            if backoff_s > 0.0:
+                sleep_fn(min(backoff_s * 2.0 ** (attempts - 1),
+                             backoff_cap_s))

@@ -10,30 +10,45 @@ COMQ-quantized, optionally packed-on-disk) checkpoint or a fresh init.
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --load-quantized /tmp/q.pkl --num-requests 4 --max-new 16
 
-`--engine paged` (default) drives serve.Runtime — paged KV cache, FCFS
-scheduler, mixed prompt lengths, staggered arrivals. `--engine static`
-keeps the equal-length Engine baseline. `--materialize` dequantizes to a
-dense tree first (the pre-runtime behavior); without it quantized params
-are served as a packed QT-leaf tree.
+    # fault-tolerant serving: journal every request, inject a kill, then
+    # resume — the replayed streams are token-identical
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+        --journal /tmp/j --inject kill:5 --restarts 2
+
+`--engine paged` (default) drives serve.Runtime — paged KV cache,
+priority admission with preemption-by-page-reclaim (`--admission reserve`
+keeps the legacy full-lifetime reservation for A/B), mixed prompt
+lengths, staggered arrivals. `--engine static` keeps the equal-length
+Engine baseline. `--materialize` dequantizes to a dense tree first;
+without it quantized params are served as a packed QT-leaf tree.
+
+`--journal DIR` appends every request lifecycle to a crash-replay journal
+(fsync-gated); `--resume` rebuilds the queue from DIR instead of
+synthesizing prompts; `--restarts N` wraps the drain in the
+`ft.run_with_restarts` supervisor (progress = retired requests, so the
+attempt budget resets whenever any request completes); `--inject SPEC`
+seeds deterministic faults (e.g. "page_alloc:3+7,kill:5").
 """
 from __future__ import annotations
 
 import argparse
 import json
-import pickle
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.ckpt import (pack_tree, strip_for_serving, tree_bytes,
-                        unpack_tree)
+from repro.ckpt import (load_packed_ckpt, pack_tree, save_packed_ckpt,
+                        strip_for_serving, tree_bytes, unpack_tree)
 from repro.configs import get_config, get_smoke_config
 from repro.core import (QuantSpec, materialize, quantize_model,
                         serving_params)
+from repro.ft import (FaultInjector, Journal, SimulatedKill,
+                      run_with_restarts)
 from repro.models import BuildPlan, count_params, init_params
-from repro.serve import Engine, Runtime, ServeConfig, blocks_for
+from repro.serve import (Engine, Runtime, ServeConfig, blocks_for,
+                         recover_runtime)
 
 
 def _quantize(params, cfg, plan, bits: int):
@@ -60,10 +75,11 @@ def main():
     ap.add_argument("--quantize", action="store_true")
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--save-quantized", metavar="PATH", default=None,
-                    help="pack_tree the quantized tree to PATH (pickle)")
+                    help="pack_tree the quantized tree to PATH "
+                         "(headered + crc32-checksummed single file)")
     ap.add_argument("--load-quantized", metavar="PATH", default=None,
                     help="serve from a packed quantized tree on disk "
-                         "instead of re-quantizing")
+                         "instead of re-quantizing (validated header)")
     ap.add_argument("--materialize", action="store_true",
                     help="dequantize to dense before serving (default: "
                          "serve the packed QT tree)")
@@ -85,6 +101,29 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="0 -> sized for num_requests at full length")
+    ap.add_argument("--admission", choices=("preempt", "reserve"),
+                    default="preempt",
+                    help="preempt: incremental pages + preemption-by-page-"
+                         "reclaim; reserve: legacy full-lifetime "
+                         "reservation (A/B)")
+    ap.add_argument("--priorities", default=None, metavar="CSV",
+                    help="per-request priority classes (lower = more "
+                         "urgent), e.g. '0,1,1,0'; cycled if shorter "
+                         "than --num-requests")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="append a crash-replay request journal to DIR "
+                         "(paged engine only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="rebuild the queue from --journal DIR and replay "
+                         "in-flight requests instead of submitting new "
+                         "ones")
+    ap.add_argument("--restarts", type=int, default=0, metavar="N",
+                    help="supervise the drain with ft.run_with_restarts: "
+                         "recover from the journal up to N consecutive "
+                         "no-progress crashes (requires --journal)")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="deterministic fault schedule, e.g. "
+                         "'page_alloc:3+7,decode_step:5,kill:9'")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -95,6 +134,8 @@ def main():
               "cache static engine (paged runtime is attention-family "
               "only; see ROADMAP)")
         args.engine = "static"
+    if (args.resume or args.restarts) and not args.journal:
+        raise SystemExit("--resume/--restarts need --journal DIR")
     # bf16 deployment baseline: 2 bytes/param regardless of master dtype
     # (analytic count — no dense tree is allocated just to measure it)
     bf16_bytes = 2 * count_params(cfg, plan)
@@ -102,8 +143,7 @@ def main():
     params = None
     qparams = None
     if args.load_quantized:
-        with open(args.load_quantized, "rb") as f:
-            blob = pickle.load(f)
+        blob = load_packed_ckpt(args.load_quantized)
         saved_arch = blob.get("arch")
         if saved_arch is not None and saved_arch != cfg.name:
             raise SystemExit(
@@ -125,9 +165,8 @@ def main():
         host = jax.tree_util.tree_map(
             lambda a: np.asarray(jax.device_get(a))
             if hasattr(a, "dtype") else a, packed)
-        with open(args.save_quantized, "wb") as f:
-            pickle.dump({"tree": host, "bits": args.bits, "arch": cfg.name},
-                        f)
+        save_packed_ckpt(args.save_quantized, host, bits=args.bits,
+                         arch=cfg.name)
         print(f"saved packed tree to {args.save_quantized}: "
               f"{tree_bytes(packed):,} bytes vs {bf16_bytes:,} bf16 "
               f"({bf16_bytes / tree_bytes(packed):.1f}x smaller)")
@@ -154,6 +193,10 @@ def main():
                                args.num_requests)]
     prompts = [rs.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
                for l in lens]
+    priorities = [0] * args.num_requests
+    if args.priorities:
+        cycle = [int(p) for p in args.priorities.split(",")]
+        priorities = [cycle[i % len(cycle)] for i in range(args.num_requests)]
 
     t0 = time.time()
     if args.engine == "static":
@@ -175,28 +218,67 @@ def main():
     bucket = 1 << max(args.prompt_len - 1, 1).bit_length()
     maxb = blocks_for(bucket + args.max_new, args.block_size)
     num_blocks = args.num_blocks or maxb * min(args.num_requests, 8)
-    rt = Runtime(params, cfg, plan,
-                 ServeConfig(max_slots=min(args.num_requests, 8),
-                             block_size=args.block_size,
-                             num_blocks=num_blocks,
-                             buckets=(bucket // 4, bucket // 2, bucket),
-                             max_blocks_per_slot=maxb))
+    serve_cfg = ServeConfig(max_slots=min(args.num_requests, 8),
+                            block_size=args.block_size,
+                            num_blocks=num_blocks,
+                            buckets=(bucket // 4, bucket // 2, bucket),
+                            max_blocks_per_slot=maxb,
+                            policy=args.admission)
+    injector = FaultInjector.parse(args.inject) if args.inject else None
     kw = dict(max_new_tokens=args.max_new, temperature=args.temperature,
               top_k=args.top_k, top_p=args.top_p,
               stop_tokens=tuple(args.stop_token))
-    n_up_front = args.stagger if args.stagger > 0 else len(prompts)
-    reqs = [rt.submit(p, **kw) for p in prompts[:n_up_front]]
-    for p in prompts[n_up_front:]:
-        rt.step()
-        reqs.append(rt.submit(p, **kw))
-    metrics = rt.run()
+
+    def build(resume: bool):
+        if resume:
+            rt, state = recover_runtime(params, cfg, plan, args.journal,
+                                        serve_cfg, injector=injector)
+            print(f"resume: {len(state.completed)} retired in journal, "
+                  f"replaying {len(state.inflight)} in-flight")
+            return rt, list(rt.scheduler.queue)
+        journal = Journal(args.journal) if args.journal else None
+        rt = Runtime(params, cfg, plan, serve_cfg, journal=journal,
+                     injector=injector)
+        n_up_front = args.stagger if args.stagger > 0 else len(prompts)
+        reqs = [rt.submit(p, priority=pr, **kw)
+                for p, pr in zip(prompts[:n_up_front],
+                                 priorities[:n_up_front])]
+        for p, pr in zip(prompts[n_up_front:], priorities[n_up_front:]):
+            rt.step()
+            reqs.append(rt.submit(p, priority=pr, **kw))
+        return rt, reqs
+
+    if args.restarts > 0:
+        box = {}
+
+        def attempt(_):
+            # first attempt honors --resume; every restart replays the
+            # journal (the previous runtime's requests are in it)
+            rt, reqs = build(args.resume or "rt" in box)
+            box["rt"], box["reqs"] = rt, reqs
+            return rt.run()
+
+        def progress():
+            return len(Journal.replay(args.journal).completed)
+
+        metrics = run_with_restarts(
+            attempt, progress, max_restarts=args.restarts,
+            exceptions=(RuntimeError, SimulatedKill), backoff_s=0.0)
+        rt, reqs = box["rt"], box["reqs"]
+    else:
+        rt, reqs = build(args.resume)
+        metrics = rt.run()
+
     metrics.update({
         "arch": cfg.name, "engine": "paged",
+        "admission": args.admission,
         "packed_qt": packed_serve,
-        "prompt_lens": lens,
+        "prompt_lens": [int(r.prompt_len) for r in reqs],
         "ttft_s": [round(t, 4) for t in metrics["ttft_s"]],
-        "sample": reqs[0].out_tokens[:8],
+        "sample": reqs[0].out_tokens[:8] if reqs else [],
     })
+    if injector is not None:
+        metrics["faults_fired"] = injector.fired
     metrics = {k: (round(v, 4) if isinstance(v, float) else v)
                for k, v in metrics.items()}
     print(json.dumps(metrics))

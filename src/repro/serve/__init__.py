@@ -1,13 +1,17 @@
 """Serving subsystem.
 
 `Runtime` (serve/runtime.py) is the continuous-batching paged-KV serving
-loop — mixed lengths, staggered arrivals, packed-QT params. `Engine`
+loop — priority admission, preemption-by-page-reclaim, mixed lengths,
+staggered arrivals, packed-QT params, optional crash-replay journal
+(`recover_runtime` rebuilds the queue after a process death). `Engine`
 (serve/engine.py) is the static-slot equal-length batcher kept as the
 equivalence baseline.
 """
 from repro.serve.engine import Engine  # noqa: F401
 from repro.serve.kv_cache import (BlockAllocator, blocks_for,  # noqa: F401
                                   init_paged_cache, paged_cache_bytes)
-from repro.serve.runtime import Runtime, ServeConfig  # noqa: F401
-from repro.serve.sampler import sample, sample_batch  # noqa: F401
+from repro.serve.runtime import (Runtime, ServeConfig,  # noqa: F401
+                                 recover_runtime)
+from repro.serve.sampler import (sample, sample_batch,  # noqa: F401
+                                 sample_batch_seeded)
 from repro.serve.scheduler import Request, Scheduler  # noqa: F401

@@ -23,7 +23,7 @@ prefill caches land on the right pages).
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,12 +55,19 @@ def paged_cache_bytes(cfg, plan, num_blocks: int, block_size: int) -> int:
 class BlockAllocator:
     """Host-side free list over the physical pages. No device state: the
     pool itself never moves — allocation only decides which page ids a
-    slot's block-table row points at."""
+    slot's block-table row points at.
 
-    def __init__(self, num_blocks: int):
+    `fail_hook` is the fault-injection seam (ft/inject.py): when set and it
+    returns True, alloc reports exhaustion even with pages free —
+    exercising the backpressure/preemption paths deterministically."""
+
+    def __init__(self, num_blocks: int,
+                 fail_hook: Optional[Callable[[], bool]] = None):
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._held: set = set()
         self.peak_in_use = 0
+        self.fail_hook = fail_hook
 
     @property
     def num_free(self) -> int:
@@ -71,10 +78,14 @@ class BlockAllocator:
         return self.num_blocks - len(self._free)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n pages, or None when exhausted (admission backpressure)."""
+        """n pages, or None when exhausted (admission backpressure /
+        preemption trigger) or when the injected fault hook fires."""
+        if self.fail_hook is not None and self.fail_hook():
+            return None
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
+        self._held.update(out)
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return out
 
@@ -82,9 +93,25 @@ class BlockAllocator:
         for b in blocks:
             if b < 0 or b >= self.num_blocks:
                 raise ValueError(f"freeing unknown block {b}")
-            if b in self._free:
+            if b not in self._held:
                 raise ValueError(f"double free of block {b}")
+        for b in blocks:
+            self._held.discard(b)
         self._free.extend(blocks)
+
+    def check_integrity(self) -> None:
+        """Free list and held set must exactly partition the pool — the
+        no-leak/no-double-free oracle the fault tests assert after every
+        injected failure."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("duplicate page ids on the free list")
+        if free & self._held:
+            raise AssertionError(
+                f"pages both free and held: {sorted(free & self._held)}")
+        if len(free) + len(self._held) != self.num_blocks:
+            missing = set(range(self.num_blocks)) - free - self._held
+            raise AssertionError(f"leaked pages: {sorted(missing)}")
 
 
 def write_prefill(pool: Dict[str, Array], k_seq: Array, v_seq: Array,

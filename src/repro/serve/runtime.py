@@ -2,26 +2,35 @@
 
 The runtime ties together:
 
-* `serve/scheduler.py` — FCFS admission, prefill buckets, backpressure;
+* `serve/scheduler.py` — priority admission, prefill buckets, incremental
+  page allocation + preemption-by-page-reclaim (or the legacy
+  full-lifetime reservation under ``policy="reserve"``);
 * `serve/kv_cache.py` — the paged pool + block tables + host allocator;
 * `models/model.py::decode_step_paged` — one jitted decode program with
   per-slot positions, so slots at different sequence lengths (mixed
   lengths, staggered arrivals) share every decode step;
-* `serve/sampler.py::sample_batch` — per-slot sampling settings as arrays.
+* `serve/sampler.py::sample_batch_seeded` — per-slot sampling settings as
+  arrays, with every draw a pure function of (request seed, token index);
+* `ft/journal.py` — optional crash-replay request journal: submits,
+  first tokens and retirements are fsync-gated, and `recover_runtime`
+  rebuilds the queue after a process death, replaying in-flight requests
+  token-identically (bit-deterministic decode + seeded sampling);
+* `ft/inject.py` — optional deterministic fault injection (page-alloc
+  failure, decode-step exception, callback error, simulated kill) for the
+  invariant tests.
 
 Compile surface is bounded and static: one prefill program per bucket
-length, one scatter program per prefill-cache extent, one decode program,
-one sampler program. The pool is donated through prefill-writes and decode
-steps so XLA updates pages in place.
+length (resume extents round up to powers of two), one scatter program per
+prefill-cache extent, one decode program, one sampler program. The pool is
+donated through prefill-writes and decode steps so XLA updates pages in
+place.
 
-Params may be dense, materialized, or a *packed* QT-leaf tree
-(`core/apply.serving_params`) — QT projections stay packed in HBM and
-route through the dequant-fused quant_matmul inside the decode scan; no
-`materialize` call anywhere on the serve path.
-
-Host/device traffic per decode step: one (B,) token fetch (required to
-stream tokens and retire finished requests) and the small int32 control
-arrays (tokens, positions, block tables) going down.
+Preemption is recompute-based: the victim's pages are freed and it
+re-queues; on re-admission the runtime re-prefills prompt + all emitted
+tokens but the last, then feeds the last emitted token through the normal
+decode step — every resumed token is produced by the same decode program
+as an uninterrupted run, which is what makes preempt/resume
+token-identity hold (and testable) rather than merely approximate.
 """
 from __future__ import annotations
 
@@ -33,10 +42,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ft.inject import InjectedFault, SimulatedKill  # noqa: F401
+from repro.ft.journal import Journal
 from repro.models.model import decode_step_paged, forward
-from repro.serve.kv_cache import (BlockAllocator, init_paged_cache,
-                                  paged_cache_bytes, write_prefill)
-from repro.serve.sampler import sample_batch
+from repro.serve.kv_cache import (BlockAllocator, blocks_for,
+                                  init_paged_cache, paged_cache_bytes,
+                                  write_prefill)
+from repro.serve.sampler import sample_batch_seeded
 from repro.serve.scheduler import DEFAULT_BUCKETS, Request, Scheduler
 
 
@@ -48,12 +60,14 @@ class ServeConfig:
     buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     max_blocks_per_slot: Optional[int] = None
     rng_seed: int = 0
+    policy: str = "preempt"          # "preempt" | "reserve" (legacy A/B)
 
 
 class Runtime:
     """Continuous-batching runtime: submit() requests, run() to drain."""
 
-    def __init__(self, params, cfg, plan, serve_cfg: ServeConfig = None):
+    def __init__(self, params, cfg, plan, serve_cfg: ServeConfig = None,
+                 journal: Optional[Journal] = None, injector=None):
         if cfg.attn_free or cfg.parallel_ssm_heads or cfg.family == "vlm":
             raise NotImplementedError(
                 f"paged runtime does not cover family={cfg.family!r} / "
@@ -67,13 +81,18 @@ class Runtime:
         self.plan = plan
         sc = serve_cfg or ServeConfig()
         self.serve_cfg = sc
-        self.rng = jax.random.PRNGKey(sc.rng_seed)
+        self.journal = journal
+        self.injector = injector
 
-        self.allocator = BlockAllocator(sc.num_blocks)
+        fail_hook = None
+        if injector is not None:
+            fail_hook = lambda: injector.fire("page_alloc")  # noqa: E731
+        self.allocator = BlockAllocator(sc.num_blocks, fail_hook=fail_hook)
         self.scheduler = Scheduler(sc.max_slots, self.allocator,
                                    buckets=sc.buckets,
                                    block_size=sc.block_size,
-                                   max_blocks_per_slot=sc.max_blocks_per_slot)
+                                   max_blocks_per_slot=sc.max_blocks_per_slot,
+                                   policy=sc.policy)
         self.maxb = self.scheduler.max_blocks_per_slot
         self.pool = init_paged_cache(cfg, plan, sc.num_blocks, sc.block_size)
 
@@ -85,6 +104,8 @@ class Runtime:
         self._temp = np.zeros((B,), np.float32)
         self._topk = np.zeros((B,), np.int32)
         self._topp = np.zeros((B,), np.float32)
+        self._seed = np.zeros((B,), np.uint32)   # per-request sampling seed
+        self._count = np.zeros((B,), np.int32)   # tokens emitted so far
 
         self._prefill_cache: Dict[int, object] = {}
         self._write_cache: Dict[int, object] = {}
@@ -93,14 +114,16 @@ class Runtime:
                 p, cfg, plan, pool, bt, t, pos),
             donate_argnums=(1,))
         self._sample = jax.jit(
-            lambda lg, k, t, tk, tp: sample_batch(
-                lg, k, temperature=t, top_k=tk, top_p=tp))
+            lambda lg, sd, ct, t, tk, tp: sample_batch_seeded(
+                lg, sd, ct, temperature=t, top_k=tk, top_p=tp))
         # all-greedy fast path: skips the (B, V) sort/softmax machinery
         self._argmax = jax.jit(
             lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
         # run() metrics
         self.steps = 0
         self.decode_seconds = 0.0
+        self._occ_sum = 0.0          # live-token occupancy, summed per step
+        self._occ_steps = 0
 
     # -- jitted closures (bounded: one per bucket / cache extent) ------------
 
@@ -137,22 +160,75 @@ class Runtime:
 
     def submit(self, prompt, max_new_tokens: int = 32,
                temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
-               stop_tokens=(), stream_cb=None) -> Request:
+               stop_tokens=(), stream_cb=None, priority: int = 0,
+               seed: Optional[int] = None) -> Request:
         req = Request(prompt=np.asarray(prompt, np.int32).reshape(-1),
                       max_new_tokens=max_new_tokens, temperature=temperature,
                       top_k=top_k, top_p=top_p,
                       stop_tokens=tuple(int(t) for t in stop_tokens),
-                      stream_cb=stream_cb)
-        return self.scheduler.submit(req)
+                      stream_cb=stream_cb, priority=priority, seed=seed)
+        self.scheduler.submit(req)
+        if req.seed is None:
+            # deterministic per-request default, journaled for replay
+            req.seed = (self.serve_cfg.rng_seed * 1_000_003
+                        + req.rid) & 0x7FFFFFFF
+        if self.journal is not None:
+            self.journal.record_submit(req)
+        return req
 
     # -- serving loop --------------------------------------------------------
 
-    def _admit_one(self, req: Request) -> None:
+    def _emit(self, req: Request, token: int, now: float) -> None:
+        inj = self.injector
+        if inj is not None and req.stream_cb is not None:
+            orig = req.stream_cb
+
+            def guarded(r, t):
+                if inj.fire("callback"):
+                    raise InjectedFault("injected stream-callback failure")
+                orig(r, t)
+
+            req.stream_cb = guarded
+            try:
+                req.emit(token, now)    # cb errors contained per-request
+            finally:
+                req.stream_cb = orig
+        else:
+            req.emit(token, now)
+
+    def _clear_slot(self, req: Request) -> None:
+        """Scheduler preemption callback: wipe the victim's device-side
+        slot state while `req.slot` is still assigned."""
+        s = req.slot
+        self._pos[s] = -1
+        self._bt[s] = 0
+        self._tok[s] = 0
+        self._temp[s] = 0.0
+        self._topk[s] = 0
+        self._topp[s] = 0.0
+        self._seed[s] = 0
+        self._count[s] = 0
+        if self.journal is not None:
+            self.journal.record_preempt(req)
+
+    def _admit_one(self, req: Request) -> int:
+        """Prefill + scatter for a newly (re-)admitted request. Fresh
+        requests sample their first token from the prefill logits (TTFT)
+        and return 1; resumed requests re-prefill prompt + emitted[:-1]
+        and feed emitted[-1] through the next decode step — every resumed
+        token then comes from the same decode program as an uninterrupted
+        run (token-identity), and 0 new tokens are emitted here."""
         sched = self.scheduler
-        bucket = sched.bucket_for(req.prompt_len)
-        tlen = req.prompt_len
+        resume = bool(req.out_tokens)
+        if resume:
+            tokens_in = np.concatenate(
+                [req.prompt, np.asarray(req.out_tokens[:-1], np.int32)])
+        else:
+            tokens_in = req.prompt
+        tlen = int(len(tokens_in))
+        bucket = sched.bucket_for(tlen, extend=resume)
         tokens = np.zeros((1, bucket), np.int32)
-        tokens[0, :tlen] = req.prompt
+        tokens[0, :tlen] = tokens_in
         logits, cache = self._prefill_fn(bucket)(self.params,
                                                  jnp.asarray(tokens))
         kv = cache["kv"]
@@ -162,71 +238,111 @@ class Runtime:
         self.pool = self._write_fn(int(kv.k.shape[2]))(
             self.pool, kv.k[:, 0], kv.v[:, 0], kv.pos[0, 0],
             jnp.int32(tlen), table_row_j)
+        s = req.slot
+        self._bt[s] = table_row
+        self._pos[s] = tlen          # next decode writes K/V here
+        self._temp[s] = req.temperature
+        self._topk[s] = req.top_k
+        self._topp[s] = req.top_p
+        self._seed[s] = np.uint32(req.seed or 0)
+        if resume:
+            self._tok[s] = req.out_tokens[-1]
+            self._count[s] = len(req.out_tokens)
+            if self.journal is not None:
+                self.journal.record_resume(req)
+            return 0
         # first token comes straight from the prefill logits (TTFT token)
         if req.temperature <= 0.0:
             first = self._argmax(logits[:, tlen - 1])
         else:
-            self.rng, key = jax.random.split(self.rng)
             first = self._sample(
                 logits[:, tlen - 1],
-                key,
+                jnp.asarray([req.seed or 0], jnp.uint32),
+                jnp.asarray([0], jnp.int32),
                 jnp.asarray([req.temperature], jnp.float32),
                 jnp.asarray([req.top_k], jnp.int32),
                 jnp.asarray([req.top_p], jnp.float32))
         first = int(np.asarray(first)[0])
-        req.emit(first, time.time())
-        s = req.slot
-        self._bt[s] = table_row
-        self._pos[s] = tlen          # next decode writes the first token here
+        self._emit(req, first, time.time())
         self._tok[s] = first
-        self._temp[s] = req.temperature
-        self._topk[s] = req.top_k
-        self._topp[s] = req.top_p
+        self._count[s] = 1
+        if self.journal is not None:
+            self.journal.record_first_token(req, first)
         if req.finished():       # max_new == 1, or the TTFT token is a stop
             self._retire(req)
+        return 1
 
     def _retire(self, req: Request) -> None:
         s = req.slot
+        # the retire record is the source of truth for "delivered": it is
+        # durable before the pages are reused, so a crash can re-stream a
+        # request's tokens (at-least-once) but never lose or re-run a
+        # retired request
+        req.finished()               # ensure finish_reason is set
+        if self.journal is not None:
+            self.journal.record_retire(req)
         self.scheduler.release(req)
         self._pos[s] = -1
         self._bt[s] = 0
         self._tok[s] = 0
+        self._count[s] = 0
 
     def step(self) -> int:
-        """Admit what fits, then run one decode step for all active slots.
-        Returns the number of tokens emitted (prefill first-tokens
-        included)."""
+        """Admit what fits (possibly preempting lower-priority victims),
+        grow pages for the rows this step writes (possibly preempting),
+        then run one decode step for all active slots. Returns the number
+        of tokens emitted (prefill first-tokens included)."""
+        if self.injector is not None:
+            self.injector.check("kill", SimulatedKill)
         emitted = 0
-        for req in self.scheduler.admit():
-            self._admit_one(req)
-            emitted += 1          # the prefill-sampled first token
+        for req in self.scheduler.admit(on_preempt=self._clear_slot):
+            emitted += self._admit_one(req)
+        bs = self.serve_cfg.block_size
+        for s, req in sorted(self.scheduler.running.items()):
+            if req.state != "running":      # preempted earlier this pass
+                continue
+            needed = int(self._pos[s]) // bs + 1
+            self.scheduler.ensure_pages(req, needed,
+                                        on_preempt=self._clear_slot)
         running = dict(self.scheduler.running)
         if not running:
             return emitted
+        for s, req in running.items():
+            self._bt[s, :len(req.blocks)] = req.blocks   # grown tables
+        if self.injector is not None:
+            self.injector.check("decode_step")
         t0 = time.time()
         logits, self.pool = self._decode(
             self.params, self.pool, jnp.asarray(self._bt),
             jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos))
         if (self._temp > 0.0).any():
-            self.rng, key = jax.random.split(self.rng)
             toks = np.asarray(self._sample(
-                logits, key, jnp.asarray(self._temp),
-                jnp.asarray(self._topk), jnp.asarray(self._topp)))
+                logits, jnp.asarray(self._seed), jnp.asarray(self._count),
+                jnp.asarray(self._temp), jnp.asarray(self._topk),
+                jnp.asarray(self._topp)))
         else:
             toks = np.asarray(self._argmax(logits))
         now = time.time()
         self.steps += 1
         self.decode_seconds += now - t0
         for s, req in running.items():
-            req.emit(int(toks[s]), now)
+            self._emit(req, int(toks[s]), now)
             emitted += 1
             self._pos[s] += 1
             self._tok[s] = int(toks[s])
+            self._count[s] += 1
             # stop-token or length: slot + pages free on this very step, so
             # queued requests can admit next step. Tokens after the stop
             # are never emitted — metrics count what was actually streamed.
             if req.finished():
                 self._retire(req)
+        # live-token occupancy: pages actually holding written K/V rows —
+        # under "reserve" this is what full-lifetime reservation caps
+        live = sum(blocks_for(int(self._pos[s]), bs)
+                   for s in range(self.serve_cfg.max_slots)
+                   if self._pos[s] >= 0)
+        self._occ_sum += live / self.allocator.num_blocks
+        self._occ_steps += 1
         return emitted
 
     def run(self) -> Dict[str, object]:
@@ -237,12 +353,15 @@ class Runtime:
         t0 = time.time()
         done_before = len(self.scheduler.completed)
         steps_before = self.steps
+        occ_sum0, occ_n0 = self._occ_sum, self._occ_steps
+        preempt0 = self.scheduler.preemptions
         new_tokens = 0
         while not self.scheduler.idle:
             new_tokens += self.step()
         wall = time.time() - t0
         done = self.scheduler.completed[done_before:]
         itls = [dt for r in done for dt in r.itl]
+        occ_n = self._occ_steps - occ_n0
         return {
             "requests": len(done),
             "finish_reasons": [r.finish_reason for r in done],
@@ -251,11 +370,16 @@ class Runtime:
             "tok_per_s": new_tokens / max(wall, 1e-9),
             "ttft_s": [r.ttft for r in done],
             "itl_mean_s": float(np.mean(itls)) if itls else 0.0,
+            "itl_p50_s": float(np.percentile(itls, 50)) if itls else 0.0,
+            "itl_p99_s": float(np.percentile(itls, 99)) if itls else 0.0,
             "decode_steps": self.steps - steps_before,
+            "preemptions": self.scheduler.preemptions - preempt0,
             "cache_blocks": self.allocator.num_blocks,
             "cache_peak_blocks": self.allocator.peak_in_use,
             "cache_peak_occupancy": (self.allocator.peak_in_use
                                      / self.allocator.num_blocks),
+            "mean_live_occupancy": ((self._occ_sum - occ_sum0) / occ_n
+                                    if occ_n else 0.0),
             "cache_bytes": paged_cache_bytes(
                 self.cfg, self.plan, self.serve_cfg.num_blocks,
                 self.serve_cfg.block_size),
@@ -265,9 +389,37 @@ class Runtime:
 
     def generate(self, prompts, max_new_tokens: int = 32, **kw
                  ) -> List[np.ndarray]:
-        """Submit `prompts` (list of 1-D int arrays) FCFS, drain, and return
-        each request's tokens in submission order."""
+        """Submit `prompts` (list of 1-D int arrays) in order, drain, and
+        return each request's tokens in submission order."""
         reqs = [self.submit(p, max_new_tokens=max_new_tokens, **kw)
                 for p in prompts]
         self.run()
         return [np.asarray(r.out_tokens, np.int32) for r in reqs]
+
+
+def recover_runtime(params, cfg, plan, journal_dir: str,
+                    serve_cfg: ServeConfig = None, injector=None,
+                    fsync: bool = True):
+    """Crash-recovery entry point: rebuild a Runtime from a request
+    journal after a process death. Retired requests are never re-run
+    (their tokens live in the journal); every in-flight request is
+    re-submitted exactly once under its original rid/seed/settings, so
+    draining the returned runtime replays each stream token-identically
+    to the uninterrupted run. Returns ``(runtime, journal_state)`` —
+    `journal_state.completed` holds the pre-crash outputs."""
+    state = Journal.replay(journal_dir)
+    journal = Journal(journal_dir, fsync=fsync)
+    rt = Runtime(params, cfg, plan, serve_cfg, journal=journal,
+                 injector=injector)
+    rt.scheduler.advance_rids(state.max_rid)
+    for rid in sorted(state.inflight):
+        rec = state.inflight[rid]
+        req = Request(prompt=np.asarray(rec["prompt"], np.int32),
+                      max_new_tokens=rec["max_new_tokens"],
+                      temperature=rec["temperature"],
+                      top_k=rec["top_k"], top_p=rec["top_p"],
+                      stop_tokens=tuple(rec["stop_tokens"]),
+                      priority=rec["priority"], seed=rec["seed"])
+        rt.scheduler.resubmit(req, rid)
+        journal.record_replayed(rid)
+    return rt, state

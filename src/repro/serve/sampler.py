@@ -48,6 +48,30 @@ def sample_batch(logits, rng, *, temperature, top_k, top_p):
     return jnp.where(temperature <= 0.0, greedy, drawn).astype(jnp.int32)
 
 
+def sample_batch_seeded(logits, seeds, counts, *, temperature, top_k,
+                        top_p):
+    """Replayable per-request sampling: logits (B, V); seeds (B,) uint32
+    per-request sampling seeds; counts (B,) int32 index of the token being
+    drawn. Row i's draw is a pure function of (seeds[i], counts[i]) — not
+    of the slot index, the decode-step count, or which other requests
+    share the batch — so a preempted/resumed or crash-replayed request
+    redraws its exact stream (DESIGN.md §7). Greedy rows (temperature<=0)
+    ignore the rng entirely."""
+    temperature = jnp.asarray(temperature, jnp.float32)
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature,
+                                                      1e-6)[:, None]
+    masked = _nucleus_mask(scaled, top_k, top_p)
+    keys = jax.vmap(lambda s, c: jax.random.fold_in(
+        jax.random.PRNGKey(s), c))(jnp.asarray(seeds, jnp.uint32),
+                                   jnp.asarray(counts, jnp.int32))
+    drawn = jax.vmap(lambda k, row: jax.random.categorical(k, row))(
+        keys, masked)
+    greedy = jnp.argmax(logits, axis=-1)
+    return jnp.where(temperature <= 0.0, greedy, drawn).astype(jnp.int32)
+
+
 def sample(logits, rng, *, temperature: float = 0.0, top_k: int = 0,
            top_p: float = 0.0):
     """logits: (B, V) -> (B,) int32. Static (python-scalar) config form."""

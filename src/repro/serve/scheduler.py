@@ -1,26 +1,47 @@
-"""FCFS continuous-batching scheduler: admission, bucketing, backpressure.
+"""Continuous-batching scheduler: priority admission, page accounting,
+preemption-by-page-reclaim.
 
 Host-side policy only — no device arrays. The runtime asks the scheduler
-which queued requests can start *now*; a request is admissible when a
-decode slot is free AND the block allocator can reserve every page the
-request will ever need (prompt + max_new tokens). Reserving the full
-lifetime up front keeps the system deadlock-free without preemption: an
-admitted request always runs to completion. When the pool is exhausted the
-queue simply waits (cache-exhaustion backpressure) and drains FCFS as
-completions free pages.
+which queued requests can start *now* and, each decode step, for the pages
+the step is about to write. Two admission policies:
+
+* ``policy="preempt"`` (default) — **incremental allocation**: admission
+  needs a decode slot plus only the pages the prefill will write; decode
+  growth allocates one page at a time (`ensure_pages`). On pool exhaustion
+  the scheduler reclaims pages by preempting the *victim* — the running
+  request with the numerically largest ``(priority, rid)``, i.e. the least
+  important, latest-arrived one — freeing its pages and re-queueing it for
+  recompute-based resume (the runtime re-prefills prompt + already-emitted
+  tokens; bit-determinism makes the resumed stream token-identical, which
+  is what the fault tests assert). A preempted request keeps its rid, so
+  within its priority class it re-admits ahead of anything newer —
+  starvation-free. Reservation no longer caps occupancy: pages track live
+  tokens.
+* ``policy="reserve"`` — the PR-4 behavior kept for A/B
+  (`serve/preempt_occupancy_vs_reserved` bench): every page the request
+  can ever touch is reserved at admission, so an admitted request runs to
+  completion with no preemption; exhaustion backpressures the queue.
+
+Admission is ordered by ``(priority, rid)`` — priority class first (lower
+= more urgent), arrival order within a class; `priority=0` everywhere
+degrades to the old strict FCFS. The head of the order blocks later
+requests (no head-of-line bypass), and under ``preempt`` a head that is
+*strictly* more urgent than a running victim may reclaim that victim's
+slot/pages at admission too.
 
 Prompts are padded to a small static set of bucket lengths so the jitted
 prefill closures recompile at most once per bucket (right-padding: causal
 attention makes the prefix K/V and the last-prompt-token logits exact; pad
-rows are never copied into the paged pool).
+rows are never copied into the paged pool). Resumed requests re-prefill
+prompt + emitted tokens, which can exceed the configured buckets — those
+extend to the next power of two (still a bounded compile set).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
-from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -29,16 +50,20 @@ from repro.serve.kv_cache import BlockAllocator, blocks_for
 DEFAULT_BUCKETS = (16, 32, 64, 128, 256, 512)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)     # identity equality: queue bookkeeping
 class Request:
-    """A generation request and its full lifecycle record (absorbs the old
-    serve/engine.py Request, whose out_tokens were never written).
+    """A generation request and its full lifecycle record.
 
-    `stop_tokens` terminates generation early: the stop token itself is
-    emitted (it closes the stream) and the request retires on the same
-    step — its slot and every reserved page return to the pool
-    immediately, so EOS-heavy traffic frees KV memory long before
-    max_new_tokens. `finish_reason` records which bound fired."""
+    `priority` is the admission class: lower is more urgent; ties admit in
+    arrival order. `seed` makes sampling replayable — every sampled token
+    is a pure function of (seed, token index), independent of batch
+    composition, decode-step count or slot, so a preempted/resumed or
+    crash-replayed request redraws the identical stream. `stop_tokens`
+    terminates generation early (the stop token itself is emitted and the
+    request retires on the same step). `finish_reason` records which bound
+    fired. Exceptions raised by `stream_cb` are contained (recorded in
+    `cb_errors`) — a broken consumer must not poison the shared decode
+    batch."""
     prompt: np.ndarray                  # (T,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
@@ -46,6 +71,8 @@ class Request:
     top_p: float = 0.0
     stop_tokens: Tuple[int, ...] = ()
     stream_cb: Optional[Callable[["Request", int], None]] = None
+    priority: int = 0
+    seed: Optional[int] = None
     # filled by scheduler/runtime
     rid: int = -1
     state: str = "queued"               # queued | running | done
@@ -57,6 +84,8 @@ class Request:
     t_done: float = 0.0
     itl: List[float] = dataclasses.field(default_factory=list)
     finish_reason: str = ""             # "stop_token" | "length"
+    n_preempts: int = 0
+    cb_errors: List[BaseException] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
@@ -74,12 +103,13 @@ class Request:
         self._t_last = now
         self.out_tokens.append(int(token))
         if self.stream_cb is not None:
-            self.stream_cb(self, int(token))
+            try:
+                self.stream_cb(self, int(token))
+            except Exception as e:   # noqa: BLE001 — contain consumer bugs
+                self.cb_errors.append(e)
 
     def finished(self) -> bool:
-        """Stop-token or length bound reached; sets finish_reason. The
-        lifetime page reservation is unchanged — stopping early only
-        *frees* pages sooner, so admission stays deadlock-free."""
+        """Stop-token or length bound reached; sets finish_reason."""
         if self.out_tokens and self.out_tokens[-1] in self.stop_tokens:
             self.finish_reason = "stop_token"
             return True
@@ -89,40 +119,56 @@ class Request:
         return False
 
 
+def _order_key(req: Request) -> Tuple[int, int]:
+    return (req.priority, req.rid)
+
+
 class Scheduler:
-    """FCFS queue + slot table + page accounting over a BlockAllocator."""
+    """Priority queue + slot table + page accounting over a BlockAllocator."""
 
     def __init__(self, max_slots: int, allocator: BlockAllocator,
                  buckets: Tuple[int, ...] = DEFAULT_BUCKETS,
                  block_size: int = 16,
-                 max_blocks_per_slot: Optional[int] = None):
+                 max_blocks_per_slot: Optional[int] = None,
+                 policy: str = "preempt"):
+        if policy not in ("preempt", "reserve"):
+            raise ValueError(f"unknown admission policy {policy!r}")
         self.max_slots = max_slots
         self.allocator = allocator
         self.buckets = tuple(sorted(buckets))
         self.block_size = block_size
+        self.policy = policy
         self.max_blocks_per_slot = (
             max_blocks_per_slot
             if max_blocks_per_slot is not None
             else blocks_for(self.buckets[-1] + 64, block_size))
-        self.queue: Deque[Request] = deque()
+        self.queue: List[Request] = []
         self.running: Dict[int, Request] = {}     # slot -> request
         self._free_slots = list(range(max_slots - 1, -1, -1))
         self._rid = itertools.count()
         self.completed: List[Request] = []
+        self.preemptions = 0
 
     # -- intake --------------------------------------------------------------
 
-    def bucket_for(self, prompt_len: int) -> int:
+    def bucket_for(self, prompt_len: int, extend: bool = False) -> int:
         for b in self.buckets:
             if prompt_len <= b:
                 return b
+        if extend:
+            # resumed requests re-prefill prompt + emitted tokens, which is
+            # bounded by prompt + max_new — power-of-two extents keep the
+            # extra compile set small
+            return 1 << max(prompt_len - 1, 1).bit_length()
         raise ValueError(f"prompt length {prompt_len} exceeds the largest "
                          f"prefill bucket {self.buckets[-1]}")
 
     def lifetime_blocks(self, req: Request) -> int:
-        """Pages reserved at admission: every position the request can
-        ever write (prompt rows + max_new-1 decoded K/V rows; the final
-        sampled token is never fed back)."""
+        """Pages the request can ever touch (prompt rows + max_new-1
+        decoded K/V rows; the final sampled token is never fed back).
+        Reserved up front under ``reserve``; under ``preempt`` it is only
+        the submit-time feasibility bound (a solo request must fit the
+        pool, or no amount of preemption could finish it)."""
         n = blocks_for(req.prompt_len + max(req.max_new_tokens - 1, 0),
                        self.block_size)
         if n > self.max_blocks_per_slot:
@@ -131,6 +177,16 @@ class Scheduler:
                 f"{self.max_blocks_per_slot} (prompt {req.prompt_len} + "
                 f"max_new {req.max_new_tokens})")
         return n
+
+    def initial_blocks(self, req: Request) -> int:
+        """Pages needed at (re-)admission: full lifetime under ``reserve``;
+        just the prefill rows under ``preempt`` (fresh: the prompt; resume:
+        prompt + all emitted tokens but the last, which the decode step
+        feeds back and writes via `ensure_pages`)."""
+        if self.policy == "reserve":
+            return self.lifetime_blocks(req)
+        rows = req.prompt_len + max(len(req.out_tokens) - 1, 0)
+        return blocks_for(rows, self.block_size)
 
     def submit(self, req: Request) -> Request:
         req.rid = next(self._rid)
@@ -144,25 +200,117 @@ class Scheduler:
         self.queue.append(req)
         return req
 
+    def resubmit(self, req: Request, rid: int) -> Request:
+        """Crash-replay intake: re-queue a journaled in-flight request
+        under its *original* rid (admission precedence and journal
+        identity are keyed on it). The rid counter must already be
+        advanced past every journaled rid (`advance_rids`)."""
+        req.rid = rid
+        req.t_submit = time.time()
+        self.bucket_for(req.prompt_len)
+        if self.lifetime_blocks(req) > self.allocator.num_blocks:
+            raise ValueError("replayed request no longer fits the pool")
+        self.queue.append(req)
+        return req
+
+    def advance_rids(self, past: int) -> None:
+        self._rid = itertools.count(past + 1)
+
     # -- admission -----------------------------------------------------------
 
-    def admit(self) -> List[Request]:
-        """Admit queued requests FCFS while a slot + pages are available.
-        Strict FCFS: the head of the queue blocks later (smaller) requests
-        — no head-of-line bypass, so admission order is arrival order."""
+    def _head(self) -> Optional[Request]:
+        return min(self.queue, key=_order_key) if self.queue else None
+
+    def _pick_victim(self) -> Optional[Request]:
+        """The least-important running request: largest (priority, rid)."""
+        if not self.running:
+            return None
+        return max(self.running.values(), key=_order_key)
+
+    def preempt(self, req: Request,
+                on_preempt: Optional[Callable[[Request], None]] = None
+                ) -> None:
+        """Reclaim a running request's slot and pages; re-queue it for
+        recompute-based resume. `on_preempt(req)` runs while `req.slot` is
+        still set, so the runtime can clear its device-side slot state."""
+        assert self.policy == "preempt", "no preemption under reserve"
+        assert self.running.get(req.slot) is req, "preempt of non-running"
+        del self.running[req.slot]
+        self.allocator.free(req.blocks)
+        req.blocks = []
+        if on_preempt is not None:
+            on_preempt(req)
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        req.state = "queued"
+        req.n_preempts += 1
+        self.preemptions += 1
+        self.queue.append(req)
+
+    def admit(self, on_preempt: Optional[Callable[[Request], None]] = None
+              ) -> List[Request]:
+        """Admit queued requests in (priority, rid) order while a slot +
+        pages are available. The head of the order blocks later requests —
+        no bypass, so arrival order is preserved within a priority class.
+        Under ``preempt``, a head that is strictly more urgent than the
+        current victim candidate reclaims that victim's slot/pages."""
         admitted = []
-        while self.queue and self._free_slots:
-            req = self.queue[0]
-            blocks = self.allocator.alloc(self.lifetime_blocks(req))
+        while self.queue:
+            req = self._head()
+            need = self.initial_blocks(req)
+            while not self._free_slots or self.allocator.num_free < need:
+                victim = self._pick_victim()
+                if (self.policy != "preempt" or victim is None
+                        or _order_key(victim) <= _order_key(req)):
+                    break
+                self.preempt(victim, on_preempt)
+            if not self._free_slots:
+                break
+            blocks = self.allocator.alloc(need)
             if blocks is None:       # pool exhausted: backpressure
                 break
-            self.queue.popleft()
+            self.queue.remove(req)
             req.blocks = blocks
             req.slot = self._free_slots.pop()
             req.state = "running"
             self.running[req.slot] = req
             admitted.append(req)
         return admitted
+
+    # -- decode-time page growth ---------------------------------------------
+
+    def ensure_pages(self, req: Request, total_blocks: int,
+                     on_preempt: Optional[Callable[[Request], None]] = None
+                     ) -> bool:
+        """Grow `req.blocks` to `total_blocks` pages before a decode step
+        writes into them. Under ``reserve`` the pages were all allocated at
+        admission. Under ``preempt``, exhaustion preempts victims until the
+        allocation fits; if `req` itself is the victim (it is the least
+        important running request) it is preempted and False is returned —
+        the caller must drop it from the step."""
+        if total_blocks > self.max_blocks_per_slot:
+            raise ValueError(f"request {req.rid} grew past "
+                             f"max_blocks_per_slot={self.max_blocks_per_slot}")
+        while len(req.blocks) < total_blocks:
+            got = self.allocator.alloc(total_blocks - len(req.blocks))
+            if got is not None:
+                req.blocks.extend(got)
+                return True
+            if self.policy != "preempt":
+                raise RuntimeError(
+                    f"page pool exhausted growing request {req.rid} under "
+                    "reserve policy — lifetime reservation should have "
+                    "covered this (allocator accounting bug)")
+            victim = self._pick_victim()
+            if victim is None or victim is req:
+                # req is the least-important running request (or an
+                # injected alloc fault fired with nothing to reclaim):
+                # preempt req itself; it re-queues and resumes later.
+                if self.running.get(req.slot) is req:
+                    self.preempt(req, on_preempt)
+                return False
+            self.preempt(victim, on_preempt)
+        return True
 
     def release(self, req: Request) -> None:
         """Return a finished request's slot and pages to the pool."""

@@ -1,5 +1,6 @@
 """Fault tolerance: injected failures + restart, straggler detection,
 heartbeats/recovery planning, exact-resume semantics."""
+import os
 import time
 
 import jax
@@ -77,3 +78,93 @@ def test_restart_budget_exhausted():
     with pytest.raises(RuntimeError):
         run_with_restarts(attempt, lambda: None, max_restarts=2)
     assert calls["n"] == 3
+
+
+def test_restart_only_listed_exceptions():
+    """Exception types outside the configured tuple propagate immediately
+    — a KeyboardInterrupt or assertion must never be retried."""
+    calls = {"n": 0}
+
+    def attempt(_):
+        calls["n"] += 1
+        raise ValueError("not retryable here")
+
+    with pytest.raises(ValueError):
+        run_with_restarts(attempt, lambda: None, max_restarts=5,
+                          exceptions=(RuntimeError,))
+    assert calls["n"] == 1
+    calls["n"] = 0
+    with pytest.raises(ValueError):
+        run_with_restarts(attempt, lambda: None, max_restarts=2,
+                          exceptions=(RuntimeError, ValueError))
+    assert calls["n"] == 3          # now it is retryable
+
+
+def test_restart_budget_resets_on_progress():
+    """max_restarts bounds *consecutive no-progress* crashes: a job that
+    keeps advancing its checkpoint survives arbitrarily many failures."""
+    state = {"calls": 0, "step": 0}
+
+    def attempt(_):
+        state["calls"] += 1
+        state["step"] += 1          # every attempt commits progress
+        if state["calls"] < 7:
+            raise RuntimeError("crash after progress")
+        return state["step"]
+
+    assert run_with_restarts(attempt, lambda: state["step"],
+                             max_restarts=1) == 7
+    assert state["calls"] == 7      # 6 crashes survived with budget 1
+
+
+def test_restart_backoff_capped_exponential():
+    sleeps = []
+
+    def attempt(_):
+        raise RuntimeError("always")
+
+    with pytest.raises(RuntimeError):
+        run_with_restarts(attempt, lambda: None, max_restarts=4,
+                          backoff_s=1.0, backoff_cap_s=4.0,
+                          sleep_fn=sleeps.append)
+    assert sleeps == [1.0, 2.0, 4.0, 4.0]
+
+
+def test_heartbeat_atomic_publish(tmp_path, monkeypatch):
+    """A crash mid-beat must leave the previous heartbeat intact: the
+    write goes to a temp file and renames over the live path. Regression
+    for the direct-truncating-open beat, where a reader (or a crash)
+    between open and write observed an empty/torn file and the host was
+    misread as dead."""
+    import json as _json
+
+    hb = Heartbeat(str(tmp_path), 0)
+    hb.beat(10)
+
+    real_dump = _json.dump
+
+    def exploding_dump(obj, f, **kw):
+        f.write('{"step": 11, "ti')       # partial bytes, then the crash
+        raise OSError("disk full mid-write")
+
+    monkeypatch.setattr(_json, "dump", exploding_dump)
+    with pytest.raises(OSError):
+        hb.beat(11)
+    monkeypatch.setattr(_json, "dump", real_dump)
+
+    # the published file still holds the *complete* previous beat and the
+    # host is still considered alive; no temp debris accumulates
+    with open(hb.path) as f:
+        assert _json.load(f)["step"] == 10
+    assert 0 in Heartbeat.alive_hosts(str(tmp_path), dead_after_s=60)
+    assert os.listdir(str(tmp_path)) == ["heartbeat_0"]
+
+
+def test_heartbeat_reader_never_sees_torn_json(tmp_path):
+    """alive_hosts during concurrent beats: every read parses (rename is
+    atomic), so a beating host can never be misclassified as dead."""
+    hb = Heartbeat(str(tmp_path), 3)
+    for step in range(50):
+        hb.beat(step)
+        alive = Heartbeat.alive_hosts(str(tmp_path), dead_after_s=60)
+        assert 3 in alive and alive[3]["step"] == step

@@ -1,0 +1,397 @@
+"""Fault-tolerant serving (ft/journal.py, ft/inject.py, serve/runtime.py
+recovery): crash-replay token identity, journal durability semantics,
+deterministic fault injection, callback containment, packed-checkpoint
+header validation. The oracle throughout is bit-determinism: a replayed
+or resumed stream must equal the uninterrupted run token for token."""
+import json
+import os
+import pickle
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import PackedCkptError, load_packed_ckpt, save_packed_ckpt
+from repro.configs import get_smoke_config
+from repro.ft import (FaultInjector, InjectedFault, Journal, JournalCorrupt,
+                      SimulatedKill, run_with_restarts)
+from repro.models import BuildPlan, init_params
+from repro.serve import Runtime, ServeConfig, recover_runtime
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="qwen2-7b"):
+    cfg = get_smoke_config(arch).replace(compute_dtype="float32")
+    plan = BuildPlan(remat=False, cache_dtype=jnp.float32)
+    params = init_params(KEY, cfg, plan)
+    return cfg, plan, params
+
+
+def _serve_cfg(**kw):
+    sc = dict(max_slots=3, block_size=8, num_blocks=24, buckets=(8, 16, 32),
+              max_blocks_per_slot=6)
+    sc.update(kw)
+    return ServeConfig(**sc)
+
+
+def _prompts(n, rs=None, lo=6, hi=15):
+    rs = rs or np.random.RandomState(23)
+    cfg = get_smoke_config("qwen2-7b")
+    return [rs.randint(0, cfg.vocab_size,
+                       (int(l),)).astype(np.int32)
+            for l in rs.randint(lo, hi, n)]
+
+
+# ---------------------------------------------------------------------------
+# journal unit tests (no model)
+# ---------------------------------------------------------------------------
+
+def _fake_req(rid, prompt=(1, 2, 3), seed=7, **kw):
+    from repro.serve.scheduler import Request
+    r = Request(prompt=np.asarray(prompt, np.int32), max_new_tokens=4,
+                seed=seed, **kw)
+    r.rid = rid
+    return r
+
+
+def test_journal_roundtrip_classifies_inflight(tmp_path):
+    j = Journal(str(tmp_path))
+    a, b = _fake_req(0), _fake_req(1, prompt=(9, 8), priority=2)
+    j.record_submit(a)
+    j.record_submit(b)
+    j.record_first_token(a, 42)
+    a.out_tokens = [42, 43]
+    a.finish_reason = "length"
+    j.record_retire(a)
+    j.close()
+    st = Journal.replay(str(tmp_path))
+    assert set(st.completed) == {0} and set(st.inflight) == {1}
+    assert st.completed_tokens(0) == [42, 43]
+    assert st.first_tokens[0] == 42
+    assert st.inflight[1]["priority"] == 2 and st.inflight[1]["seed"] == 7
+    assert st.max_rid == 1
+
+
+def test_journal_torn_tail_dropped_but_midfile_corruption_raises(tmp_path):
+    j = Journal(str(tmp_path))
+    j.record_submit(_fake_req(0))
+    j.record_submit(_fake_req(1))
+    j.close()
+    path = os.path.join(str(tmp_path), "requests.jsonl")
+    with open(path, "a") as f:
+        f.write('{"ev": "retire", "rid": 1, "tok')    # crash mid-append
+    st = Journal.replay(str(tmp_path))
+    assert set(st.inflight) == {0, 1}    # torn retire never happened
+    # the same damage NOT at the tail is corruption, not a torn write
+    lines = open(path).read().splitlines()
+    with open(path, "w") as f:
+        f.write("\n".join([lines[0], lines[2], lines[1]]) + "\n")
+    with pytest.raises(JournalCorrupt):
+        Journal.replay(str(tmp_path))
+
+
+def test_journal_crc_rejects_bitflip(tmp_path):
+    j = Journal(str(tmp_path))
+    j.record_submit(_fake_req(0))
+    j.record_submit(_fake_req(1))
+    j.close()
+    path = os.path.join(str(tmp_path), "requests.jsonl")
+    lines = open(path).read().splitlines()
+    flipped = lines[0].replace('"rid": 0', '"rid": 5')
+    with open(path, "w") as f:
+        f.write("\n".join([flipped, lines[1]]) + "\n")
+    with pytest.raises(JournalCorrupt):
+        Journal.replay(str(tmp_path))
+
+
+def test_journal_dedup_submit_and_last_retire_wins(tmp_path):
+    """Recovery appends to the same journal: duplicate submits (original +
+    replayed run) must collapse, and a crash *during* recovery converges."""
+    j = Journal(str(tmp_path))
+    r = _fake_req(0)
+    j.record_submit(r)
+    j.record_submit(r)                   # replayed run re-records
+    r.out_tokens = [1]
+    r.finish_reason = "length"
+    j.record_retire(r)
+    r.out_tokens = [1, 2]
+    j.record_retire(r)                   # later retire supersedes
+    j.close()
+    st = Journal.replay(str(tmp_path))
+    assert not st.inflight and st.completed_tokens(0) == [1, 2]
+
+
+def test_fault_injector_schedule_and_parse():
+    inj = FaultInjector.parse("page_alloc:2+4,kill:3")
+    hits = [inj.fire("page_alloc") for _ in range(5)]
+    assert hits == [False, True, False, True, False]
+    assert not inj.fire("decode_step")   # unscheduled point never fires
+    with pytest.raises(SimulatedKill):
+        for _ in range(3):
+            inj.check("kill", SimulatedKill)
+    assert inj.fired == [("page_alloc", 2), ("page_alloc", 4), ("kill", 3)]
+    # seeded random schedules are reproducible
+    a = FaultInjector.random(0, {"x": 0.3}, horizon=50).schedule
+    b = FaultInjector.random(0, {"x": 0.3}, horizon=50).schedule
+    assert a == b and a["x"]
+
+
+# ---------------------------------------------------------------------------
+# crash -> recover_runtime replay
+# ---------------------------------------------------------------------------
+
+def test_crash_replay_token_identity(tmp_path):
+    """Kill the runtime mid-decode; recovery must finish every in-flight
+    request with tokens identical to the uninterrupted run — none lost,
+    none duplicated."""
+    cfg, plan, params = _setup()
+    prompts = _prompts(3)
+    solo = Runtime(params, cfg, plan, _serve_cfg()).generate(
+        prompts, max_new_tokens=8)
+
+    inj = FaultInjector({"kill": {4}})
+    rt = Runtime(params, cfg, plan, _serve_cfg(),
+                 journal=Journal(str(tmp_path)), injector=inj)
+    reqs = [rt.submit(p, max_new_tokens=8) for p in prompts]
+    with pytest.raises(SimulatedKill):
+        rt.run()
+    partial = [list(r.out_tokens) for r in reqs]
+    assert any(0 < len(t) < 8 for t in partial)     # genuinely mid-flight
+
+    rt2, st = recover_runtime(params, cfg, plan, str(tmp_path), _serve_cfg())
+    assert set(st.inflight) == {r.rid for r in reqs}
+    assert not st.completed
+    replayed = {r.rid: r for r in rt2.scheduler.queue}
+    assert sorted(replayed) == sorted(r.rid for r in reqs)  # no dup/loss
+    rt2.run()
+    for r, want in zip(reqs, solo):
+        np.testing.assert_array_equal(
+            np.asarray(replayed[r.rid].out_tokens), want)
+    # and the post-recovery journal marks everything retired
+    final = Journal.replay(str(tmp_path))
+    assert not final.inflight and set(final.completed) == set(replayed)
+
+
+def test_crash_replay_skips_retired_requests(tmp_path):
+    """Requests retired before the crash are not re-run: their tokens come
+    from the journal, and recovery only replays the true in-flight set."""
+    cfg, plan, params = _setup()
+    short = np.arange(5, dtype=np.int32)
+    long_ = _prompts(1)[0]
+    rt = Runtime(params, cfg, plan, _serve_cfg(),
+                 journal=Journal(str(tmp_path)),
+                 injector=FaultInjector({"kill": {6}}))
+    r_short = rt.submit(short, max_new_tokens=2)    # retires early
+    r_long = rt.submit(long_, max_new_tokens=12)
+    with pytest.raises(SimulatedKill):
+        rt.run()
+    assert r_short.state == "done"
+    rt2, st = recover_runtime(params, cfg, plan, str(tmp_path), _serve_cfg())
+    assert set(st.completed) == {r_short.rid}
+    assert st.completed_tokens(r_short.rid) == r_short.out_tokens
+    assert set(st.inflight) == {r_long.rid}
+    rt2.run()
+    solo = Runtime(params, cfg, plan, _serve_cfg()).generate(
+        [long_], max_new_tokens=12)[0]
+    got = rt2.scheduler.completed[-1]
+    np.testing.assert_array_equal(np.asarray(got.out_tokens), solo)
+
+
+def test_double_crash_recovery_converges(tmp_path):
+    """Crash during recovery: a second recovery still loses nothing and
+    the final streams match the uninterrupted run."""
+    cfg, plan, params = _setup()
+    prompts = _prompts(2)
+    solo = Runtime(params, cfg, plan, _serve_cfg()).generate(
+        prompts, max_new_tokens=8)
+    rt = Runtime(params, cfg, plan, _serve_cfg(),
+                 journal=Journal(str(tmp_path)),
+                 injector=FaultInjector({"kill": {3}}))
+    rids = [rt.submit(p, max_new_tokens=8).rid for p in prompts]
+    with pytest.raises(SimulatedKill):
+        rt.run()
+    rt2, _ = recover_runtime(params, cfg, plan, str(tmp_path), _serve_cfg(),
+                             injector=FaultInjector({"kill": {2}}))
+    with pytest.raises(SimulatedKill):
+        rt2.run()
+    rt3, st = recover_runtime(params, cfg, plan, str(tmp_path), _serve_cfg())
+    assert sorted(st.inflight) == sorted(rids)      # still exactly once
+    rt3.run()
+    done = {r.rid: r for r in rt3.scheduler.completed}
+    for rid, want in zip(rids, solo):
+        np.testing.assert_array_equal(np.asarray(done[rid].out_tokens), want)
+
+
+def test_supervised_drain_with_restarts(tmp_path):
+    """The launch-style supervisor loop: run_with_restarts + journal
+    recovery drains through injected kills, with the retired count as the
+    forward-progress signal."""
+    cfg, plan, params = _setup()
+    prompts = _prompts(3)
+    solo = Runtime(params, cfg, plan, _serve_cfg()).generate(
+        prompts, max_new_tokens=6)
+    inj = FaultInjector({"kill": {2, 7}})           # two separate crashes
+    state = {"first": True}
+
+    def attempt(_):
+        if state["first"]:
+            state["first"] = False
+            rt = Runtime(params, cfg, plan, _serve_cfg(),
+                         journal=Journal(str(tmp_path)), injector=inj)
+            for p in prompts:
+                rt.submit(p, max_new_tokens=6)
+        else:
+            rt, _ = recover_runtime(params, cfg, plan, str(tmp_path),
+                                    _serve_cfg(), injector=inj)
+        rt.run()
+        return rt
+
+    def progress():
+        return len(Journal.replay(str(tmp_path)).completed)
+
+    rt = run_with_restarts(attempt, progress, max_restarts=2,
+                           exceptions=(SimulatedKill,))
+    st = Journal.replay(str(tmp_path))
+    assert not st.inflight and len(st.completed) == 3
+    assert len(inj.fired) == 2
+    for rid, want in enumerate(solo):
+        assert st.completed_tokens(rid) == list(want)
+    assert rt.allocator.num_free == rt.allocator.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# in-process fault points
+# ---------------------------------------------------------------------------
+
+def test_decode_fault_retries_without_losing_requests():
+    """A transient decode-step exception (caught by the caller's
+    supervisor) must not corrupt scheduler or allocator state: a fresh
+    run() call finishes everything token-identically."""
+    cfg, plan, params = _setup()
+    prompts = _prompts(2)
+    solo = Runtime(params, cfg, plan, _serve_cfg()).generate(
+        prompts, max_new_tokens=6)
+    rt = Runtime(params, cfg, plan, _serve_cfg(),
+                 injector=FaultInjector({"decode_step": {2}}))
+    reqs = [rt.submit(p, max_new_tokens=6) for p in prompts]
+    with pytest.raises(InjectedFault):
+        rt.run()
+    rt.allocator.check_integrity()      # fault left no leak behind
+    rt.run()                            # in-process retry: state is intact
+    for r, want in zip(reqs, solo):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), want)
+    assert rt.allocator.num_free == rt.allocator.num_blocks
+
+
+def test_callback_fault_contained_per_request():
+    """An injected stream-callback crash is recorded on the offending
+    request and must not perturb any stream's tokens."""
+    cfg, plan, params = _setup()
+    prompts = _prompts(2)
+    solo = Runtime(params, cfg, plan, _serve_cfg()).generate(
+        prompts, max_new_tokens=6)
+    rt = Runtime(params, cfg, plan, _serve_cfg(),
+                 injector=FaultInjector({"callback": {2}}))
+    seen = []
+    reqs = [rt.submit(p, max_new_tokens=6,
+                      stream_cb=lambda r, t: seen.append((r.rid, t)))
+            for p in prompts]
+    rt.run()
+    errs = [e for r in reqs for e in r.cb_errors]
+    assert len(errs) == 1 and isinstance(errs[0], InjectedFault)
+    for r, want in zip(reqs, solo):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), want)
+    # every emitted token except the swallowed callback call was streamed
+    assert len(seen) == sum(len(r.out_tokens) for r in reqs) - 1
+
+
+def test_seeded_sampling_identical_after_preemption(tmp_path):
+    """Temperature>0: per-request seeded sampling is a pure function of
+    (seed, token index), so even a preempted+resumed stochastic stream
+    matches its solo run draw for draw."""
+    cfg, plan, params = _setup()
+    prompts = _prompts(3, lo=9, hi=15)
+    kw = dict(max_new_tokens=8, temperature=0.8, top_k=5)
+    solo = []
+    for i, p in enumerate(prompts):
+        rt = Runtime(params, cfg, plan, _serve_cfg())
+        solo.append(np.asarray(
+            rt.generate([p], seed=100 + i, **kw)[0]))
+    rt = Runtime(params, cfg, plan, _serve_cfg(num_blocks=6))
+    reqs = [rt.submit(p, seed=100 + i, **kw)
+            for i, p in enumerate(prompts)]
+    rt.run()
+    assert rt.scheduler.preemptions > 0
+    for r, want in zip(reqs, solo):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), want)
+
+
+# ---------------------------------------------------------------------------
+# packed checkpoint header (launch --save/--load-quantized)
+# ---------------------------------------------------------------------------
+
+def test_packed_ckpt_roundtrip_and_meta(tmp_path):
+    path = str(tmp_path / "q.pkl")
+    tree = {"w": np.arange(6, dtype=np.int8).reshape(2, 3)}
+    save_packed_ckpt(path, tree, bits=4, arch="qwen2-7b-smoke")
+    blob = load_packed_ckpt(path)
+    assert blob["bits"] == 4 and blob["arch"] == "qwen2-7b-smoke"
+    np.testing.assert_array_equal(blob["tree"]["w"], tree["w"])
+
+
+def test_packed_ckpt_truncation_fails_clearly(tmp_path):
+    path = str(tmp_path / "q.pkl")
+    save_packed_ckpt(path, {"w": np.zeros(64)}, bits=4)
+    data = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(data[: len(data) // 2])
+    with pytest.raises(PackedCkptError, match="truncated|corrupt"):
+        load_packed_ckpt(path)
+
+
+def test_packed_ckpt_checksum_catches_corruption(tmp_path):
+    path = str(tmp_path / "q.pkl")
+    save_packed_ckpt(path, {"w": np.zeros(64, np.uint8)}, bits=4)
+    data = bytearray(open(path, "rb").read())
+    data[-20] ^= 0xFF                   # bitflip inside the payload
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    with pytest.raises(PackedCkptError,
+                       match="checksum mismatch|truncated or corrupt"):
+        load_packed_ckpt(path)
+
+
+def test_packed_ckpt_wrong_format_and_version(tmp_path):
+    path = str(tmp_path / "q.pkl")
+    payload = pickle.dumps({"tree": {}})
+    with open(path, "wb") as f:
+        pickle.dump({"format": "other", "version": 1,
+                     "crc32": zlib.crc32(payload), "payload": payload}, f)
+    with pytest.raises(PackedCkptError, match="format"):
+        load_packed_ckpt(path)
+    with open(path, "wb") as f:
+        pickle.dump({"format": "comq-packed-qt", "version": 99,
+                     "crc32": zlib.crc32(payload), "payload": payload}, f)
+    with pytest.raises(PackedCkptError, match="newer"):
+        load_packed_ckpt(path)
+
+
+def test_packed_ckpt_legacy_headerless_loads_with_warning(tmp_path):
+    """Pre-header files (a bare pickled dict, what PR 4's launcher wrote)
+    still load — back-compat — but warn that there is no checksum."""
+    path = str(tmp_path / "legacy.pkl")
+    legacy = {"tree": {"w": np.ones(3)}, "bits": 4, "arch": "x"}
+    with open(path, "wb") as f:
+        pickle.dump(legacy, f)
+    with pytest.warns(UserWarning, match="legacy headerless"):
+        blob = load_packed_ckpt(path)
+    assert blob["bits"] == 4
+    np.testing.assert_array_equal(blob["tree"]["w"], legacy["tree"]["w"])
+    # garbage that is neither headered nor legacy fails loudly
+    with open(path, "wb") as f:
+        pickle.dump({"something": 1}, f)
+    with pytest.raises(PackedCkptError, match="neither"):
+        load_packed_ckpt(path)

@@ -417,3 +417,165 @@ def test_stop_token_preserves_batchmates_token_identity():
     np.testing.assert_array_equal(np.asarray(reqs[1].out_tokens), solo[1])
     np.testing.assert_array_equal(np.asarray(reqs[2].out_tokens), solo[2])
     assert rt.allocator.num_free == rt.allocator.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# priority admission + preemption-by-page-reclaim
+# ---------------------------------------------------------------------------
+
+def test_priority_admission_order():
+    """Admission is (priority, rid): priority class first, arrival order
+    within a class — and priority=0 everywhere degrades to FCFS."""
+    a = BlockAllocator(24)
+    s = Scheduler(max_slots=1, allocator=a, buckets=(8,), block_size=4,
+                  max_blocks_per_slot=4)
+    lo1 = s.submit(Request(prompt=np.arange(4), max_new_tokens=2,
+                           priority=5))
+    hi = s.submit(Request(prompt=np.arange(4), max_new_tokens=2,
+                          priority=0))
+    lo2 = s.submit(Request(prompt=np.arange(4), max_new_tokens=2,
+                           priority=5))
+    order = []
+    while not s.idle:
+        adm = s.admit()
+        assert len(adm) == 1        # one slot
+        order.append(adm[0].rid)
+        s.release(adm[0])
+    assert order == [hi.rid, lo1.rid, lo2.rid]
+    assert a.num_free == a.num_blocks
+
+
+def test_admission_preempts_running_low_priority():
+    """A strictly more urgent head reclaims the victim's slot+pages at
+    admission; the victim re-queues (state machine only, no model)."""
+    a = BlockAllocator(4)
+    s = Scheduler(max_slots=1, allocator=a, buckets=(8,), block_size=4,
+                  max_blocks_per_slot=4)
+    lo = s.submit(Request(prompt=np.arange(8), max_new_tokens=5,
+                          priority=5))
+    assert s.admit() == [lo]
+    lo.out_tokens = [1, 2]          # mid-flight progress
+    hi = s.submit(Request(prompt=np.arange(8), max_new_tokens=5,
+                          priority=0))
+    cleared = []
+    adm = s.admit(on_preempt=cleared.append)
+    assert adm == [hi] and cleared == [lo]
+    assert lo.state == "queued" and lo.slot == -1 and not lo.blocks
+    assert lo.n_preempts == 1 and s.preemptions == 1
+    # equal urgency must NOT preempt: a same-class later arrival waits
+    eq = s.submit(Request(prompt=np.arange(8), max_new_tokens=5,
+                          priority=0))
+    assert s.admit() == []
+    assert eq.state == "queued" and hi.state == "running"
+    s.release(hi)
+    a.check_integrity()
+
+
+def test_starvation_freedom_preempted_keeps_rid():
+    """A preempted request keeps its rid, so within its priority class it
+    re-admits ahead of every later arrival — bounded bypass, no
+    starvation."""
+    a = BlockAllocator(24)
+    s = Scheduler(max_slots=1, allocator=a, buckets=(8,), block_size=4,
+                  max_blocks_per_slot=4)
+    old = s.submit(Request(prompt=np.arange(4), max_new_tokens=2,
+                           priority=1))
+    s.admit()
+    s.preempt(old)
+    newer = s.submit(Request(prompt=np.arange(4), max_new_tokens=2,
+                             priority=1))
+    assert s.admit() == [old]       # not newer: old's rid is smaller
+    assert newer.state == "queued"
+    s.release(old)
+    assert s.admit() == [newer]
+    s.release(newer)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "granite-moe-3b-a800m"])
+def test_preempt_resume_token_identity(arch):
+    """Pool too small for all requests' lifetimes: decode growth preempts
+    and resumes mid-stream, yet every request's tokens equal its solo run
+    (recompute-based resume feeds the last emitted token through the
+    normal decode program). Allocator ends clean."""
+    cfg, plan, params = _f32_setup(arch)
+    rs = np.random.RandomState(7)
+    prompts = [rs.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (14, 9, 12)]
+    solo = [_runtime(params, cfg, plan).generate([p], max_new_tokens=8)[0]
+            for p in prompts]
+
+    # 3 slots but only 6 pages: three 2-page prefills admit, decode growth
+    # past each 16-row boundary must reclaim someone's pages
+    rt = _runtime(params, cfg, plan, num_blocks=6)
+    reqs = [rt.submit(p, max_new_tokens=8) for p in prompts]
+    rt.run()
+    assert rt.scheduler.preemptions > 0
+    for r, want in zip(reqs, solo):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), want)
+    assert rt.allocator.num_free == rt.allocator.num_blocks
+    rt.allocator.check_integrity()
+    assert rt.scheduler.idle
+
+
+def test_priority_latecomer_finishes_first():
+    """An urgent request arriving after low-priority traffic saturates the
+    pool preempts a victim, runs immediately, and still emits exactly its
+    solo tokens — as do the preempted victims after resume."""
+    cfg, plan, params = _f32_setup()
+    rs = np.random.RandomState(11)
+    prompts = [rs.randint(0, cfg.vocab_size, (10,)).astype(np.int32)
+               for _ in range(3)]
+    solo = [_runtime(params, cfg, plan).generate([p], max_new_tokens=6)[0]
+            for p in prompts]
+    rt = _runtime(params, cfg, plan, max_slots=2, num_blocks=4)
+    lo = [rt.submit(p, max_new_tokens=6, priority=5) for p in prompts[:2]]
+    rt.step()                       # the low-priority pair gets going
+    hi = rt.submit(prompts[2], max_new_tokens=6, priority=0)
+    rt.run()
+    assert rt.scheduler.preemptions > 0
+    done = [r.rid for r in rt.scheduler.completed]
+    assert done.index(hi.rid) < max(done.index(r.rid) for r in lo)
+    for r, want in zip(lo + [hi], solo):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), want)
+    assert rt.allocator.num_free == rt.allocator.num_blocks
+
+
+def test_reserve_policy_never_preempts():
+    """policy="reserve" keeps the PR-4 contract: full-lifetime pages at
+    admission, zero preemptions, exhaustion backpressures the queue."""
+    cfg, plan, params = _f32_setup()
+    rs = np.random.RandomState(13)
+    prompts = [rs.randint(0, cfg.vocab_size, (10,)).astype(np.int32)
+               for _ in range(3)]
+    rt = _runtime(params, cfg, plan, num_blocks=6, policy="reserve")
+    reqs = [rt.submit(p, max_new_tokens=8) for p in prompts]
+    rt.run()
+    assert rt.scheduler.preemptions == 0
+    assert all(len(r.out_tokens) == 8 for r in reqs)
+    assert rt.allocator.num_free == rt.allocator.num_blocks
+
+
+def test_allocator_integrity_under_injected_alloc_faults():
+    """Seeded page-alloc failures at admission and growth: no leak, no
+    double free, no lost request — every stream still matches solo."""
+    from repro.ft import FaultInjector
+    from repro.serve import ServeConfig
+    cfg, plan, params = _f32_setup()
+    rs = np.random.RandomState(17)
+    prompts = [rs.randint(0, cfg.vocab_size, (l,)).astype(np.int32)
+               for l in (12, 9, 14)]
+    solo = [_runtime(params, cfg, plan).generate([p], max_new_tokens=6)[0]
+            for p in prompts]
+    inj = FaultInjector({"page_alloc": {2, 4, 7}})
+    sc = ServeConfig(max_slots=3, block_size=8, num_blocks=24,
+                     buckets=(8, 16, 32), max_blocks_per_slot=6)
+    rt = Runtime(params, cfg, plan, sc, injector=inj)
+    reqs = [rt.submit(p, max_new_tokens=6) for p in prompts]
+    rt.run()
+    assert [pt for pt, _ in inj.fired] == ["page_alloc"] * 3
+    for r, want in zip(reqs, solo):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), want)
+    assert rt.allocator.num_free == rt.allocator.num_blocks
+    rt.allocator.check_integrity()
+    assert len(rt.scheduler.completed) == 3     # none lost, none duplicated
+    assert sorted(r.rid for r in rt.scheduler.completed) == [0, 1, 2]
