@@ -37,6 +37,11 @@ from typing import Dict, Iterable, List, Optional
 import numpy as np
 
 
+# fault points with hook sites in serve/runtime.py; parse() rejects
+# anything else so a typo'd --inject fails loudly instead of never firing
+FAULT_POINTS = frozenset({"page_alloc", "decode_step", "callback", "kill"})
+
+
 class InjectedFault(RuntimeError):
     """A seeded in-process fault (decode-step / callback site)."""
 
@@ -84,6 +89,10 @@ class FaultInjector:
             if not occs:
                 raise ValueError(f"--inject entry {part!r} needs "
                                  "point:occurrence[+occurrence...]")
+            if point not in FAULT_POINTS:
+                raise ValueError(
+                    f"--inject point {point!r} is not a known fault point "
+                    f"(choose from {', '.join(sorted(FAULT_POINTS))})")
             schedule.setdefault(point, []).extend(
                 int(o) for o in occs.split("+"))
         return cls(schedule)

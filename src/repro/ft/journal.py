@@ -25,10 +25,13 @@ canonical JSON without the crc field):
 
 Torn tails are expected — a crash mid-append leaves a partial last line,
 which replay drops (detected by JSON parse or crc failure on the final
-record). A torn or corrupt record *before* the tail is real corruption
-and raises `JournalCorrupt`. Replay deduplicates by rid (submit is
-idempotent, last retire wins), so recovery after a crash *during*
-recovery converges too.
+record), and which reopening for append truncates so the next record
+starts on a fresh line (otherwise the first post-recovery append would
+merge with the torn tail into a corrupt *non*-tail record and poison
+every later replay). A torn or corrupt record *before* the tail is real
+corruption and raises `JournalCorrupt`. Replay deduplicates by rid
+(submit is idempotent, last retire wins), so recovery after a crash
+*during* recovery converges too.
 """
 from __future__ import annotations
 
@@ -56,8 +59,24 @@ class Journal:
         os.makedirs(directory, exist_ok=True)
         self.path = os.path.join(directory, JOURNAL_NAME)
         self._fsync = fsync
+        self._seq = self._truncate_torn_tail()
         self._f = open(self.path, "a", encoding="utf-8")
-        self._seq = 0
+
+    def _truncate_torn_tail(self) -> int:
+        """Drop a partial final line left by a crash mid-append, so the
+        first record of this generation starts on a fresh line instead of
+        merging with the torn tail (which would become corrupt non-tail
+        data on the next replay). Returns the number of surviving lines,
+        seeding `seq` so it stays monotonic across reopens."""
+        if not os.path.exists(self.path):
+            return 0
+        with open(self.path, "r+b") as f:
+            data = f.read()
+            if data and not data.endswith(b"\n"):
+                cut = data.rfind(b"\n") + 1      # 0: wipe a 1-line torn file
+                f.truncate(cut)
+                data = data[:cut]
+        return data.count(b"\n")
 
     def append(self, ev: str, durable: bool = True, **fields) -> None:
         rec = {"ev": ev, "seq": self._seq, **fields}

@@ -229,16 +229,31 @@ def main():
               top_k=args.top_k, top_p=args.top_p,
               stop_tokens=tuple(args.stop_token))
 
+    box = {}           # box["rt"] is set as soon as a runtime exists, so a
+                       # crash inside build() still lets the supervisor
+                       # close that attempt's journal handle before retrying
+
     def build(resume: bool):
         if resume:
             rt, state = recover_runtime(params, cfg, plan, args.journal,
                                         serve_cfg, injector=injector)
+            box["rt"] = rt
             print(f"resume: {len(state.completed)} retired in journal, "
                   f"replaying {len(state.inflight)} in-flight")
-            return rt, list(rt.scheduler.queue)
+            reqs = list(rt.scheduler.queue)
+            if not args.resume:
+                # restart of *this* launch: prompts map 1:1 to rids in
+                # submission order, so any prompt past max_rid crashed
+                # before its submit record was durable — re-submit it
+                # rather than lose it
+                for p, pr in zip(prompts[state.max_rid + 1:],
+                                 priorities[state.max_rid + 1:]):
+                    reqs.append(rt.submit(p, priority=pr, **kw))
+            return rt, reqs
         journal = Journal(args.journal) if args.journal else None
         rt = Runtime(params, cfg, plan, serve_cfg, journal=journal,
                      injector=injector)
+        box["rt"] = rt
         n_up_front = args.stagger if args.stagger > 0 else len(prompts)
         reqs = [rt.submit(p, priority=pr, **kw)
                 for p, pr in zip(prompts[:n_up_front],
@@ -249,13 +264,17 @@ def main():
         return rt, reqs
 
     if args.restarts > 0:
-        box = {}
 
         def attempt(_):
-            # first attempt honors --resume; every restart replays the
-            # journal (the previous runtime's requests are in it)
-            rt, reqs = build(args.resume or "rt" in box)
-            box["rt"], box["reqs"] = rt, reqs
+            prev = box.pop("rt", None)
+            if prev is not None and prev.journal is not None:
+                prev.journal.close()
+            # a crash inside build() (e.g. during staggered submits) has
+            # already journaled some requests, so decide resume from the
+            # journal itself, not from whether build() ever returned
+            resume = args.resume or bool(Journal.replay(args.journal).records)
+            rt, reqs = build(resume)
+            box["reqs"] = reqs
             return rt.run()
 
         def progress():

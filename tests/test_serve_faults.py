@@ -93,6 +93,44 @@ def test_journal_torn_tail_dropped_but_midfile_corruption_raises(tmp_path):
         Journal.replay(str(tmp_path))
 
 
+def test_journal_reopen_truncates_torn_tail_before_append(tmp_path):
+    """Recovery reopens the journal for append: a torn tail left by the
+    crash must be truncated first, or the next record would merge with it
+    into a corrupt *non*-tail line that poisons every later replay —
+    breaking the crash-during-recovery convergence guarantee."""
+    j = Journal(str(tmp_path))
+    j.record_submit(_fake_req(0))
+    j.close()
+    path = os.path.join(str(tmp_path), "requests.jsonl")
+    with open(path, "a") as f:
+        f.write('{"ev": "retire", "rid": 0, "tok')   # crash mid-append
+    j2 = Journal(str(tmp_path))                      # recovery generation
+    r = _fake_req(0)
+    r.out_tokens = [5]
+    r.finish_reason = "length"
+    j2.record_retire(r)
+    j2.close()
+    st = Journal.replay(str(tmp_path))               # no JournalCorrupt
+    assert not st.inflight and st.completed_tokens(0) == [5]
+    # a journal that is nothing but one torn line recovers to empty
+    with open(path, "w") as f:
+        f.write('{"ev": "sub')
+    Journal(str(tmp_path)).close()
+    assert not Journal.replay(str(tmp_path)).records
+
+
+def test_journal_seq_monotonic_across_reopen(tmp_path):
+    j = Journal(str(tmp_path))
+    j.record_submit(_fake_req(0))
+    j.record_submit(_fake_req(1))
+    j.close()
+    j2 = Journal(str(tmp_path))                      # recovery generation
+    j2.record_submit(_fake_req(2))
+    j2.close()
+    seqs = [r["seq"] for r in Journal.replay(str(tmp_path)).records]
+    assert seqs == [0, 1, 2]
+
+
 def test_journal_crc_rejects_bitflip(tmp_path):
     j = Journal(str(tmp_path))
     j.record_submit(_fake_req(0))
@@ -137,6 +175,9 @@ def test_fault_injector_schedule_and_parse():
     a = FaultInjector.random(0, {"x": 0.3}, horizon=50).schedule
     b = FaultInjector.random(0, {"x": 0.3}, horizon=50).schedule
     assert a == b and a["x"]
+    # a typo'd point name fails loudly instead of silently never firing
+    with pytest.raises(ValueError, match="decode-step"):
+        FaultInjector.parse("decode-step:3")
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +301,29 @@ def test_supervised_drain_with_restarts(tmp_path):
     for rid, want in enumerate(solo):
         assert st.completed_tokens(rid) == list(want)
     assert rt.allocator.num_free == rt.allocator.num_blocks
+
+
+def test_launcher_restart_covers_crash_during_staggered_build(
+        tmp_path, monkeypatch, capsys):
+    """A kill injected while the launcher's build() is still submitting
+    (staggered arrivals) must restart in resume mode: journaled submits
+    replay under their original rids and the never-journaled prompts are
+    re-submitted — rather than rebuilding fresh and appending
+    duplicate-rid submit records that conflate distinct requests."""
+    from repro.launch import serve as launch_serve
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--arch", "qwen2-7b", "--smoke",
+        "--num-requests", "3", "--stagger", "1",
+        "--prompt-len", "8", "--max-new", "4",
+        "--journal", str(tmp_path), "--inject", "kill:1",
+        "--restarts", "2"])
+    launch_serve.main()                 # kill fires on build()'s rt.step()
+    metrics = json.loads(capsys.readouterr().out.strip().splitlines()[-1])
+    assert metrics["faults_fired"] == [["kill", 1]] or \
+        metrics["faults_fired"] == [("kill", 1)]
+    assert len(metrics["prompt_lens"]) == 3
+    st = Journal.replay(str(tmp_path))
+    assert not st.inflight and sorted(st.completed) == [0, 1, 2]
 
 
 # ---------------------------------------------------------------------------
