@@ -14,6 +14,10 @@ committed as BENCH_pipeline.json:
   staged one-forward-per-layer schedule; `derived` = legacy/staged speedup
   (the two-forward schedule pays 2× calibration forward FLOPs).
 * pipeline/{staged,legacy}_wall_per_layer — per-layer wall time (µs).
+* pipeline/journaled_vs_plain — quantize_model with a crash-safe
+  QuantJournal (one host sync + spill + fsync'd record per tap group)
+  vs the sync-free plain walk; `derived` = journaled/plain wall ratio,
+  the durability tax of DESIGN.md §8.1.
 * pipeline/sharded_gram_vs_single — shard_map + single-psum Gram vs the
   single-device Gram; `derived` = single/sharded. On one device this
   tracks the pure shard_map dispatch overhead the data-parallel path
@@ -130,6 +134,31 @@ def run():
                  round(us_legacy / cfg.n_layers, 1), round(us_legacy, 1)))
     rows.append(("pipeline/staged_vs_legacy", round(us_staged, 1),
                  round(us_legacy / us_staged, 3)))
+
+    # --- journaled (crash-safe) vs plain walk (DESIGN.md §8.1) ------------
+    # the journal forces one host sync + spill + fsync'd record per tap
+    # group where the plain walk stays sync-free; this row tracks that
+    # durability tax (derived = journaled/plain wall ratio)
+    import shutil
+    import tempfile
+    jtok = jax.random.randint(jax.random.PRNGKey(3), (4, 128), 0,
+                              cfg.vocab_size)
+
+    def run_plain():
+        return quantize_model(params, cfg, plan, jtok, qspec)[1]
+
+    def run_journaled():
+        jd = tempfile.mkdtemp(prefix="bench_qjournal_")
+        try:
+            return quantize_model(params, cfg, plan, jtok, qspec,
+                                  journal=jd)[1]
+        finally:
+            shutil.rmtree(jd, ignore_errors=True)
+
+    _, us_plain = timed(run_plain, repeats=2)
+    _, us_journaled = timed(run_journaled, repeats=2)
+    rows.append(("pipeline/journaled_vs_plain", round(us_journaled, 1),
+                 round(us_journaled / us_plain, 3)))
 
     # --- sharded Gram (shard_map + one psum) vs single-device Gram --------
     # both sides jitted so the row isolates the shard_map/psum overhead,

@@ -33,6 +33,18 @@ PyTree = Any
 SENTINEL = "_COMMITTED"
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directories need an O_RDONLY
+    fd; some platforms refuse to fsync one — best-effort there)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def _flatten_with_paths(tree: PyTree) -> Dict[str, Any]:
     out = {}
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -110,9 +122,17 @@ class CheckpointManager:
             json.dump(meta, f)
         with open(os.path.join(tmp, SENTINEL), "w") as f:
             f.write("ok")
+        # fsync every file plus the tmp dir before the rename, and the
+        # parent dir after: rename alone orders nothing on most
+        # filesystems — a power-loss right after could otherwise publish
+        # a committed-looking checkpoint with unwritten array bytes
+        for name in os.listdir(tmp):
+            _fsync_path(os.path.join(tmp, name))
+        _fsync_path(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_path(self.dir)
         self._gc()
 
     def wait(self):

@@ -13,6 +13,7 @@ codes, so a served checkpoint is self-describing.
 """
 from __future__ import annotations
 
+import os
 import pickle
 import warnings
 import zlib
@@ -131,21 +132,40 @@ class PackedCkptError(RuntimeError):
     produced."""
 
 
-def save_packed_ckpt(path: str, tree, **meta) -> None:
+def save_packed_ckpt(path: str, tree, fault_cb=None, **meta) -> int:
     """Write a packed quantized tree (host arrays) as a self-describing
     single file: a format/version header plus a crc32 over the pickled
-    payload, so a truncated or corrupted file fails loudly at load."""
+    payload, so a truncated or corrupted file fails loudly at load.
+
+    The write is atomic and durable — tmp + flush + fsync + os.replace —
+    so a kill at any instant leaves either the old file or the new one,
+    never a torn write. `fault_cb` (fault injection) runs between the
+    durable tmp write and the rename: exactly the torn-write window the
+    quantization journal's durability ordering must survive. Returns the
+    payload crc32 (what the journal records per spilled leaf)."""
     payload = pickle.dumps({"tree": tree, **meta})
+    crc = zlib.crc32(payload)
     blob = {"format": PACKED_FORMAT, "version": PACKED_VERSION,
-            "crc32": zlib.crc32(payload), "payload": payload}
-    with open(path, "wb") as f:
+            "crc32": crc, "payload": payload}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
         pickle.dump(blob, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if fault_cb is not None:
+        fault_cb()
+    os.replace(tmp, path)
+    return crc
 
 
-def load_packed_ckpt(path: str) -> Dict[str, Any]:
+def load_packed_ckpt(path: str, expect_crc: Optional[int] = None
+                     ) -> Dict[str, Any]:
     """Load + validate a packed checkpoint; returns the payload dict
     ({"tree": ..., **meta}). Pre-header files (a bare {"tree", "bits",
-    "arch"} pickle) still load, with a warning — re-save to upgrade."""
+    "arch"} pickle) still load, with a warning — re-save to upgrade.
+    `expect_crc` (the quantization journal's per-leaf record) must match
+    the header crc exactly — a valid-but-different file is as wrong as a
+    corrupt one when resuming a run."""
     try:
         with open(path, "rb") as f:
             blob = pickle.load(f)
@@ -161,6 +181,10 @@ def load_packed_ckpt(path: str) -> Dict[str, Any]:
             raise PackedCkptError(
                 f"{path}: neither a headered packed checkpoint nor a "
                 "legacy tree blob (keys: " + ", ".join(sorted(blob)) + ")")
+        if expect_crc is not None:
+            raise PackedCkptError(
+                f"{path}: legacy headerless checkpoint has no checksum "
+                f"to match the expected {expect_crc:#010x}")
         warnings.warn(f"{path}: legacy headerless packed checkpoint — "
                       "no checksum to verify; re-save to upgrade",
                       stacklevel=2)
@@ -178,4 +202,9 @@ def load_packed_ckpt(path: str) -> Dict[str, Any]:
         raise PackedCkptError(
             f"{path}: checksum mismatch (stored {blob['crc32']:#010x}, "
             f"computed {crc:#010x}) — the checkpoint is corrupt")
+    if expect_crc is not None and crc != int(expect_crc):
+        raise PackedCkptError(
+            f"{path}: checksum {crc:#010x} does not match the journaled "
+            f"{int(expect_crc):#010x} — the spill was replaced or the "
+            "journal belongs to a different run")
     return pickle.loads(payload)

@@ -4,6 +4,8 @@ from repro.core.comq import QuantResult, comq_quantize, make_orders  # noqa: F40
 from repro.core.comq_hessian import (comq_quantize_blocked,  # noqa: F401
                                      comq_quantize_h, gram)
 from repro.core.apply import serving_params  # noqa: F401
+from repro.core.guards import (GuardContext, GuardEvent,  # noqa: F401
+                               damp_hessian, damped_inverse, guarded_solve)
 from repro.core.pipeline import (QuantReport, dequantize_tree,  # noqa: F401
                                  materialize, quantize_model)
 from repro.core.policy import (QuantPolicy, allocate_bits,  # noqa: F401

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from repro.core.comq import QuantResult
 from repro.core.comq_hessian import _h_error, gram
+from repro.core.guards import damped_inverse
 from repro.core.quantizer import (EPS, QuantSpec, init_per_channel,
                                   init_per_layer, quantize_rtn)
 
@@ -48,12 +49,17 @@ def gptq_quantize(h: Array, w: Array, spec: QuantSpec,
     else:
         delta, z_lo, z_hi = init_per_channel(w, spec.bits, spec.lam)
 
-    # dampen + handle dead features
+    # revive dead features, then invert under the shared escalating
+    # damping (core/guards.damped_inverse — same helper the COMQ guard
+    # chain uses): the first attempt is the historical fixed
+    # `damping · mean(diag)` and only an ill-conditioned H escalates,
+    # so well-posed solves are unchanged. H-space errors keep the
+    # first-attempt damped H so reported errors match the pre-guard ones.
     diag = jnp.diag(h)
     dead = diag <= EPS
     h = h + jnp.diag(jnp.where(dead, 1.0, 0.0))
+    hinv, _ = damped_inverse(h, start=damping, diag_mean=jnp.mean(diag))
     h = h + jnp.eye(m) * damping * jnp.mean(diag)
-    hinv = jnp.linalg.inv(h)
 
     w0 = w
 

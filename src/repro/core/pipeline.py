@@ -35,18 +35,26 @@ everywhere and is bit-identical to the pre-policy pipeline.
 from __future__ import annotations
 
 import functools
+import json
+import sys
 import time
-from dataclasses import dataclass, field
+import zlib
+from dataclasses import asdict, dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import calibrate
+from repro.core import guards as _guards
 from repro.core.baselines import gptq_quantize, rtn_quantize
 from repro.core.comq_hessian import comq_quantize_blocked, comq_quantize_h
-from repro.core.policy import as_policy
+from repro.core.guards import GuardContext, GuardEvent, guarded_solve
+from repro.core.policy import as_policy, policy_to_dict
 from repro.core.quantizer import QuantSpec
+from repro.ft.inject import InjectedFault, SimulatedKill
+from repro.ft.journal import QuantJournal, ResumeMismatch
 from repro.models import transformer as tfm
 from repro.models.common import apply_norm
 
@@ -147,6 +155,10 @@ class LayerReport:
     # an async backend this is not the solve's compute time — use
     # QuantReport.wall_seconds for end-to-end cost
     seconds: float
+    # comma-joined guard-event kinds for this leaf ("" = no intervention;
+    # e.g. "dead_columns,damping_escalated") — see QuantReport.guard_events
+    # for the full records
+    guard: str = ""
 
 
 @dataclass
@@ -155,6 +167,12 @@ class QuantReport:
     # end-to-end quantize_model wall time (measured around the whole walk,
     # after the finalizing device_get — includes all device compute)
     wall_seconds: float = 0.0
+    # every numeric-guard intervention of the run (core/guards.GuardEvent):
+    # NaN/Inf sentinels, dead columns, damping escalations, solver
+    # fallbacks — empty on a healthy run
+    guard_events: List[GuardEvent] = field(default_factory=list)
+    # leaves re-applied from the quantization journal instead of re-solved
+    resumed_leaves: int = 0
 
     def total_improvement(self) -> float:
         b = sum(r.err_before for r in self.layers)
@@ -167,11 +185,15 @@ class QuantReport:
 # ---------------------------------------------------------------------------
 
 def solve(h: Array, w2d: Array, spec: QuantSpec, method: str = "comq",
-          block: int = 256):
+          block: int = 256, schedule: Optional[str] = None):
+    """`schedule` only applies to comq_blocked (None = trailing); the
+    guard fallback chain (core/guards.solver_chain) uses it to retry a
+    failed trailing-update solve on the per-panel-refresh schedule."""
     if method == "comq":
         return comq_quantize_h(h, w2d, spec)
     if method == "comq_blocked":
-        return comq_quantize_blocked(h, w2d, spec, block=block)
+        return comq_quantize_blocked(h, w2d, spec, block=block,
+                                     schedule=schedule or "trailing")
     if method == "rtn":
         return rtn_quantize(w2d, spec, h=h)
     if method == "gptq":
@@ -250,8 +272,20 @@ def _uniform(specs) -> bool:
     return all(s == specs[0] for s in specs)
 
 
+def _results_finite(results) -> bool:
+    """Host bool: every (qt, eb, ea, secs) row has finite scales and
+    errors — one batched transfer (the post-solve guard sentinel)."""
+    flags = [jnp.all(jnp.isfinite(qt["scale"]))
+             & jnp.isfinite(jnp.asarray(eb, jnp.float32))
+             & jnp.isfinite(jnp.asarray(ea, jnp.float32))
+             for qt, eb, ea, _ in results]
+    return bool(jax.device_get(jnp.all(jnp.stack(flags))))
+
+
 def _solve_group(ws, h: Array, specs, method: str,
-                 block: int = 256, solve_sh=None):
+                 block: int = 256, solve_sh=None, *,
+                 gctx: Optional[GuardContext] = None, layer: int = -1,
+                 names=None):
     """Solve the weight leaves `ws` (all calibrated by the same Gram h),
     each under its own resolved per-leaf spec (`specs`, same length).
 
@@ -269,10 +303,37 @@ def _solve_group(ws, h: Array, specs, method: str,
     fused concatenation solves as one column-sharded matrix, per-leaf
     solves shard per leaf (each with its own spec) — so sharded and
     replicated pipelines agree at every bit width.
+    With an enabled `gctx` (core/guards.GuardContext) the group runs the
+    full guard policy: one batched health check sanitizes NaN/Inf in H
+    and the weights and counts dead Gram columns, solves go through
+    `guarded_solve` (escalating damping + solver fallback chain), and a
+    sharded solve whose output is non-finite is redone replicated under
+    the guarded chain. A healthy group takes the exact unguarded compute
+    path, so guarded and unguarded pipelines are bit-identical unless a
+    guard actually fires.
+
     Returns [(qtensor, err_before, err_after, seconds), ...]."""
     m = h.shape[0]
     w2ds = [_w2d(w, m) for w in ws]
     spec0 = specs[0]
+    guarding = gctx is not None and gctx.enabled
+    if names is None:
+        names = [f"leaf{i}" for i in range(len(ws))]
+    if guarding:
+        n_bad_h, n_dead, n_bad_ws = _guards.gram_health(h, w2ds)
+        if n_bad_h:
+            h = jnp.where(jnp.isfinite(h), h, jnp.zeros((), h.dtype))
+            for nm in names:
+                gctx.record(layer, nm, "nonfinite_gram", count=n_bad_h)
+        for i, (nb, nm) in enumerate(zip(n_bad_ws, names)):
+            if nb:
+                w2ds[i] = jnp.where(jnp.isfinite(w2ds[i]), w2ds[i],
+                                    jnp.zeros((), w2ds[i].dtype))
+                gctx.record(layer, nm, "nonfinite_weight", count=nb)
+        if n_dead:
+            for nm in names:
+                gctx.record(layer, nm, "dead_columns", warn=False,
+                            count=n_dead)
 
     if solve_sh is not None and _col_shardable(spec0, method):
         fuse = len(ws) > 1 and _uniform(specs) and _fusable(spec0, method)
@@ -291,21 +352,33 @@ def _solve_group(ws, h: Array, specs, method: str,
                 out.append((qt, _norm_of(e2b[lo:hi]), _norm_of(e2a[lo:hi]),
                             secs))
                 lo = hi
-            return out
-        out = []
-        for w, w2d, spec in zip(ws, w2ds, specs):
-            t0 = time.time()
-            q, delta, z_lo, e2b, e2a = solve_sh(h, w2d, spec=spec,
-                                                block=block)
-            qt = make_qtensor(q, delta, z_lo, w.shape, bits=spec.bits)
-            out.append((qt, _norm_of(e2b), _norm_of(e2a),
-                        time.time() - t0))
+        else:
+            out = []
+            for w, w2d, spec in zip(ws, w2ds, specs):
+                t0 = time.time()
+                q, delta, z_lo, e2b, e2a = solve_sh(h, w2d, spec=spec,
+                                                    block=block)
+                qt = make_qtensor(q, delta, z_lo, w.shape, bits=spec.bits)
+                out.append((qt, _norm_of(e2b), _norm_of(e2a),
+                            time.time() - t0))
+        if guarding and not _results_finite(out):
+            # the sharded program has no guard hooks — redo this group
+            # replicated under the full guarded chain
+            for nm in names:
+                gctx.record(layer, nm, "sharded_solve_nonfinite")
+            return _solve_group(ws, h, specs, method, block, None,
+                                gctx=gctx, layer=layer, names=names)
         return out
 
     if len(ws) > 1 and _uniform(specs) and _fusable(spec0, method):
         t0 = time.time()
         wcat = jnp.concatenate([w.astype(jnp.float32) for w in w2ds], axis=1)
-        r = solve(h, wcat, spec0, method, block=block)
+        if guarding:
+            r = guarded_solve(h, wcat, spec0, method, block=block,
+                              gctx=gctx, layer=layer, names=names,
+                              solve_fn=solve, presanitized=True)
+        else:
+            r = solve(h, wcat, spec0, method, block=block)
         e2_after = _col_err2(h, wcat, r.q.astype(jnp.float32) * r.delta)
         rt = rtn_quantize(wcat, spec0)
         e2_before = _col_err2(h, wcat, rt.q.astype(jnp.float32) * rt.delta)
@@ -321,9 +394,14 @@ def _solve_group(ws, h: Array, specs, method: str,
         return out
 
     out = []
-    for w, w2d, spec in zip(ws, w2ds, specs):
+    for i, (w, w2d, spec) in enumerate(zip(ws, w2ds, specs)):
         t0 = time.time()
-        r = solve(h, w2d, spec, method, block=block)
+        if guarding:
+            r = guarded_solve(h, w2d, spec, method, block=block, gctx=gctx,
+                              layer=layer, names=names[i:i + 1],
+                              solve_fn=solve, presanitized=True)
+        else:
+            r = solve(h, w2d, spec, method, block=block)
         rt = rtn_quantize(w2d, spec, h=h)
         qt = make_qtensor(r.q, r.delta, r.z_lo, w.shape, bits=spec.bits)
         out.append((qt, rt.errors[-1], r.errors[-1], time.time() - t0))
@@ -339,15 +417,23 @@ def _expert_qtensor(q, delta, z_lo, shape, bits: int):
     return make_qtensor(q, delta_b, z_b, shape, bits=bits)
 
 
-def _solve_group_experts(ws, hs: Array, specs, method: str):
+def _solve_group_experts(ws, hs: Array, specs, method: str, *,
+                         gctx: Optional[GuardContext] = None,
+                         layer: int = -1, names=None):
     """Stacked-expert leaves (E, d, f_k) sharing per-expert Grams hs
     (E, d, d): vmapped per-expert solves, column-fused across leaves when
     exact (identical specs only — mixed-bit expert groups solve per leaf).
-    Returns [(qtensor, err_before, err_after, seconds), ...]."""
 
-    def one_fn(spec):
+    The vmapped solve body cannot host-sync per expert, so the guard
+    policy here is group-batched: sanitize non-finite Grams up front, run
+    the unguarded solve, and only if the *group's* results are non-finite
+    retry the whole group under escalating damping, finally falling back
+    to (data-free) RTN. A healthy group is bit-identical to the unguarded
+    path. Returns [(qtensor, err_before, err_after, seconds), ...]."""
+
+    def one_fn(spec, meth):
         def one(h_e, w_e):
-            r = solve(h_e, w_e, spec, method)
+            r = solve(h_e, w_e, spec, meth)
             rt = rtn_quantize(w_e, spec)
             e2a = _col_err2(h_e, w_e, r.q.astype(jnp.float32) * r.delta)
             e2b = _col_err2(h_e, w_e, rt.q.astype(jnp.float32) * rt.delta)
@@ -355,30 +441,211 @@ def _solve_group_experts(ws, hs: Array, specs, method: str):
         return one
 
     spec0 = specs[0]
-    if len(ws) > 1 and _uniform(specs) and _fusable(spec0, method):
-        t0 = time.time()
-        wcat = jnp.concatenate([w.astype(jnp.float32) for w in ws], axis=-1)
-        q, delta, z_lo, e2a, e2b = jax.vmap(one_fn(spec0))(hs, wcat)
-        secs = (time.time() - t0) / len(ws)
-        out, lo = [], 0
-        for w in ws:
-            hi = lo + w.shape[-1]
-            qt = _expert_qtensor(q[:, :, lo:hi], delta[:, lo:hi],
-                                 z_lo[:, lo:hi], w.shape, spec0.bits)
-            out.append((qt, _expert_norm_sum(e2b[:, lo:hi]),
-                        _expert_norm_sum(e2a[:, lo:hi]), secs))
-            lo = hi
+
+    def run(hs_in, meth):
+        if len(ws) > 1 and _uniform(specs) and _fusable(spec0, meth):
+            t0 = time.time()
+            wcat = jnp.concatenate([w.astype(jnp.float32) for w in ws],
+                                   axis=-1)
+            q, delta, z_lo, e2a, e2b = jax.vmap(one_fn(spec0, meth))(
+                hs_in, wcat)
+            secs = (time.time() - t0) / len(ws)
+            out, lo = [], 0
+            for w in ws:
+                hi = lo + w.shape[-1]
+                qt = _expert_qtensor(q[:, :, lo:hi], delta[:, lo:hi],
+                                     z_lo[:, lo:hi], w.shape, spec0.bits)
+                out.append((qt, _expert_norm_sum(e2b[:, lo:hi]),
+                            _expert_norm_sum(e2a[:, lo:hi]), secs))
+                lo = hi
+            return out
+        out = []
+        for w, spec in zip(ws, specs):
+            t0 = time.time()
+            q, delta, z_lo, e2a, e2b = jax.vmap(one_fn(spec, meth))(
+                hs_in, w.astype(jnp.float32))
+            qt = _expert_qtensor(q, delta, z_lo, w.shape, spec.bits)
+            out.append((qt, _expert_norm_sum(e2b), _expert_norm_sum(e2a),
+                        time.time() - t0))
         return out
 
-    out = []
-    for w, spec in zip(ws, specs):
-        t0 = time.time()
-        q, delta, z_lo, e2a, e2b = jax.vmap(one_fn(spec))(
-            hs, w.astype(jnp.float32))
-        qt = _expert_qtensor(q, delta, z_lo, w.shape, spec.bits)
-        out.append((qt, _expert_norm_sum(e2b), _expert_norm_sum(e2a),
-                    time.time() - t0))
+    guarding = gctx is not None and gctx.enabled
+    if not guarding:
+        return run(hs, method)
+    if names is None:
+        names = [f"leaf{i}" for i in range(len(ws))]
+    n_bad = _guards.nonfinite_count(hs)
+    if n_bad:
+        hs = jnp.where(jnp.isfinite(hs), hs, jnp.zeros((), hs.dtype))
+        for nm in names:
+            gctx.record(layer, nm, "nonfinite_gram", count=n_bad)
+    out = run(hs, method)
+    if _results_finite(out):
+        return out
+    for mult in _guards.DAMP_MULTS:
+        out = run(_guards.damp_hessian(hs, mult), method)
+        if _results_finite(out):
+            for nm in names:
+                gctx.record(layer, nm, "damping_escalated", mult=mult)
+            return out
+    out = run(hs, "rtn")
+    for nm in names:
+        gctx.record(layer, nm, "fallback", solver="rtn")
     return out
+
+
+# ---------------------------------------------------------------------------
+# crash-safe run context: journaling, resume, fault injection (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _spec_digest(spec: QuantSpec, method: str) -> int:
+    """crc32 of the resolved spec + solver — part of the journal key, so a
+    journaled leaf is only re-applied when a re-solve would have received
+    the identical spec (a changed policy/method invalidates it)."""
+    payload = {**asdict(spec), "method": method}
+    return zlib.crc32(json.dumps(payload, sort_keys=True).encode())
+
+
+def _run_digest(cfg, policy, method: str, propagation: str, tok_host,
+                quantize_unembed: bool, mesh) -> int:
+    """crc32 over everything that must match for journaled leaves to be
+    bit-identical to a fresh solve: architecture, solver, policy,
+    propagation schedule, the calibration token bytes, and the mesh shape
+    (a different mesh reduces Grams in a different order)."""
+    tok = np.asarray(tok_host)
+    payload = {
+        "arch": cfg.name, "family": cfg.family, "n_layers": cfg.n_layers,
+        "method": method, "propagation": propagation,
+        "policy": policy_to_dict(policy),
+        "unembed": bool(quantize_unembed),
+        "tokens": [zlib.crc32(tok.tobytes()), list(tok.shape),
+                   str(tok.dtype)],
+        "mesh": (sorted([str(k), int(v)] for k, v in mesh.shape.items())
+                 if mesh is not None else None),
+    }
+    return zlib.crc32(json.dumps(payload, sort_keys=True).encode())
+
+
+def _calib_leaf_dims(cfg) -> Dict[str, int]:
+    """Leaf-class input dims for the calibration coverage check: a Gram
+    over fewer tokens than columns is guaranteed rank-deficient."""
+    dims = {"d_model": cfg.d_model}
+    if not cfg.attn_free:
+        dims["wo_in"] = cfg.n_heads * cfg.resolved_head_dim
+        dims["down_in"] = cfg.d_ff
+    return dims
+
+
+class _RunCtx:
+    """Per-run plumbing threaded through the layer walk: the numeric-guard
+    context (core/guards), the quantization journal (resume lookup +
+    durable leaf commit, ft/journal.QuantJournal), and the fault injector
+    (ft/inject). A default-constructed ctx without journal/injector and a
+    disabled gctx is a no-op at every hook — the historical pipeline."""
+
+    def __init__(self, method: str, gctx: Optional[GuardContext] = None,
+                 journal: Optional[QuantJournal] = None, solved=None,
+                 injector=None, progress_cb=None):
+        self.method = method
+        self.gctx = gctx
+        self.journal = journal
+        self.solved = dict(solved or {})   # (layer, name) -> leaf record
+        self.injector = injector
+        self.progress_cb = progress_cb
+        self.resumed = 0
+
+    # -- fault injection ----------------------------------------------------
+
+    def fault(self, point: str, exc=InjectedFault) -> None:
+        if self.injector is not None:
+            self.injector.check(point, exc=exc)
+
+    def poison_tap(self, tap: Array) -> Array:
+        """nan_tap fault: poison one tap entry instead of raising —
+        exercises the NaN sentinels end-to-end."""
+        if self.injector is not None and self.injector.fire("nan_tap"):
+            tap = tap.at[(0,) * tap.ndim].set(jnp.nan)
+        return tap
+
+    def sanitize_tap(self, tap: Array, layer: int, names) -> Array:
+        """Tap-collection NaN/Inf sentinel: scrub (and record) non-finite
+        activations before they poison the Gram."""
+        if self.gctx is None or not self.gctx.enabled:
+            return tap
+        n_bad = _guards.nonfinite_count(tap)
+        if n_bad:
+            tap = jnp.where(jnp.isfinite(tap), tap, jnp.zeros((), tap.dtype))
+            for nm in names:
+                self.gctx.record(layer, nm, "nonfinite_tap", count=n_bad)
+        return tap
+
+    # -- journal: resume lookup + durable commit ----------------------------
+
+    def lookup(self, layer: int, names, specs):
+        """All-or-nothing journal hit for one tap group: every leaf must
+        be journaled under its current spec digest, else the whole group
+        re-solves (a partial hit would change fused-solve membership).
+        Returns [(qtensor, leaf record), ...] or None."""
+        if self.journal is None or not self.solved:
+            return None
+        recs = []
+        for nm, spec in zip(names, specs):
+            rec = self.solved.get((layer, nm))
+            if rec is None or rec["spec"] != _spec_digest(spec, self.method):
+                return None
+            recs.append(rec)
+        loaded = []
+        for rec in recs:
+            qt_host = QuantJournal.load_leaf(self.journal.dir, rec)
+            # intern the dict keys: each spill unpickles fresh string
+            # objects, and downstream pickles (ckpt --save-packed) would
+            # lose key memo-sharing vs a freshly-solved tree — the bytes
+            # must be identical, not just the values
+            qt = {sys.intern(str(k)): (jnp.asarray(v)
+                                       if isinstance(v, np.ndarray) else v)
+                  for k, v in qt_host.items()}
+            loaded.append((qt, rec))
+        self.resumed += len(loaded)
+        return loaded
+
+    def commit(self, layer: int, names, specs, results):
+        """Durably persist each solved leaf — spill (atomic packed file)
+        strictly before its journal record, so a journaled leaf always
+        has a valid spill — and return rows with host-float errors.
+        Journaling forces one host sync per group (durability needs the
+        bytes); without a journal the walk stays sync-free."""
+        if self.journal is None:
+            return results
+        errs = jax.device_get(
+            jnp.stack([jnp.stack([jnp.asarray(eb, jnp.float32),
+                                  jnp.asarray(ea, jnp.float32)])
+                       for _, eb, ea, _ in results]))
+        rows = []
+        for (nm, spec, (qt, _, _, secs)), (ebf, eaf) in zip(
+                zip(names, specs, results), errs):
+            qt_host = {k: np.asarray(jax.device_get(v))
+                       if isinstance(v, jax.Array) else v
+                       for k, v in qt.items()}
+            fname, crc = self.journal.spill_leaf(
+                layer, nm, qt_host, fault_cb=self._ckpt_write_fault)
+            self.journal.record_leaf(layer, nm,
+                                     _spec_digest(spec, self.method),
+                                     fname, crc, float(ebf), float(eaf))
+            rows.append((qt, float(ebf), float(eaf), secs))
+        return rows
+
+    def _ckpt_write_fault(self) -> None:
+        self.fault("ckpt_write")
+
+    def layer_done(self, layer: int) -> None:
+        """End-of-layer hook: journal the marker, report progress to the
+        supervisor, and give the (shared) kill fault point its between-
+        layers shot — after the layer's leaves are durably journaled."""
+        if self.journal is not None:
+            self.journal.record_layer_done(layer)
+        if self.progress_cb is not None:
+            self.progress_cb(layer)
+        self.fault("kill", SimulatedKill)
 
 
 def _tap_groups(lp, tapmap) -> Dict[str, List[Tuple[str, str]]]:
@@ -413,13 +680,15 @@ def _group_specs(resolve, layer_idx: int, entries, prefix: str = ""):
 def _quantize_layer_leaves(lp, taps, tapmap, resolve, method: str,
                            pending: List[tuple], layer_idx: int,
                            gram_fn=None, batched_fn=None, prefix: str = "",
-                           solve_sh=None):
+                           solve_sh=None, ctx: Optional[_RunCtx] = None):
     """Legacy-schedule body: quantize every mapped leaf of one layer from a
     pre-collected `taps` dict, grouped by activation tap (TapGramCache: one
     Gram per tap; fused solves when exact). `resolve(layer_idx, name)`
     supplies each leaf's QuantSpec (core/policy). Returns the layer params
     with QTensor leaves; appends per-leaf (idx, name, err, err, secs)
-    records with the errors left on device."""
+    records with the errors left on device (host floats when journaling)."""
+    if ctx is None:
+        ctx = _RunCtx(method)
     cache = calibrate.TapGramCache(gram_fn=gram_fn, batched_fn=batched_fn)
     groups = _tap_groups(lp, tapmap)
 
@@ -427,43 +696,93 @@ def _quantize_layer_leaves(lp, taps, tapmap, resolve, method: str,
     for tapname, entries in groups.items():
         ws = [lp[mod][leaf] for mod, leaf in entries]
         specs = _group_specs(resolve, layer_idx, entries, prefix)
+        names = [f"{prefix}{mod}.{leaf}" for mod, leaf in entries]
+        cached = ctx.lookup(layer_idx, names, specs)
+        if cached is not None:
+            for (mod, leaf), nm, (qt, rec) in zip(entries, names, cached):
+                lp_q = _set_nested(lp_q, mod, leaf, qt)
+                pending.append((layer_idx, nm, rec["err_before"],
+                                rec["err_after"], 0.0))
+            continue
+        ctx.fault("gram_accumulate")
+        tap = ctx.sanitize_tap(ctx.poison_tap(taps[tapname]), layer_idx,
+                               names)
+        for _ in names:
+            ctx.fault("leaf_solve")
         if tapname.startswith("expert"):
-            hs = cache.batched(tapname, taps[tapname])
-            results = _solve_group_experts(ws, hs, specs, method)
+            hs = cache.batched(tapname, tap)
+            results = _solve_group_experts(ws, hs, specs, method,
+                                           gctx=ctx.gctx, layer=layer_idx,
+                                           names=names)
         else:
-            h = cache.gram(tapname, taps[tapname])
-            results = _solve_group(ws, h, specs, method, solve_sh=solve_sh)
-        for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
+            h = cache.gram(tapname, tap)
+            results = _solve_group(ws, h, specs, method, solve_sh=solve_sh,
+                                   gctx=ctx.gctx, layer=layer_idx,
+                                   names=names)
+        results = ctx.commit(layer_idx, names, specs, results)
+        for (mod, leaf), nm, (qt, eb, ea, secs) in zip(entries, names,
+                                                       results):
             lp_q = _set_nested(lp_q, mod, leaf, qt)
-            pending.append((layer_idx, f"{prefix}{mod}.{leaf}", eb, ea, secs))
+            pending.append((layer_idx, nm, eb, ea, secs))
     return lp_q
 
 
 def _staged_cb(lp, groups, taps, resolve, method: str,
                pending: List[tuple], layer_idx: int, holder: dict,
-               gram_fn, batched_fn, prefix: str = "", solve_sh=None):
+               gram_fn, batched_fn, prefix: str = "", solve_sh=None,
+               ctx: Optional[_RunCtx] = None):
     """The staged-schedule `quantize_cb`: invoked by the model's tap hooks
     mid-forward, right after tap `tapname` is recorded and before the
     weights it feeds are applied. Solves the tap's leaf group (each leaf
     under its resolved per-leaf spec), stashes the QTensors, and returns
     dequantized replacements so the rest of the forward runs on the
-    quantized sub-blocks."""
+    quantized sub-blocks.
+
+    On `--resume` the ctx journal lookup short-circuits the solve: the
+    journaled QTensors are re-applied through this same callback, so the
+    forward still propagates through the identical quantized sub-blocks
+    and every downstream tap — and therefore every remaining solve — is
+    bit-identical to the uninterrupted run."""
+    if ctx is None:
+        ctx = _RunCtx(method)
+
     def cb(tapname: str):
         entries = groups.get(tapname)
         if not entries:
             return {}
         ws = [lp[mod][leaf] for mod, leaf in entries]
         specs = _group_specs(resolve, layer_idx, entries, prefix)
+        names = [f"{prefix}{mod}.{leaf}" for mod, leaf in entries]
+        cached = ctx.lookup(layer_idx, names, specs)
+        if cached is not None:
+            repl = {}
+            for (mod, leaf), nm, (qt, rec) in zip(entries, names, cached):
+                holder["lp_q"] = _set_nested(holder["lp_q"], mod, leaf, qt)
+                pending.append((layer_idx, nm, rec["err_before"],
+                                rec["err_after"], 0.0))
+                repl[leaf] = dequant_qtensor(qt)
+            return repl
+        ctx.fault("gram_accumulate")
+        tap = ctx.sanitize_tap(ctx.poison_tap(taps[tapname]), layer_idx,
+                               names)
+        for _ in names:
+            ctx.fault("leaf_solve")
         if tapname.startswith("expert"):
-            hs = batched_fn(taps[tapname])
-            results = _solve_group_experts(ws, hs, specs, method)
+            hs = batched_fn(tap)
+            results = _solve_group_experts(ws, hs, specs, method,
+                                           gctx=ctx.gctx, layer=layer_idx,
+                                           names=names)
         else:
-            h = gram_fn(taps[tapname])
-            results = _solve_group(ws, h, specs, method, solve_sh=solve_sh)
+            h = gram_fn(tap)
+            results = _solve_group(ws, h, specs, method, solve_sh=solve_sh,
+                                   gctx=ctx.gctx, layer=layer_idx,
+                                   names=names)
+        results = ctx.commit(layer_idx, names, specs, results)
         repl = {}
-        for (mod, leaf), (qt, eb, ea, secs) in zip(entries, results):
+        for (mod, leaf), nm, (qt, eb, ea, secs) in zip(entries, names,
+                                                       results):
             holder["lp_q"] = _set_nested(holder["lp_q"], mod, leaf, qt)
-            pending.append((layer_idx, f"{prefix}{mod}.{leaf}", eb, ea, secs))
+            pending.append((layer_idx, nm, eb, ea, secs))
             repl[leaf] = dequant_qtensor(qt)
         return repl
     return cb
@@ -471,7 +790,8 @@ def _staged_cb(lp, groups, taps, resolve, method: str,
 
 def _staged_ctx(lp, tapmap, resolve, method: str,
                 pending: List[tuple], layer_idx: int, gram_fn, batched_fn,
-                prefix: str = "", solve_sh=None):
+                prefix: str = "", solve_sh=None,
+                ctx: Optional[_RunCtx] = None):
     """(taps, holder, cb) for one staged layer walk — shared by the
     homogeneous, VLM-self, and VLM-cross paths so the callback protocol
     has a single definition."""
@@ -479,21 +799,22 @@ def _staged_ctx(lp, tapmap, resolve, method: str,
     holder = {"lp_q": lp}
     cb = _staged_cb(lp, _tap_groups(lp, tapmap), taps, resolve, method,
                     pending, layer_idx, holder, gram_fn, batched_fn,
-                    prefix=prefix, solve_sh=solve_sh)
+                    prefix=prefix, solve_sh=solve_sh, ctx=ctx)
     return taps, holder, cb
 
 
 def _quantize_layer_staged(lp, x, state, cfg, plan, tapmap,
                            resolve, method: str,
                            pending: List[tuple], layer_idx: int,
-                           gram_fn, batched_fn, solve_sh=None):
+                           gram_fn, batched_fn, solve_sh=None,
+                           ctx: Optional[_RunCtx] = None):
     """Staged schedule: ONE `layer_full` evaluation quantizes the layer in
     tap order *and* propagates x through the quantized sub-blocks — every
     downstream tap is exact w.r.t. the quantized upstream. Returns
     (lp_q, new_x, new_state)."""
     taps, holder, cb = _staged_ctx(lp, tapmap, resolve, method, pending,
                                    layer_idx, gram_fn, batched_fn,
-                                   solve_sh=solve_sh)
+                                   solve_sh=solve_sh, ctx=ctx)
     rwkv_state = state if cfg.attn_free else None
     ssm_state = state if cfg.parallel_ssm_heads else None
     y, _, _, new_state = tfm.layer_full(lp, x, cfg, plan, False,
@@ -542,7 +863,12 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
                    vision_embeds: Optional[Array] = None,
                    quantize_unembed: bool = False,
                    propagation: str = "staged",
-                   mesh=None):
+                   mesh=None, *,
+                   guards: bool = True,
+                   journal=None,
+                   resume: bool = False,
+                   injector=None,
+                   progress_cb: Optional[Callable[[int], None]] = None):
     """Quantize all projection weights of an LM. `tokens`: (B, T) calib batch.
 
     `spec` is either a global QuantSpec (every leaf gets it — bit-identical
@@ -567,10 +893,32 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
     routing capacity is rounded up to it (BuildPlan.moe_capacity_multiple)
     so expert taps always take the Gram-psum path.
 
+    Robustness plumbing (DESIGN.md §8), all optional:
+
+    * guards=True runs the numeric-guard policy (core/guards): NaN/Inf
+      sentinels at tap collection and per Gram/weight, dead-column
+      counting, escalating damping and the solver fallback chain on
+      failed solves. A healthy run takes the exact unguarded compute
+      path (bit-identical); every intervention lands in
+      QuantReport.guard_events and the leaf's LayerReport.guard.
+    * journal (a directory or a ft.QuantJournal) makes the run
+      crash-safe: every solved leaf is durably spilled (atomic packed
+      file) and journaled; resume=True re-applies journaled leaves
+      through the same quantize_cb instead of re-solving, producing
+      bit-identical codes/scales to an uninterrupted run. A resume
+      against a journal whose run digest (arch/policy/method/calib/mesh)
+      differs raises ft.ResumeMismatch.
+    * injector (ft.FaultInjector) arms the pipeline fault points
+      (gram_accumulate / leaf_solve / ckpt_write / kill / nan_tap);
+      progress_cb(layer) fires after each durably-journaled layer (the
+      supervisor's progress signal, e.g. ft.Heartbeat.beat).
+
     Returns (qparams, QuantReport). qparams has QTensor leaves (each
     carrying its resolved bit width); use `dequantize_tree` (or the
     quantized serving path) to run it.
     """
+    from repro.data import (check_calib_coverage, validate_calib_features,
+                            validate_calib_tokens)
     from repro.models.model import embed_tokens
     if propagation not in ("staged", "legacy"):
         raise ValueError(f"unknown propagation {propagation!r}")
@@ -579,6 +927,45 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
 
     def resolve(layer_idx: int, name: str) -> QuantSpec:
         return policy.resolve(name, layer_idx, n_layers)
+
+    tok_host = np.asarray(jax.device_get(tokens))
+    validate_calib_tokens(tok_host, vocab_size=cfg.vocab_size)
+    if cfg.family == "vlm" and vision_embeds is not None:
+        validate_calib_features(vision_embeds)
+    check_calib_coverage(int(tok_host.shape[0]) * int(tok_host.shape[1]),
+                         _calib_leaf_dims(cfg))
+
+    # journal setup + resume decision — the run digest hashes the
+    # *unsharded* calibration bytes, so replicated and resharded runs of
+    # the same calibration agree on identity up to the mesh term
+    qj: Optional[QuantJournal] = None
+    own_journal = False
+    solved: Dict[Tuple[int, str], Dict] = {}
+    if journal is not None:
+        own_journal = not isinstance(journal, QuantJournal)
+        qj = QuantJournal(journal) if own_journal else journal
+        digest = _run_digest(cfg, policy, method, propagation, tok_host,
+                             quantize_unembed, mesh)
+        st = QuantJournal.replay(qj.dir)
+        if resume and st.run is not None:
+            if int(st.run["run"]) != digest:
+                if own_journal:
+                    qj.close()
+                raise ResumeMismatch(
+                    f"journal {qj.dir} was written by run digest "
+                    f"{st.run['run']}, current run digest is {digest} "
+                    "(arch/policy/method/calibration/mesh changed) — "
+                    "refusing to mix journaled leaves into a different run")
+            solved = dict(st.leaves)
+            qj.record_resume(len(solved))
+        else:
+            qj.record_run_start(digest, arch=cfg.name, method=method,
+                                propagation=propagation,
+                                n_layers=cfg.n_layers)
+
+    gctx = GuardContext(enabled=guards)
+    ctx = _RunCtx(method, gctx=gctx, journal=qj, solved=solved,
+                  injector=injector, progress_cb=progress_cb)
 
     t_start = time.time()
     report = QuantReport()
@@ -595,57 +982,86 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
             plan = plan.replace(moe_capacity_multiple=ndata)
         if model_size(mesh) > 1 and _col_shardable(policy.base, method):
             solve_sh = functools.partial(sharded_solve, mesh, method=method)
-    x = embed_tokens(params, cfg, plan, tokens)
-    qparams = jax.tree_util.tree_map(lambda a: a, params)  # shallow copy
-    tapmap = taps_for(cfg)
 
-    if cfg.family == "vlm":
-        qparams = _quantize_vlm(params, cfg, plan, x, resolve, method,
-                                vision_embeds, pending, propagation,
-                                gram_fn, batched_fn, solve_sh=solve_sh)
-        _finalize_report(report, pending)
-        report.wall_seconds = time.time() - t_start
-        return qparams, report
+    try:
+        x = embed_tokens(params, cfg, plan, tokens)
+        qparams = jax.tree_util.tree_map(lambda a: a, params)  # shallow copy
+        tapmap = taps_for(cfg)
 
-    init_states = None
-    if cfg.attn_free:
-        from repro.models.rwkv import init_rwkv_state
-        init_states = init_rwkv_state(x.shape[0], cfg)
-    elif cfg.parallel_ssm_heads:
-        from repro.models.ssm import init_ssm_state
-        init_states = init_ssm_state(x.shape[0], cfg)
+        if cfg.family == "vlm":
+            qparams = _quantize_vlm(params, cfg, plan, x, resolve, method,
+                                    vision_embeds, pending, propagation,
+                                    gram_fn, batched_fn, solve_sh=solve_sh,
+                                    ctx=ctx)
+        else:
+            init_states = None
+            if cfg.attn_free:
+                from repro.models.rwkv import init_rwkv_state
+                init_states = init_rwkv_state(x.shape[0], cfg)
+            elif cfg.parallel_ssm_heads:
+                from repro.models.ssm import init_ssm_state
+                init_states = init_ssm_state(x.shape[0], cfg)
 
-    state = init_states
-    if propagation == "legacy":
-        layer_full_j = _legacy_layer_fn(cfg, plan)
-        for l in range(cfg.n_layers):
-            lp = _tree_slice(params["layers"], l)
-            _, taps, _ = layer_full_j(lp, x, state)
-            lp_q = _quantize_layer_leaves(lp, taps, tapmap, resolve, method,
-                                          pending, l, gram_fn, batched_fn,
-                                          solve_sh=solve_sh)
-            # propagate through the *quantized* layer
-            lp_deq = dequantize_tree(lp_q)
-            x, _, state = layer_full_j(lp_deq, x, state)
-            qparams = _store_layer(qparams, l, lp_q)
-    else:
-        for l in range(cfg.n_layers):
-            lp = _tree_slice(params["layers"], l)
-            lp_q, x, state = _quantize_layer_staged(
-                lp, x, state, cfg, plan, tapmap, resolve, method, pending, l,
-                gram_fn, batched_fn, solve_sh=solve_sh)
-            qparams = _store_layer(qparams, l, lp_q)
+            state = init_states
+            if propagation == "legacy":
+                layer_full_j = _legacy_layer_fn(cfg, plan)
+                for l in range(cfg.n_layers):
+                    lp = _tree_slice(params["layers"], l)
+                    _, taps, _ = layer_full_j(lp, x, state)
+                    lp_q = _quantize_layer_leaves(
+                        lp, taps, tapmap, resolve, method, pending, l,
+                        gram_fn, batched_fn, solve_sh=solve_sh, ctx=ctx)
+                    # propagate through the *quantized* layer
+                    lp_deq = dequantize_tree(lp_q)
+                    x, _, state = layer_full_j(lp_deq, x, state)
+                    qparams = _store_layer(qparams, l, lp_q)
+                    ctx.layer_done(l)
+            else:
+                for l in range(cfg.n_layers):
+                    lp = _tree_slice(params["layers"], l)
+                    lp_q, x, state = _quantize_layer_staged(
+                        lp, x, state, cfg, plan, tapmap, resolve, method,
+                        pending, l, gram_fn, batched_fn, solve_sh=solve_sh,
+                        ctx=ctx)
+                    qparams = _store_layer(qparams, l, lp_q)
+                    ctx.layer_done(l)
 
-    if quantize_unembed and "unembed" in params:
-        xn = apply_norm(params["final_norm"], x, cfg)
-        h = gram_fn(xn)
-        qt, eb, ea, secs = _solve_group([params["unembed"]], h,
-                                        [resolve(-1, "unembed")],
-                                        method, solve_sh=solve_sh)[0]
-        qparams["unembed"] = qt
-        pending.append((-1, "unembed", eb, ea, secs))
+            if quantize_unembed and "unembed" in params:
+                names, specs = ["unembed"], [resolve(-1, "unembed")]
+                cached = ctx.lookup(-1, names, specs)
+                if cached is not None:
+                    qt, rec = cached[0]
+                    pending.append((-1, "unembed", rec["err_before"],
+                                    rec["err_after"], 0.0))
+                else:
+                    ctx.fault("gram_accumulate")
+                    xn = ctx.sanitize_tap(
+                        ctx.poison_tap(apply_norm(params["final_norm"], x,
+                                                  cfg)), -1, names)
+                    ctx.fault("leaf_solve")
+                    h = gram_fn(xn)
+                    results = _solve_group([params["unembed"]], h, specs,
+                                           method, solve_sh=solve_sh,
+                                           gctx=ctx.gctx, layer=-1,
+                                           names=names)
+                    qt, eb, ea, secs = ctx.commit(-1, names, specs,
+                                                  results)[0]
+                    pending.append((-1, "unembed", eb, ea, secs))
+                qparams["unembed"] = qt
+        if qj is not None:
+            qj.record_run_done()
+    finally:
+        if own_journal and qj is not None:
+            qj.close()
+
     _finalize_report(report, pending)
     report.wall_seconds = time.time() - t_start
+    report.guard_events = list(gctx.events)
+    report.resumed_leaves = ctx.resumed
+    gmap = gctx.by_leaf()
+    if gmap:
+        for lr in report.layers:
+            lr.guard = gmap.get((lr.layer, lr.name), "")
     return qparams, report
 
 
@@ -677,8 +1093,11 @@ def _layer_with_taps(lp, x, state, cfg, plan):
 
 
 def _quantize_vlm(params, cfg, plan, x, resolve, method, vision_embeds,
-                  pending, propagation, gram_fn, batched_fn, solve_sh=None):
+                  pending, propagation, gram_fn, batched_fn, solve_sh=None,
+                  ctx: Optional[_RunCtx] = None):
     from repro.models.model import _vlm_group_counts
+    if ctx is None:
+        ctx = _RunCtx(method)
     g, spg = _vlm_group_counts(cfg)
     cd = x.dtype
     ve = jnp.einsum("bnv,vd->bnd", vision_embeds.astype(cd),
@@ -693,7 +1112,8 @@ def _quantize_vlm(params, cfg, plan, x, resolve, method, vision_embeds,
             if staged:
                 lp_q, x, _ = _quantize_layer_staged(
                     lp, x, None, cfg, plan, DENSE_TAPS, resolve, method,
-                    pending, lidx, gram_fn, batched_fn, solve_sh=solve_sh)
+                    pending, lidx, gram_fn, batched_fn, solve_sh=solve_sh,
+                    ctx=ctx)
             else:
                 taps: Dict[str, Array] = {}
                 y, _, _, _ = tfm.layer_full(lp, x, cfg, plan, False,
@@ -701,10 +1121,11 @@ def _quantize_vlm(params, cfg, plan, x, resolve, method, vision_embeds,
                 lp_q = _quantize_layer_leaves(lp, taps, DENSE_TAPS, resolve,
                                               method, pending, lidx,
                                               gram_fn, batched_fn,
-                                              solve_sh=solve_sh)
+                                              solve_sh=solve_sh, ctx=ctx)
                 x, _, _, _ = tfm.layer_full(dequantize_tree(lp_q), x, cfg,
                                             plan, False)
             table[f"self_{gi}_{si}"] = lp_q
+            ctx.layer_done(lidx)
         cp = _tree_slice(params["groups"]["cross"], gi)
         vkv = tfm.vision_kv_for_layer(cp, ve)
         lidx = gi * (spg + 1) + spg
@@ -712,7 +1133,7 @@ def _quantize_vlm(params, cfg, plan, x, resolve, method, vision_embeds,
             taps, holder, cb = _staged_ctx(cp, CROSS_TAPS, resolve, method,
                                            pending, lidx, gram_fn,
                                            batched_fn, prefix="cross.",
-                                           solve_sh=solve_sh)
+                                           solve_sh=solve_sh, ctx=ctx)
             x = tfm.cross_layer_full(cp, x, cfg, plan, vkv, taps=taps,
                                      quantize_cb=cb)
             cp_q = holder["lp_q"]
@@ -722,10 +1143,11 @@ def _quantize_vlm(params, cfg, plan, x, resolve, method, vision_embeds,
             cp_q = _quantize_layer_leaves(cp, taps, CROSS_TAPS, resolve,
                                           method, pending, lidx, gram_fn,
                                           batched_fn, prefix="cross.",
-                                          solve_sh=solve_sh)
+                                          solve_sh=solve_sh, ctx=ctx)
             x = tfm.cross_layer_full(dequantize_tree(cp_q), x, cfg, plan,
                                      vkv)
         table[f"cross_{gi}"] = cp_q
+        ctx.layer_done(lidx)
     qparams["__qlayers__"] = table
     return qparams
 

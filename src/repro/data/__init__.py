@@ -1,2 +1,5 @@
-from repro.data.loader import ShardedLoader  # noqa: F401
-from repro.data.synthetic import SyntheticLM, batches  # noqa: F401
+from repro.data.loader import (ShardedLoader, check_calib_coverage,  # noqa: F401,E501
+                               validate_calib_features,
+                               validate_calib_tokens)
+from repro.data.synthetic import (CalibrationDataError, SyntheticLM,  # noqa: F401,E501
+                                  batches)

@@ -10,11 +10,80 @@ from __future__ import annotations
 
 import queue
 import threading
+import warnings
 from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.data.synthetic import SyntheticLM
+from repro.data.synthetic import CalibrationDataError, SyntheticLM
+
+
+# ---------------------------------------------------------------------------
+# up-front calibration validation (DESIGN.md §8.2)
+# ---------------------------------------------------------------------------
+
+def validate_calib_tokens(tokens, vocab_size: Optional[int] = None):
+    """Check a (B, T) calibration token batch up front — non-empty, rank
+    2, integer dtype, ids inside the vocab — raising CalibrationDataError
+    with a clear message instead of a shape blowup deep in the Gram
+    accumulation. Returns `tokens` unchanged (never copies/casts)."""
+    if tokens is None:
+        raise CalibrationDataError("calibration tokens are None")
+    arr = np.asarray(tokens)
+    if arr.size == 0:
+        raise CalibrationDataError(
+            f"calibration token batch is empty (shape {arr.shape})")
+    if arr.ndim != 2:
+        raise CalibrationDataError(
+            f"calibration tokens must be rank 2 (batch, seq), got shape "
+            f"{tuple(arr.shape)}")
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise CalibrationDataError(
+            f"calibration tokens must be integer ids, got dtype "
+            f"{arr.dtype}")
+    lo, hi = int(arr.min()), int(arr.max())
+    if lo < 0 or (vocab_size is not None and hi >= vocab_size):
+        raise CalibrationDataError(
+            f"calibration token ids out of range [{lo}, {hi}] for vocab "
+            f"size {vocab_size}")
+    return tokens
+
+
+def validate_calib_features(x, name: str = "vision_embeds"):
+    """Check a floating calibration feature batch (e.g. VLM vision
+    embeddings): non-empty, floating, all-finite. NaN/Inf *input*
+    calibration is a data bug and raises here; NaN that appears inside
+    the activation stream is the numeric guards' job (core/guards)."""
+    if x is None:
+        raise CalibrationDataError(f"{name} is None")
+    arr = np.asarray(x)
+    if arr.size == 0:
+        raise CalibrationDataError(f"{name} is empty (shape {arr.shape})")
+    if not (np.issubdtype(arr.dtype, np.floating)
+            or arr.dtype.name == "bfloat16"):
+        raise CalibrationDataError(
+            f"{name} must be floating, got dtype {arr.dtype}")
+    finite = np.isfinite(arr.astype(np.float32))
+    if not finite.all():
+        raise CalibrationDataError(
+            f"{name} contains {int((~finite).sum())} non-finite entries")
+    return x
+
+
+def check_calib_coverage(n_tokens: int, leaf_dims: Dict[str, int]) -> bool:
+    """Warn when the calibration token count is below the input dimension
+    of any leaf class — the Gram XᵀX is then guaranteed rank-deficient
+    and the solve leans on the damping/dead-column guards. Returns True
+    when coverage is sufficient."""
+    short = {k: d for k, d in leaf_dims.items() if n_tokens < d}
+    if short:
+        worst = max(short.values())
+        warnings.warn(
+            f"calibration has {n_tokens} tokens but leaf input dims up "
+            f"to {worst} ({', '.join(f'{k}={d}' for k, d in sorted(short.items()))}): "
+            "the Gram is rank-deficient; expect dead-column/damping "
+            "guard events (use a larger calibration batch)", stacklevel=3)
+    return not short
 
 
 class ShardedLoader:

@@ -14,6 +14,13 @@ import numpy as np
 Array = np.ndarray
 
 
+class CalibrationDataError(ValueError):
+    """A calibration batch failed up-front validation (empty, wrong
+    rank/dtype, out-of-range ids, non-finite features) — raised with a
+    clear message instead of a shape/NaN blowup deep inside the Gram
+    accumulation (DESIGN.md §8.2)."""
+
+
 class SyntheticLM:
     def __init__(self, vocab_size: int, seed: int = 0, n_topics: int = 16,
                  order_bias: float = 0.8):
@@ -25,6 +32,10 @@ class SyntheticLM:
         self.offsets = self.rng.randint(1, 17, size=(n_topics,))
 
     def sample(self, batch: int, seq_len: int, step: int = 0) -> Dict[str, Array]:
+        if batch <= 0 or seq_len <= 0:
+            raise CalibrationDataError(
+                f"sample(batch={batch}, seq_len={seq_len}): both must be "
+                "positive")
         rng = np.random.RandomState((hash((step, batch, seq_len)) & 0x7FFFFFFF))
         topics = rng.randint(0, self.n_topics, size=(batch,))
         # two levels of learnable structure: a restricted active vocabulary

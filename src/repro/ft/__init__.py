@@ -1,5 +1,7 @@
 from repro.ft.inject import (FaultInjector, InjectedFault,  # noqa: F401
                              SimulatedKill)
-from repro.ft.journal import Journal, JournalCorrupt, JournalState  # noqa: F401,E501
+from repro.ft.journal import (Journal, JournalCorrupt,  # noqa: F401
+                              JournalState, QuantJournal, QuantState,
+                              ResumeMismatch)
 from repro.ft.watchdog import (Heartbeat, RecoveryPlan, StragglerEvent,  # noqa: F401,E501
                                Watchdog, plan_recovery, run_with_restarts)

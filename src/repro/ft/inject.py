@@ -1,4 +1,5 @@
-"""Deterministic fault injection for the serving runtime.
+"""Deterministic fault injection for the serving runtime and the
+quantization pipeline.
 
 A `FaultInjector` owns a set of named fault points; the runtime (and the
 block allocator's `fail_hook`) call `fire(point)` at each hook site and
@@ -22,6 +23,22 @@ Fault points wired through serve/runtime.py:
                      process death. No cleanup runs; recovery goes
                      through the crash-replay journal (ft/journal.py).
 
+Pipeline fault points wired through core/pipeline.py (DESIGN.md §8; the
+``kill`` site is shared — in the pipeline it fires between layers, after
+the completed layer's leaves are journaled):
+
+* ``gram_accumulate`` — raises `InjectedFault` right before a tap
+                     group's Gram accumulation.
+* ``leaf_solve``   — raises `InjectedFault` before a leaf's solve (one
+                     occurrence per leaf, counted in walk order).
+* ``ckpt_write``   — fires *inside* a leaf spill, after the tmp file is
+                     written+fsynced but before the atomic rename —
+                     the torn-write window the durability ordering must
+                     survive (ckpt.save_packed_ckpt's fault_cb).
+* ``nan_tap``      — does not raise: poisons one entry of the tap with
+                     NaN, exercising the numeric sentinels
+                     (core/guards.py) instead of the crash path.
+
 Usage::
 
     inj = FaultInjector({"page_alloc": [3, 7], "kill": [5]})
@@ -37,9 +54,12 @@ from typing import Dict, Iterable, List, Optional
 import numpy as np
 
 
-# fault points with hook sites in serve/runtime.py; parse() rejects
-# anything else so a typo'd --inject fails loudly instead of never firing
-FAULT_POINTS = frozenset({"page_alloc", "decode_step", "callback", "kill"})
+# fault points with hook sites in serve/runtime.py or core/pipeline.py;
+# parse() rejects anything else so a typo'd --inject fails loudly
+# instead of never firing
+FAULT_POINTS = frozenset({"page_alloc", "decode_step", "callback", "kill",
+                          "gram_accumulate", "leaf_solve", "ckpt_write",
+                          "nan_tap"})
 
 
 class InjectedFault(RuntimeError):

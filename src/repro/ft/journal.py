@@ -1,37 +1,45 @@
-"""Crash-replay request journal for the serving runtime.
+"""Crash-replay journals: the serving request log and the quantization
+run log share one append-only JSONL record discipline.
 
-An append-only JSONL log of request lifecycle events. After a serving
-process dies (crash, OOM-kill, injected fault), `Journal.replay` rebuilds
-exactly which requests were in flight, and the runtime re-submits them
-with their original rid, seed and sampling settings — bit-deterministic
-decode (paged == dense, packed == materialized, per-request seeded
-sampling) then reproduces each stream token-identically, so a crash loses
-no requests and duplicates none (DESIGN.md §7).
+`_JsonlJournal` is the shared mechanics: one self-checksummed JSON object
+per line (`crc` = crc32 of the record's canonical JSON without the crc
+field), `flush` always, `fsync` gating durable records, torn-tail
+truncation on reopen, and a monotonic `seq` that survives recovery
+generations. A crash mid-append leaves a partial last line, which replay
+drops (JSON parse or crc failure on the final record) and which reopening
+for append truncates — otherwise the first post-recovery append would
+merge with the torn tail into corrupt *non*-tail data and poison every
+later replay. A torn or checksum-failing record *before* the tail is real
+corruption and raises `JournalCorrupt`.
 
-Record kinds (one JSON object per line, `crc` = crc32 of the record's
-canonical JSON without the crc field):
+`Journal` (requests.jsonl) is the serving request log — see DESIGN.md §7:
+submit/first_token/retire are fsync-gated, preempt/resume/replayed are
+observability-only, and `Journal.replay` classifies every submitted rid
+as completed or in-flight so recovery re-submits exactly the unfinished
+requests.
 
-* ``submit``      — rid + everything needed to re-create the request:
-                    prompt tokens, max_new, sampling settings, stop
-                    tokens, priority, seed. fsync-gated: a request is
-                    only acknowledged once its submit record is durable.
-* ``first_token`` — rid + the TTFT token (observability + a replay-
-                    identity cross-check). fsync-gated.
-* ``retire``      — rid, finish_reason and the full emitted token list;
-                    a retired request is never replayed and its output
-                    survives the crash. fsync-gated.
-* ``preempt`` / ``resume`` / ``replayed`` — observability only (flushed,
-                    not fsynced): preemption counts and recovery audits.
+`QuantJournal` (quant.jsonl + a `leaves/` spill directory) is the
+quantization run log — DESIGN.md §8. Record kinds:
 
-Torn tails are expected — a crash mid-append leaves a partial last line,
-which replay drops (detected by JSON parse or crc failure on the final
-record), and which reopening for append truncates so the next record
-starts on a fresh line (otherwise the first post-recovery append would
-merge with the torn tail into a corrupt *non*-tail record and poison
-every later replay). A torn or corrupt record *before* the tail is real
-corruption and raises `JournalCorrupt`. Replay deduplicates by rid
-(submit is idempotent, last retire wins), so recovery after a crash
-*during* recovery converges too.
+* ``run_start``   — the run digest (arch/policy/method/propagation/calib
+                    tokens/mesh) plus metadata; fsync-gated. Replay keys
+                    leaves to the *last* run_start, so starting a fresh
+                    (non-resume) run in the same directory invalidates
+                    older spills instead of mixing runs.
+* ``leaf_solved`` — (layer, name, resolved-spec digest) plus the spill
+                    filename, its payload crc32 and the host err_before/
+                    err_after; fsync-gated, and written strictly *after*
+                    the spill file is durably renamed into place
+                    (solve → spill → journal ordering: a journaled leaf
+                    always has a valid spill).
+* ``layer_done`` / ``resume`` — observability only (flushed, not
+                    fsynced).
+* ``run_done``    — the walk completed; fsync-gated.
+
+Each spilled QTensor is an atomic `ckpt.save_packed_ckpt` single file
+(tmp + fsync + rename, format/version header + crc32 over the pickled
+payload), so `QuantJournal.check_integrity` can assert — after any
+injected fault — that every journaled leaf is present and checksum-valid.
 """
 from __future__ import annotations
 
@@ -39,25 +47,62 @@ import dataclasses
 import json
 import os
 import zlib
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 JOURNAL_NAME = "requests.jsonl"
+QUANT_JOURNAL_NAME = "quant.jsonl"
+SPILL_DIR = "leaves"
 
 
 class JournalCorrupt(RuntimeError):
     """A non-tail journal record failed to parse or checksum."""
 
 
+class ResumeMismatch(ValueError):
+    """--resume against a journal written by a different run (arch,
+    policy, method, calibration data or mesh changed) — resuming would
+    silently mix incompatible codes, so refuse instead."""
+
+
 def _crc(payload: Dict[str, Any]) -> int:
     return zlib.crc32(json.dumps(payload, sort_keys=True).encode())
 
 
-class Journal:
-    """Append-only, fsync-gated request log under `directory`."""
+def _read_records(path: str) -> List[Dict[str, Any]]:
+    """Parse a JSONL journal, tolerating a torn final record (crash
+    mid-append); non-tail corruption raises JournalCorrupt."""
+    records: List[Dict[str, Any]] = []
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                rec = json.loads(line)
+                crc = rec.pop("crc")
+                if crc != _crc(rec):
+                    raise ValueError("crc mismatch")
+            except (ValueError, KeyError, TypeError) as e:
+                if i == len(lines) - 1:
+                    break        # torn tail: the crash interrupted it
+                raise JournalCorrupt(
+                    f"{path}: record {i} is corrupt ({e}) but is not "
+                    "the tail — the journal was damaged, not torn"
+                ) from e
+            records.append(rec)
+    return records
+
+
+class _JsonlJournal:
+    """Append-only, fsync-gated JSONL log under `directory`."""
+
+    filename = "journal.jsonl"
 
     def __init__(self, directory: str, fsync: bool = True):
         os.makedirs(directory, exist_ok=True)
-        self.path = os.path.join(directory, JOURNAL_NAME)
+        self.dir = directory
+        self.path = os.path.join(directory, type(self).filename)
         self._fsync = fsync
         self._seq = self._truncate_torn_tail()
         self._f = open(self.path, "a", encoding="utf-8")
@@ -86,6 +131,16 @@ class Journal:
         self._f.flush()
         if durable and self._fsync:
             os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class Journal(_JsonlJournal):
+    """The serving request log (see module docstring / DESIGN.md §7)."""
+
+    filename = JOURNAL_NAME
 
     # -- lifecycle records ---------------------------------------------------
 
@@ -117,37 +172,13 @@ class Journal:
     def record_replayed(self, rid: int) -> None:
         self.append("replayed", durable=False, rid=rid)
 
-    def close(self) -> None:
-        if not self._f.closed:
-            self._f.close()
-
     # -- recovery ------------------------------------------------------------
 
     @staticmethod
     def replay(directory: str) -> "JournalState":
         """Parse the journal, tolerating a torn final record (crash mid-
         append); classify every submitted rid as completed or in-flight."""
-        path = os.path.join(directory, JOURNAL_NAME)
-        records: List[Dict[str, Any]] = []
-        if os.path.exists(path):
-            with open(path, encoding="utf-8") as f:
-                lines = f.read().splitlines()
-            for i, line in enumerate(lines):
-                if not line.strip():
-                    continue
-                try:
-                    rec = json.loads(line)
-                    crc = rec.pop("crc")
-                    if crc != _crc(rec):
-                        raise ValueError("crc mismatch")
-                except (ValueError, KeyError, TypeError) as e:
-                    if i == len(lines) - 1:
-                        break        # torn tail: the crash interrupted it
-                    raise JournalCorrupt(
-                        f"{path}: record {i} is corrupt ({e}) but is not "
-                        "the tail — the journal was damaged, not torn"
-                    ) from e
-                records.append(rec)
+        records = _read_records(os.path.join(directory, JOURNAL_NAME))
         submits: Dict[int, Dict[str, Any]] = {}
         retires: Dict[int, Dict[str, Any]] = {}
         first_tokens: Dict[int, int] = {}
@@ -178,3 +209,111 @@ class JournalState:
     def completed_tokens(self, rid: int) -> Optional[List[int]]:
         rec = self.completed.get(rid)
         return None if rec is None else list(rec["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# quantization run journal
+# ---------------------------------------------------------------------------
+
+class QuantJournal(_JsonlJournal):
+    """The quantization run log + durable per-leaf QTensor spills (see
+    module docstring / DESIGN.md §8). The ckpt imports are lazy:
+    ckpt/quantized imports core.pipeline, which imports repro.ft — a
+    module-level import here would close that cycle."""
+
+    filename = QUANT_JOURNAL_NAME
+
+    def __init__(self, directory: str, fsync: bool = True):
+        super().__init__(directory, fsync)
+        self.spill_dir = os.path.join(directory, SPILL_DIR)
+        os.makedirs(self.spill_dir, exist_ok=True)
+
+    # -- records -------------------------------------------------------------
+
+    def record_run_start(self, run_digest: int, **meta) -> None:
+        self.append("run_start", run=int(run_digest), **meta)
+
+    def spill_leaf(self, layer: int, name: str, qt_host,
+                   fault_cb=None) -> Tuple[str, int]:
+        """Durably write one solved QTensor (host arrays) as an atomic
+        packed-ckpt file; returns (filename, payload crc32). Runs
+        *before* record_leaf — the solve → spill → journal ordering."""
+        from repro.ckpt.quantized import save_packed_ckpt
+        fname = f"L{layer}_{name.replace('/', '_')}.qt"
+        crc = save_packed_ckpt(os.path.join(self.spill_dir, fname), qt_host,
+                               fault_cb=fault_cb, layer=int(layer),
+                               name=str(name))
+        return fname, crc
+
+    def record_leaf(self, layer: int, name: str, spec_digest: int,
+                    fname: str, crc: int, err_before: float,
+                    err_after: float) -> None:
+        self.append("leaf_solved", layer=int(layer), name=str(name),
+                    spec=int(spec_digest), file=fname, crc32=int(crc),
+                    err_before=float(err_before),
+                    err_after=float(err_after))
+
+    def record_layer_done(self, layer: int) -> None:
+        self.append("layer_done", durable=False, layer=int(layer))
+
+    def record_resume(self, n_leaves: int) -> None:
+        self.append("resume", durable=False, leaves=int(n_leaves))
+
+    def record_run_done(self) -> None:
+        self.append("run_done")
+
+    # -- recovery ------------------------------------------------------------
+
+    @staticmethod
+    def replay(directory: str) -> "QuantState":
+        """Rebuild the run state: the last run_start (earlier runs'
+        leaves are discarded — a fresh run in the same directory starts
+        clean), journaled leaves keyed (layer, name) last-wins, and
+        whether the run completed."""
+        records = _read_records(os.path.join(directory, QUANT_JOURNAL_NAME))
+        run: Optional[Dict[str, Any]] = None
+        leaves: Dict[Tuple[int, str], Dict[str, Any]] = {}
+        done = False
+        for rec in records:
+            if rec["ev"] == "run_start":
+                run, leaves, done = rec, {}, False
+            elif rec["ev"] == "leaf_solved":
+                leaves[(rec["layer"], rec["name"])] = rec
+            elif rec["ev"] == "run_done":
+                done = True
+        return QuantState(run=run, leaves=leaves, done=done, records=records)
+
+    @staticmethod
+    def load_leaf(directory: str, rec: Dict[str, Any]):
+        """Load one journaled leaf's spilled QTensor (host arrays),
+        validating the spill's header checksum *and* that it matches the
+        crc the journal recorded for this leaf."""
+        from repro.ckpt.quantized import load_packed_ckpt
+        path = os.path.join(directory, SPILL_DIR, rec["file"])
+        return load_packed_ckpt(path, expect_crc=rec["crc32"])["tree"]
+
+    @staticmethod
+    def check_integrity(directory: str) -> int:
+        """Assert journal↔checkpoint integrity: every journaled leaf's
+        spill file exists and is checksum-valid (header crc over the
+        payload, cross-checked against the journaled crc). Returns the
+        number of verified leaves; raises PackedCkptError on any
+        missing/corrupt spill."""
+        from repro.ckpt.quantized import PackedCkptError
+        st = QuantJournal.replay(directory)
+        for (layer, name), rec in st.leaves.items():
+            try:
+                QuantJournal.load_leaf(directory, rec)
+            except OSError as e:
+                raise PackedCkptError(
+                    f"journaled leaf layer {layer} {name!r}: spill "
+                    f"{rec['file']!r} unreadable ({e})") from e
+        return len(st.leaves)
+
+
+@dataclasses.dataclass
+class QuantState:
+    run: Optional[Dict[str, Any]]            # last run_start record
+    leaves: Dict[Tuple[int, str], Dict[str, Any]]
+    done: bool
+    records: List[Dict[str, Any]]

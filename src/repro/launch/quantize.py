@@ -6,6 +6,14 @@
 At scale the per-channel solve runs with output columns sharded over the
 full mesh (COMQ's solve needs zero communication — DESIGN.md §4); here the
 same code path runs on local devices against the smoke configs.
+
+Crash-safe runs (DESIGN.md §8): `--journal DIR` journals every solved
+leaf durably (solve → spill → journal) and `--restarts N` supervises the
+run with ft.run_with_restarts — on a crash (or an injected `--inject
+kill:…` fault) the surviving journal resumes the walk, re-applying
+journaled leaves bit-identically instead of re-solving them. The
+journaled-leaf count is the supervisor's progress signal and a
+ft.Heartbeat in the journal directory tracks liveness.
 """
 from __future__ import annotations
 
@@ -16,12 +24,15 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.ckpt import (CheckpointManager, pack_tree, policy_extra,
-                        tree_bytes)
+                        save_packed_ckpt, tree_bytes)
 from repro.configs import get_config, get_smoke_config
 from repro.core import (QuantSpec, materialize, parse_policy,
                         policy_from_budget, quantize_model)
+from repro.ft import (FaultInjector, Heartbeat, QuantJournal,
+                      run_with_restarts)
 from repro.models import BuildPlan, init_params, lm_loss
 
 
@@ -65,7 +76,32 @@ def main():
                          "backprop-free knapsack on layerwise H-space "
                          "errors (overrides --policy rules)")
     ap.add_argument("--out-dir", default="/tmp/repro_quant")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="journal directory: durably record every solved "
+                         "leaf so a crashed run can --resume bit-"
+                         "identically (ft.QuantJournal, DESIGN.md §8)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --journal (also implied when the "
+                         "journal already has leaves under --restarts)")
+    ap.add_argument("--restarts", type=int, default=0, metavar="N",
+                    help="supervise the run with ft.run_with_restarts: up "
+                         "to N restarts without progress (journaled-leaf "
+                         "count), resuming from --journal after each")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. 'kill:2' or "
+                         "'leaf_solve:3,ckpt_write:1' (ft.FaultInjector; "
+                         "points: gram_accumulate, leaf_solve, ckpt_write, "
+                         "kill, nan_tap)")
+    ap.add_argument("--save-packed", default=None, metavar="PATH",
+                    help="also save the packed tree as one atomic "
+                         "checksummed file (byte-deterministic — the CI "
+                         "fault-smoke compares these across runs)")
+    ap.add_argument("--no-guards", action="store_true",
+                    help="disable the numeric guards (core/guards); "
+                         "healthy runs are bit-identical either way")
     args = ap.parse_args()
+    if args.restarts and not args.journal:
+        raise SystemExit("--restarts needs --journal (resume source)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     plan = BuildPlan(remat=False)
@@ -120,18 +156,58 @@ def main():
     elif args.shard_data:
         from repro.dist import data_mesh
         mesh = data_mesh()
+    injector = FaultInjector.parse(args.inject) if args.inject else None
+    hb = Heartbeat(args.journal, host_id=0) if args.journal else None
+    progress_cb = (lambda layer: hb.beat(layer)) if hb is not None else None
+
+    def run_once(resume: bool):
+        return quantize_model(params, cfg, plan, tokens, spec,
+                              method=args.method, vision_embeds=ve,
+                              propagation=args.propagation, mesh=mesh,
+                              guards=not args.no_guards,
+                              journal=args.journal, resume=resume,
+                              injector=injector, progress_cb=progress_cb)
+
     t0 = time.time()
-    qparams, report = quantize_model(params, cfg, plan, tokens, spec,
-                                     method=args.method, vision_embeds=ve,
-                                     propagation=args.propagation, mesh=mesh)
+    if args.journal:
+        box = {}
+
+        def attempt(_):
+            # resume whenever the journal already holds leaves of this (or
+            # an explicitly-resumed) run; assert journal↔spill integrity
+            # before trusting any of them
+            resume = args.resume or bool(
+                QuantJournal.replay(args.journal).leaves)
+            if resume:
+                QuantJournal.check_integrity(args.journal)
+            box["out"] = run_once(resume)
+
+        def progress():
+            return len(QuantJournal.replay(args.journal).leaves)
+
+        run_with_restarts(attempt, progress, max_restarts=args.restarts,
+                          exceptions=(RuntimeError,), backoff_s=0.0)
+        qparams, report = box["out"]
+    else:
+        qparams, report = run_once(args.resume)
     dt = time.time() - t0
 
     # quantized checkpoint (each QTensor packed to its own bit width) +
-    # the policy metadata that produced it (ckpt.restore_policy reads it)
+    # the policy metadata that produced it (ckpt.restore_policy reads it);
+    # CheckpointManager writes are atomic+fsynced (tmp → rename)
     packed = pack_tree(qparams["__qlayers__"])
     mgr = CheckpointManager(args.out_dir, keep=2)
     mgr.save(0, packed, extra=policy_extra(policy=spec, arch=cfg.name,
                                            bits=args.bits))
+    if args.save_packed:
+        # single-file form with deterministic bytes (npz embeds zip
+        # timestamps; pickled host arrays do not) — what the CI fault
+        # smoke byte-compares between faulted-resumed and clean runs
+        host = jax.tree_util.tree_map(
+            lambda a: np.asarray(jax.device_get(a))
+            if isinstance(a, jax.Array) else a, packed)
+        save_packed_ckpt(args.save_packed, host, arch=cfg.name,
+                         bits=args.bits)
 
     # quality: eval loss fp vs quantized on a held-out batch
     ev = jax.random.randint(jax.random.PRNGKey(7),
@@ -163,6 +239,10 @@ def main():
         "ckpt_bytes": tree_bytes(packed),
         "dense_bytes": dense_bytes,
         "compression": round(dense_bytes / max(tree_bytes(packed), 1), 1),
+        "guard_events": len(report.guard_events),
+        "resumed_leaves": report.resumed_leaves,
+        "faults_fired": (len(injector.fired) if injector is not None
+                         else 0),
     }))
 
 

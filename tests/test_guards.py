@@ -1,0 +1,366 @@
+"""Numerical-robustness guards (DESIGN.md §8.2): sentinels, dead columns,
+escalating damping, the structured fallback chain, degenerate-calibration
+completion, and the NaN-tap fault injected through the real pipeline —
+each must complete with finite scales/errors and *recorded* guard events
+(degradation is never silent), while healthy runs stay bit-identical to
+the unguarded path.
+"""
+import types
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (GuardContext, QuantSpec, damped_inverse,
+                        gptq_quantize, guarded_solve, quantize_model)
+from repro.core import pipeline as pl
+from repro.core.comq_hessian import gram
+from repro.core.guards import DAMP_MULTS, gram_health, sanitize_array
+from repro.data import (CalibrationDataError, check_calib_coverage,
+                        validate_calib_features, validate_calib_tokens)
+from repro.ft import FaultInjector
+from repro.models import BuildPlan, init_params
+
+PLAN = BuildPlan(remat=False)
+KEY = jax.random.PRNGKey(0)
+SPEC = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
+                 order="greedy")
+
+M, N = 16, 8   # input dim, output columns for unit-level solves
+
+
+def _xw(key=KEY, n_samples=256):
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (n_samples, M), jnp.float32)
+    w = jax.random.normal(kw, (M, N), jnp.float32)
+    return x, w
+
+
+def _finite(r):
+    return (bool(jnp.all(jnp.isfinite(r.delta)))
+            and bool(jnp.all(jnp.isfinite(r.errors)))
+            and bool(jnp.all(jnp.isfinite(r.q))))
+
+
+def _kinds(gctx):
+    return {e.kind for e in gctx.events}
+
+
+def _assert_qlayers_finite(qparams):
+    for leaf in jax.tree_util.tree_leaves(qparams["__qlayers__"]):
+        arr = np.asarray(jax.device_get(leaf))
+        if np.issubdtype(arr.dtype, np.floating):
+            assert np.isfinite(arr).all()
+
+
+# ---------------------------------------------------------------------------
+# sentinels + dead columns (unit level)
+# ---------------------------------------------------------------------------
+
+def test_sanitize_array_noop_when_clean():
+    x, _ = _xw()
+    out, n = sanitize_array(x)
+    assert n == 0 and out is x      # clean inputs pass through untouched
+
+
+def test_gram_health_counts():
+    x, w = _xw()
+    h = gram(x.at[:, 3].set(0.0).at[:, 7].set(0.0))
+    h = h.at[0, 1].set(jnp.nan)
+    nf, dead, wbad = gram_health(h, [w.at[2, 2].set(jnp.inf)])
+    assert nf == 1 and dead == 2 and wbad == [1]
+
+
+@pytest.mark.parametrize("method", ["comq", "comq_blocked", "rtn"])
+def test_dead_columns_finite_and_recorded(method):
+    """All-zero activation channels: the Gram diagonal dies, every solver
+    falls back to plain rounding per dead column, and the guard records
+    (without escalating) how many."""
+    x, w = _xw()
+    h = gram(x.at[:, 4:9].set(0.0))
+    gctx = GuardContext()
+    r = guarded_solve(h, w, SPEC, method, gctx=gctx)
+    assert _finite(r)
+    deads = [e for e in gctx.events if e.kind == "dead_columns"]
+    assert deads and deads[0].detail["count"] == 5
+
+
+def test_nonfinite_gram_and_weight_sanitized():
+    x, w = _xw()
+    h = gram(x).at[0, 0].set(jnp.nan)
+    w = w.at[1, 1].set(jnp.inf)
+    gctx = GuardContext()
+    with pytest.warns(UserWarning, match="nonfinite_"):
+        r = guarded_solve(h, w, SPEC, "comq_blocked", gctx=gctx)
+    assert _finite(r)
+    assert {"nonfinite_gram", "nonfinite_weight"} <= _kinds(gctx)
+
+
+def test_guarded_healthy_bit_identical():
+    """The whole point of the host-checked design: a healthy guarded
+    solve is the *same* solve, bit for bit."""
+    x, w = _xw()
+    h = gram(x)
+    gctx = GuardContext()
+    for method in ("comq", "comq_blocked", "rtn"):
+        r0 = pl.solve(h, w, SPEC, method)
+        r1 = guarded_solve(h, w, SPEC, method, gctx=gctx)
+        assert np.array_equal(np.asarray(r0.q), np.asarray(r1.q))
+        assert np.array_equal(np.asarray(r0.delta), np.asarray(r1.delta))
+    assert not [e for e in gctx.events if e.kind != "dead_columns"]
+
+
+# ---------------------------------------------------------------------------
+# damping escalation + fallback chain (forced via solve_fn)
+# ---------------------------------------------------------------------------
+
+_BAD = types.SimpleNamespace(q=jnp.zeros((M, N), jnp.int32),
+                             delta=jnp.full((N,), jnp.nan),
+                             errors=jnp.array([jnp.nan]))
+
+
+def test_damping_escalation_recorded():
+    """A solve that only survives under damping must succeed at the first
+    escalation step and record it."""
+    x, w = _xw()
+    h0 = gram(x)
+
+    def flaky(h, w2d, spec, method, block=256, schedule=None):
+        if method != "rtn" and bool(jnp.allclose(h, h0)):
+            return _BAD                      # fails undamped
+        return pl.solve(h, w2d, spec, method, block=block,
+                        schedule=schedule)
+
+    gctx = GuardContext()
+    with pytest.warns(UserWarning, match="damping_escalated"):
+        r = guarded_solve(h0, w, SPEC, "comq_blocked", gctx=gctx,
+                          solve_fn=flaky, presanitized=True)
+    assert _finite(r)
+    ev = [e for e in gctx.events if e.kind == "damping_escalated"]
+    assert ev and ev[0].detail["mult"] == DAMP_MULTS[0]
+    assert not [e for e in gctx.events if e.kind == "fallback"]
+
+
+def test_fallback_chain_lands_on_rtn():
+    """Every comq stage diverges → the chain must fall through to the
+    H-aware RTN stage and say so loudly."""
+    x, w = _xw()
+
+    def broken(h, w2d, spec, method, block=256, schedule=None):
+        if method == "rtn":
+            return pl.solve(h, w2d, spec, "rtn")
+        return _BAD
+
+    gctx = GuardContext()
+    with pytest.warns(UserWarning, match="fallback"):
+        r = guarded_solve(gram(x), w, SPEC, "comq_blocked", gctx=gctx,
+                          solve_fn=broken, presanitized=True)
+    assert _finite(r)
+    assert any(e.kind == "fallback" and e.detail["solver"] == "rtn"
+               for e in gctx.events)
+
+
+def test_fallback_last_resort_data_free_rtn():
+    """Even a poisoned solve_fn for *every* method ends at data-free RTN,
+    which is finite by construction."""
+    x, w = _xw()
+
+    def hopeless(h, w2d, spec, method, block=256, schedule=None):
+        return _BAD
+
+    gctx = GuardContext()
+    with pytest.warns(UserWarning, match="fallback"):
+        r = guarded_solve(gram(x), w, SPEC, "comq_blocked", gctx=gctx,
+                          solve_fn=hopeless, presanitized=True)
+    assert _finite(r)
+    assert any(e.kind == "fallback" and e.detail["solver"] == "rtn_no_h"
+               for e in gctx.events)
+
+
+def test_expert_group_sanitizes_nonfinite_gram():
+    """The vmapped stacked-expert path cannot host-sync per expert; its
+    group-batched guard must scrub a NaN-poisoned per-expert Gram and
+    still produce finite expert QTensors."""
+    E, d, f = 2, 8, 6
+    kx, kw = jax.random.split(KEY)
+    xs = jax.random.normal(kx, (E, 64, d), jnp.float32)
+    hs = jax.vmap(gram)(xs).at[0, 0, 0].set(jnp.nan)
+    ws = [jax.random.normal(kw, (E, d, f), jnp.float32)]
+    gctx = GuardContext()
+    with pytest.warns(UserWarning, match="nonfinite_gram"):
+        out = pl._solve_group_experts(ws, hs, [SPEC], "comq_blocked",
+                                      gctx=gctx, layer=0, names=["w_up"])
+    qt, eb, ea, _ = out[0]
+    assert np.isfinite(eb) and np.isfinite(ea)
+    for v in qt.values():
+        arr = np.asarray(jax.device_get(v))
+        if np.issubdtype(arr.dtype, np.floating):
+            assert np.isfinite(arr).all()
+    assert "nonfinite_gram" in _kinds(gctx)
+
+
+# ---------------------------------------------------------------------------
+# GPTQ baseline shares the damping guard
+# ---------------------------------------------------------------------------
+
+def test_gptq_singular_hessian_stays_finite():
+    x, w = _xw()
+    x = x.at[:, 1:].set(x[:, :1])           # rank-1 activations
+    r = gptq_quantize(gram(x), w, SPEC)
+    assert _finite(r)
+
+
+def test_gptq_zero_hessian_stays_finite():
+    _, w = _xw()
+    r = gptq_quantize(jnp.zeros((M, M)), w, SPEC)
+    assert _finite(r)
+
+
+def test_damped_inverse_escalates_then_scrubs():
+    """An Inf-contaminated H never inverts finitely: the while_loop must
+    walk every retry (×10 damping each) and the post-loop scrub must
+    still hand back finite values for the caller's fallback chain."""
+    h = jnp.zeros((M, M)).at[0, 0].set(jnp.inf)
+    hinv, mult = damped_inverse(h, start=0.01, max_tries=4)
+    assert bool(jnp.all(jnp.isfinite(hinv)))
+    assert float(mult) == pytest.approx(0.01 * 10 ** 4)
+
+
+def test_damped_inverse_healthy_no_escalation():
+    x, _ = _xw()
+    hinv, mult = damped_inverse(gram(x), start=0.01)
+    assert bool(jnp.all(jnp.isfinite(hinv)))
+    assert float(mult) == pytest.approx(0.01)
+
+
+# ---------------------------------------------------------------------------
+# calibration-data validation (satellite: data plumbing)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    None,
+    np.zeros((0, 8), np.int32),                    # empty
+    np.zeros((2, 4, 4), np.int32),                 # rank 3
+    np.zeros((2, 8), np.float32),                  # not integer ids
+    np.full((2, 8), -1, np.int32),                 # negative ids
+    np.full((2, 8), 999, np.int32),                # >= vocab
+])
+def test_validate_calib_tokens_rejects(bad):
+    with pytest.raises(CalibrationDataError):
+        validate_calib_tokens(bad, vocab_size=100)
+
+
+def test_validate_calib_tokens_accepts():
+    tok = np.zeros((2, 8), np.int32)
+    assert validate_calib_tokens(tok, vocab_size=100) is tok
+
+
+@pytest.mark.parametrize("bad", [
+    None,
+    np.zeros((0, 4), np.float32),
+    np.zeros((2, 4), np.int32),
+    np.array([[1.0, np.nan]], np.float32),
+])
+def test_validate_calib_features_rejects(bad):
+    with pytest.raises(CalibrationDataError):
+        validate_calib_features(bad)
+
+
+def test_coverage_warning():
+    with pytest.warns(UserWarning, match="rank-deficient"):
+        assert not check_calib_coverage(8, {"d_model": 56})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert check_calib_coverage(1000, {"d_model": 56})
+
+
+# ---------------------------------------------------------------------------
+# degenerate calibration through the real pipeline
+# ---------------------------------------------------------------------------
+
+def test_nan_tap_injection_fused_path():
+    """Poison the first tap (the fused wq|wk|wv shared tap) with an
+    injected NaN: the sentinel scrubs it, records nonfinite_tap for every
+    leaf of the group, annotates the per-leaf report, and the run stays
+    finite end to end."""
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (4, 64), 0, cfg.vocab_size)
+    inj = FaultInjector({"nan_tap": [1]})
+    with pytest.warns(UserWarning, match="nonfinite_tap"):
+        qp, rep = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                                 method="comq_blocked", injector=inj)
+    taps = [e for e in rep.guard_events if e.kind == "nonfinite_tap"]
+    assert {e.name for e in taps} == {"attn.wq", "attn.wk", "attn.wv"}
+    assert all(e.layer == 0 for e in taps)
+    annotated = {lr.name for lr in rep.layers
+                 if lr.layer == 0 and "nonfinite_tap" in lr.guard}
+    assert annotated == {"attn.wq", "attn.wk", "attn.wv"}
+    _assert_qlayers_finite(qp)
+    assert all(np.isfinite(lr.err_after) for lr in rep.layers)
+
+
+def test_nan_tap_injection_moe_all_groups():
+    """Poison every tap group of the first MoE layer (attention, shared
+    tap, and the stacked-expert taps): each scrub is recorded and the
+    whole run stays finite."""
+    cfg = get_smoke_config("granite-moe-3b-a800m")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (4, 64), 0, cfg.vocab_size)
+    inj = FaultInjector({"nan_tap": [1, 2, 3, 4]})
+    with pytest.warns(UserWarning, match="nonfinite_tap"):
+        qp, rep = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                                 method="comq_blocked", injector=inj)
+    taps = [e for e in rep.guard_events if e.kind == "nonfinite_tap"]
+    assert len({e.name for e in taps}) >= 4
+    _assert_qlayers_finite(qp)
+    assert all(np.isfinite(lr.err_after) for lr in rep.layers)
+
+
+def test_constant_activation_calibration_completes():
+    """A single repeated token id gives (near) rank-1 activations per
+    tap — the run must still complete with finite scales/errors."""
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jnp.full((4, 64), 7, jnp.int32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        qp, rep = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                                 method="comq_blocked")
+    _assert_qlayers_finite(qp)
+    assert all(np.isfinite(lr.err_after) for lr in rep.layers)
+
+
+def test_calibration_smaller_than_input_dim_completes():
+    """Fewer calibration tokens than the widest leaf input dim: coverage
+    warns up front, the rank-deficient Gram leans on the dead-column /
+    damping guards, and the run completes finite."""
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (1, 32), 0, cfg.vocab_size)
+    with pytest.warns(UserWarning, match="rank-deficient"):
+        qp, rep = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                                 method="comq_blocked")
+    _assert_qlayers_finite(qp)
+    assert all(np.isfinite(lr.err_after) for lr in rep.layers)
+
+
+def test_guards_off_healthy_run_bit_identical():
+    """guards=False vs guards=True on a healthy run: same bits."""
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (4, 64), 0, cfg.vocab_size)
+    q0, rep0 = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                              method="comq_blocked", guards=False)
+    q1, rep1 = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                              method="comq_blocked", guards=True)
+    assert rep1.guard_events == []
+    la = jax.tree_util.tree_leaves(q0["__qlayers__"])
+    lb = jax.tree_util.tree_leaves(q1["__qlayers__"])
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert np.array_equal(np.asarray(jax.device_get(a)),
+                              np.asarray(jax.device_get(b)))

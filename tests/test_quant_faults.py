@@ -1,0 +1,238 @@
+"""Crash-safe resumable quantization (DESIGN.md §8.1): journaled runs,
+kill-injected resume bit-identity (the test oracle: a resumed run must be
+bit-identical to an uninterrupted one, down to the packed-checkpoint
+bytes), journal↔spill integrity, and supervised self-recovery through
+ft.run_with_restarts — mirroring launch/quantize.py --journal/--restarts.
+"""
+import glob
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import PackedCkptError, pack_tree, save_packed_ckpt
+from repro.configs import get_smoke_config
+from repro.core import QuantSpec, parse_policy, quantize_model
+from repro.ft import (FaultInjector, InjectedFault, QuantJournal,
+                      ResumeMismatch, SimulatedKill, run_with_restarts)
+from repro.models import BuildPlan, init_params
+
+PLAN = BuildPlan(remat=False)
+KEY = jax.random.PRNGKey(0)
+SPEC = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=1,
+                 order="greedy")
+
+
+def _setup(arch="qwen2-7b"):
+    cfg = get_smoke_config(arch)
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (4, 64), 0, cfg.vocab_size)
+    return cfg, params, tokens
+
+
+def _assert_trees_identical(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        xa = np.asarray(jax.device_get(x))
+        ya = np.asarray(jax.device_get(y))
+        assert xa.dtype == ya.dtype
+        assert np.array_equal(xa, ya)
+
+
+def _packed_bytes(qparams, path):
+    host = jax.tree_util.tree_map(
+        lambda a: np.asarray(jax.device_get(a))
+        if isinstance(a, jax.Array) else a, pack_tree(qparams["__qlayers__"]))
+    save_packed_ckpt(path, host)
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def _report_rows(report):
+    # seconds is wall time (0.0 for re-applied leaves) — exclude it
+    return [(lr.layer, lr.name, lr.err_before, lr.err_after)
+            for lr in report.layers]
+
+
+def test_kill_resume_bit_identical_dense(tmp_path):
+    """The core oracle: kill mid-run, resume from the journal, and get
+    codes/scales, per-leaf reported errors, AND packed-checkpoint bytes
+    identical to an uninterrupted run."""
+    cfg, params, tokens = _setup()
+    ref_q, ref_rep = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                                    method="comq_blocked")
+    jd = str(tmp_path / "journal")
+    inj = FaultInjector({"kill": [2]})
+    with pytest.raises(SimulatedKill):
+        quantize_model(params, cfg, PLAN, tokens, SPEC,
+                       method="comq_blocked", journal=jd, injector=inj)
+    st = QuantJournal.replay(jd)
+    assert st.leaves and not st.done
+    assert QuantJournal.check_integrity(jd) == len(st.leaves)
+
+    qp, rep = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                             method="comq_blocked", journal=jd, resume=True,
+                             injector=inj)
+    assert rep.resumed_leaves == len(st.leaves)
+    assert QuantJournal.replay(jd).done
+    _assert_trees_identical(ref_q["__qlayers__"], qp["__qlayers__"])
+    assert _report_rows(rep) == _report_rows(ref_rep)
+    assert _packed_bytes(ref_q, str(tmp_path / "ref.qpk")) == \
+        _packed_bytes(qp, str(tmp_path / "res.qpk"))
+
+
+def test_kill_resume_bit_identical_moe_mixed_policy(tmp_path):
+    """Same oracle on the MoE smoke arch (vmapped stacked-expert solves)
+    under a mixed-precision policy (per-leaf resolved specs)."""
+    cfg, params, tokens = _setup("granite-moe-3b-a800m")
+    policy = parse_policy("first=8", SPEC)
+    ref_q, ref_rep = quantize_model(params, cfg, PLAN, tokens, policy,
+                                    method="comq_blocked")
+    jd = str(tmp_path / "journal")
+    inj = FaultInjector({"kill": [1]})
+    with pytest.raises(SimulatedKill):
+        quantize_model(params, cfg, PLAN, tokens, policy,
+                       method="comq_blocked", journal=jd, injector=inj)
+    st = QuantJournal.replay(jd)
+    assert st.leaves and not st.done
+
+    qp, rep = quantize_model(params, cfg, PLAN, tokens, policy,
+                             method="comq_blocked", journal=jd, resume=True,
+                             injector=inj)
+    assert rep.resumed_leaves == len(st.leaves)
+    _assert_trees_identical(ref_q["__qlayers__"], qp["__qlayers__"])
+    assert _report_rows(rep) == _report_rows(ref_rep)
+
+
+def test_resume_digest_mismatch_raises(tmp_path):
+    """A journal written under one resolved policy must refuse to resume
+    a run with a different one (stale journals produce silent garbage)."""
+    cfg, params, tokens = _setup()
+    jd = str(tmp_path / "journal")
+    inj = FaultInjector({"kill": [1]})
+    with pytest.raises(SimulatedKill):
+        quantize_model(params, cfg, PLAN, tokens, SPEC,
+                       method="comq_blocked", journal=jd, injector=inj)
+    other = QuantSpec(bits=3, granularity="per_channel", lam=0.9, sweeps=1,
+                      order="greedy")
+    with pytest.raises(ResumeMismatch):
+        quantize_model(params, cfg, PLAN, tokens, other,
+                       method="comq_blocked", journal=jd, resume=True)
+    # a different method over the same spec must mismatch too
+    with pytest.raises(ResumeMismatch):
+        quantize_model(params, cfg, PLAN, tokens, SPEC, method="rtn",
+                       journal=jd, resume=True)
+
+
+def test_ckpt_write_fault_never_journals_torn_leaf(tmp_path):
+    """A crash between the durable spill-tmp write and its rename (the
+    torn-write window) must leave the journal without a record for that
+    leaf: the tmp file lingers, the target doesn't exist, integrity
+    passes, and the resumed run re-solves it bit-identically."""
+    cfg, params, tokens = _setup()
+    ref_q, _ = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                              method="comq_blocked")
+    jd = str(tmp_path / "journal")
+    inj = FaultInjector({"ckpt_write": [1]})
+    with pytest.raises(InjectedFault):
+        quantize_model(params, cfg, PLAN, tokens, SPEC,
+                       method="comq_blocked", journal=jd, injector=inj)
+    st = QuantJournal.replay(jd)
+    spill = os.path.join(jd, "leaves")
+    torn = glob.glob(os.path.join(spill, "*.tmp"))
+    assert torn, "the injected torn write should leave a .tmp behind"
+    for t in torn:
+        assert not os.path.exists(t[:-len(".tmp")])
+        assert os.path.basename(t)[:-len(".tmp")] not in {
+            rec["file"] for rec in st.leaves.values()}
+    QuantJournal.check_integrity(jd)   # journaled leaves all load
+
+    qp, _ = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                           method="comq_blocked", journal=jd, resume=True,
+                           injector=inj)
+    _assert_trees_identical(ref_q["__qlayers__"], qp["__qlayers__"])
+
+
+def test_integrity_check_detects_corrupt_spill(tmp_path):
+    """Flipping one byte of a journaled spill must fail the journal↔
+    checkpoint integrity check (payload crc32 + journaled crc)."""
+    cfg, params, tokens = _setup()
+    jd = str(tmp_path / "journal")
+    inj = FaultInjector({"kill": [1]})
+    with pytest.raises(SimulatedKill):
+        quantize_model(params, cfg, PLAN, tokens, SPEC,
+                       method="comq_blocked", journal=jd, injector=inj)
+    st = QuantJournal.replay(jd)
+    rec = next(iter(st.leaves.values()))
+    path = os.path.join(jd, "leaves", rec["file"])
+    blob = bytearray(open(path, "rb").read())
+    blob[-1] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(PackedCkptError):
+        QuantJournal.check_integrity(jd)
+    # a missing spill is the same failure class
+    os.remove(path)
+    with pytest.raises(PackedCkptError):
+        QuantJournal.check_integrity(jd)
+
+
+def test_supervised_restarts_recover_multiple_faults(tmp_path):
+    """The launcher's supervision loop: run_with_restarts + journal
+    progress signal self-recovers through a kill, a Gram-accumulation
+    fault, and a leaf-solve fault, converging to a complete run whose
+    packed bytes match the clean run's."""
+    cfg, params, tokens = _setup()
+    ref_q, _ = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                              method="comq_blocked")
+    jd = str(tmp_path / "journal")
+    inj = FaultInjector({"kill": [1], "gram_accumulate": [6],
+                         "leaf_solve": [9]})
+    box = {}
+
+    def attempt(_):
+        resume = bool(QuantJournal.replay(jd).leaves)
+        if resume:
+            QuantJournal.check_integrity(jd)
+        box["out"] = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                                    method="comq_blocked", journal=jd,
+                                    resume=resume, injector=inj)
+
+    def progress():
+        return len(QuantJournal.replay(jd).leaves)
+
+    run_with_restarts(attempt, progress, max_restarts=3,
+                      exceptions=(RuntimeError,), backoff_s=0.0)
+    qp, rep = box["out"]
+    assert len(inj.fired) == 3
+    assert QuantJournal.replay(jd).done
+    assert rep.resumed_leaves > 0
+    _assert_trees_identical(ref_q["__qlayers__"], qp["__qlayers__"])
+    assert _packed_bytes(ref_q, str(tmp_path / "ref.qpk")) == \
+        _packed_bytes(qp, str(tmp_path / "sup.qpk"))
+
+
+def test_journaling_alone_changes_nothing(tmp_path):
+    """A healthy journaled run is bit-identical to a plain one (the
+    journal only adds host syncs), and a completed journal resumes to
+    a full re-application (zero re-solves)."""
+    cfg, params, tokens = _setup()
+    ref_q, _ = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                              method="comq_blocked")
+    jd = str(tmp_path / "journal")
+    q1, rep1 = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                              method="comq_blocked", journal=jd)
+    assert rep1.resumed_leaves == 0
+    _assert_trees_identical(ref_q["__qlayers__"], q1["__qlayers__"])
+    q2, rep2 = quantize_model(params, cfg, PLAN, tokens, SPEC,
+                              method="comq_blocked", journal=jd, resume=True)
+    assert rep2.resumed_leaves == len(rep2.layers)
+    _assert_trees_identical(ref_q["__qlayers__"], q2["__qlayers__"])
+
+
+def test_injector_rejects_unknown_pipeline_point():
+    with pytest.raises(ValueError):
+        FaultInjector.parse("gram_acumulate:1")
