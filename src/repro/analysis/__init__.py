@@ -1,0 +1,47 @@
+"""Compile-contract checking: static analysis over jaxprs/HLO and the
+repo's own Python source (DESIGN.md §9).
+
+The repo's hottest guarantees — zero collectives in the column-sharded
+solve, one psum per tap in the data-parallel Gram, donated KV pages
+updated in place, "recompile at most once per bucket" in the serve
+scheduler — are cheap to break silently: a stray all-reduce, a dropped
+donation or a quiet retrace erases COMQ's backprop-free efficiency
+without failing a single numeric test. This package turns those
+invariants into checkable contracts:
+
+* `analysis.hlo`       — shared HLO-text parser (instructions, shapes,
+                         computations; factored out of roofline),
+                         collective census, input/output alias table;
+* `analysis.contracts` — declarative per-function contracts
+                         (`collectives=0`, `collectives={"all-reduce": 1}`,
+                         `donated={0}`) checked against compiled HLO,
+                         including the donation audit (JAX silently drops
+                         donation on dtype/sharding mismatch);
+* `analysis.retrace`   — runtime compile-count budgets around jitted
+                         entry points (`guard_jit`), warnings in dev,
+                         hard failures under pytest/CI;
+* `analysis.lint`      — repo-specific AST lint (host syncs in hot
+                         loops, `time.time()` inside jit, fsync-before-
+                         `os.replace` durability) with
+                         `# comq: allow(<rule>)` pragmas;
+* `analysis.registry`  — the gated entry points and their declared
+                         budgets;
+* `analysis.cli`       — `python -m repro.analysis.cli --gate`, the CI
+                         gate over all of the above.
+"""
+from repro.analysis.contracts import (Contract, ContractViolation,
+                                      assert_contract, audit_donation,
+                                      check_compiled, check_hlo,
+                                      check_lowered, contract, contract_of)
+from repro.analysis.hlo import (collective_census, parse_hlo,
+                                parse_io_aliases, COLLECTIVES)
+from repro.analysis.retrace import (RetraceViolation, compile_count,
+                                    guard_jit, retrace_report, reset_guards)
+
+__all__ = [
+    "COLLECTIVES", "Contract", "ContractViolation", "RetraceViolation",
+    "assert_contract", "audit_donation", "check_compiled", "check_hlo",
+    "check_lowered", "collective_census", "compile_count", "contract",
+    "contract_of", "guard_jit", "parse_hlo", "parse_io_aliases",
+    "reset_guards", "retrace_report",
+]

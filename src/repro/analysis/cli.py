@@ -1,0 +1,139 @@
+"""`python -m repro.analysis.cli` — the repo's static-analysis gate
+(DESIGN.md §9.6, wired as the `analysis-gate` CI step).
+
+Modes (combinable; `--gate` = all three):
+
+* ``--lint``      — AST lint over the source tree (host-syncs in hot
+  zones, wall-clock calls inside jitted functions, un-fsynced
+  `os.replace` in the durable dirs);
+* ``--contracts`` — lower every gated entry point in
+  `analysis/registry.py` and check its collective census + donation
+  aliasing against the declared contract;
+* ``--retrace``   — a small mixed-length, staggered serve run under the
+  runtime's retrace guards, asserting the decode step compiled exactly
+  once and every guard stayed inside its budget.
+
+Exit status is the number of violated checks (0 = clean), so CI can use
+it directly. Findings print one per line; `--quiet` suppresses the
+per-section OK chatter.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+
+def _print(quiet: bool, msg: str) -> None:
+    if not quiet:
+        print(msg)
+
+
+def run_lint(paths: List[str], quiet: bool) -> int:
+    from repro.analysis.lint import lint_paths
+    root = os.getcwd()
+    findings = lint_paths(paths, root=root)
+    for f in findings:
+        print(f)
+    _print(quiet, f"lint: {len(findings)} finding(s) over {paths}")
+    return 1 if findings else 0
+
+
+def run_contracts(quiet: bool) -> int:
+    from repro.analysis.registry import run_gate
+    bad = 0
+    for res in run_gate():
+        if res.skipped:
+            _print(quiet, f"contract {res.name}: SKIP ({res.skipped})")
+        elif res.ok:
+            _print(quiet, f"contract {res.name}: OK")
+        else:
+            bad += 1
+            for v in res.violations:
+                print(f"contract {res.name}: {v}")
+    return 1 if bad else 0
+
+
+def run_retrace_smoke(quiet: bool) -> int:
+    """Mixed-length, staggered serve run; the decode step must compile
+    exactly once and every runtime guard must stay inside its budget."""
+    import numpy as np
+
+    from repro.analysis.retrace import (compile_count, guard_violations,
+                                        reset_guards, retrace_report)
+    from repro.configs import get_smoke_config
+    from repro.models import BuildPlan, init_params
+    from repro.serve import Runtime, ServeConfig
+    import jax
+    import jax.numpy as jnp
+
+    reset_guards()
+    cfg = get_smoke_config("qwen2-7b").replace(compute_dtype="float32")
+    plan = BuildPlan(remat=False, cache_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg, plan)
+    rt = Runtime(params, cfg, plan,
+                 ServeConfig(max_slots=3, block_size=8, num_blocks=24,
+                             buckets=(8, 16), max_blocks_per_slot=4))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(L,)).astype(np.int32)
+               for L in (5, 11, 7, 13)]
+    problems: List[str] = []
+    try:
+        # staggered arrivals: two up front, two injected mid-run
+        for p in prompts[:2]:
+            rt.submit(p, max_new_tokens=6)
+        rt.step(); rt.step()
+        rt.submit(prompts[2], max_new_tokens=5, temperature=0.7, seed=7)
+        rt.step()
+        rt.submit(prompts[3], max_new_tokens=4)
+        rt.run()
+    except Exception as e:   # strict mode raises mid-run on violation
+        problems.append(f"serve run raised: {type(e).__name__}: {e}")
+    n = compile_count("serve.decode_step")
+    if n != 1:
+        problems.append(f"decode step compiled {n} time(s), expected "
+                        "exactly 1 across a mixed/staggered run")
+    problems += guard_violations()
+    for p in problems:
+        print(f"retrace: {p}")
+    if not problems:
+        report = retrace_report()
+        traced = {k: v["traces"] for k, v in report.items() if v["traces"]}
+        _print(quiet, f"retrace: OK — compile counts {traced}")
+    return 1 if problems else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.cli",
+        description="compile-contract + lint gate")
+    ap.add_argument("--gate", action="store_true",
+                    help="run every check (lint + contracts + retrace)")
+    ap.add_argument("--lint", action="store_true")
+    ap.add_argument("--contracts", action="store_true")
+    ap.add_argument("--retrace", action="store_true")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="lint roots (default: src/repro)")
+    args = ap.parse_args(argv)
+    if args.gate:
+        args.lint = args.contracts = args.retrace = True
+    if not (args.lint or args.contracts or args.retrace):
+        ap.error("pick at least one of --gate/--lint/--contracts/--retrace")
+
+    failures = 0
+    if args.lint:
+        failures += run_lint(args.paths or ["src/repro"], args.quiet)
+    if args.contracts:
+        failures += run_contracts(args.quiet)
+    if args.retrace:
+        failures += run_retrace_smoke(args.quiet)
+    _print(args.quiet,
+           "analysis gate: " + ("CLEAN" if not failures
+                                else f"{failures} section(s) FAILED"))
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

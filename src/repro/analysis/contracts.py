@@ -1,0 +1,210 @@
+"""Declarative compile contracts over HLO (DESIGN.md §9.2).
+
+A contract states what a compiled program is *allowed to do* on the wire
+and in memory, independent of its numerics:
+
+* ``collectives=0``                 — the module contains no collective
+  instructions at all (the column-sharded solve's invariant);
+* ``collectives={"all-reduce": 1}`` — exactly one all-reduce and zero
+  collectives of any other family (the one-psum-per-tap Gram);
+* ``donated={1}``                   — positional arg 1 was donated AND
+  the compiled module actually aliases every one of its buffers to an
+  output. JAX drops ``donate_argnums`` *silently* when a donated leaf's
+  dtype/shape/sharding matches no output — the paged KV pool falling off
+  the in-place path would double decode-step HBM traffic without failing
+  any test, so the audit reads the ground truth: the module header's
+  ``input_output_alias`` table.
+
+Checks run on compiled HLO text (`compiled.as_text()`); `check_lowered`
+is the convenience that lowers+compiles a jitted callable on example
+args. Violations come back as strings (empty list = clean);
+`assert_contract` raises `ContractViolation` with all of them.
+
+The `@contract(...)` decorator only attaches metadata
+(``__comq_contract__``) — checking happens where example shapes exist:
+the registry of gated entry points (`analysis/registry.py`), the CLI
+gate, and the tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from repro.analysis.hlo import (COLLECTIVES, collective_census,
+                                entry_param_count, parse_io_aliases)
+
+CollectiveSpec = Union[int, Mapping[str, int], None]
+
+
+class ContractViolation(AssertionError):
+    """A compiled program broke its declared contract."""
+
+
+@dataclass(frozen=True)
+class Contract:
+    """What a compiled entry point is allowed to do.
+
+    collectives: None = unconstrained; an int N = total collective
+      instruction count must equal N; a mapping = per-family exact
+      counts, with every family *not* named required to be 0.
+    donated: positional argnums whose every flattened leaf must be
+      aliased input->output in the compiled module.
+    """
+    name: str = ""
+    collectives: CollectiveSpec = None
+    donated: Tuple[int, ...] = ()
+    notes: str = ""
+
+
+def contract(collectives: CollectiveSpec = None,
+             donated: Sequence[int] = (), notes: str = ""):
+    """Attach a Contract to a callable (jitted or not) as metadata."""
+    def deco(fn):
+        fn.__comq_contract__ = Contract(
+            name=getattr(fn, "__name__", ""),
+            collectives=(dict(collectives)
+                         if isinstance(collectives, Mapping)
+                         else collectives),
+            donated=tuple(sorted(int(a) for a in donated)), notes=notes)
+        return fn
+    return deco
+
+
+def contract_of(fn) -> Optional[Contract]:
+    return getattr(fn, "__comq_contract__", None)
+
+
+# ---------------------------------------------------------------------------
+# collective-census pass
+# ---------------------------------------------------------------------------
+
+def check_collectives(text: str, spec: CollectiveSpec,
+                      name: str = "") -> List[str]:
+    """Violation strings for the census vs. a collectives spec."""
+    if spec is None:
+        return []
+    census = collective_census(text)
+    label = f"[{name}] " if name else ""
+    found = {k: v.count for k, v in census.items()}
+    if isinstance(spec, Mapping):
+        out = []
+        for fam in sorted(set(found) | set(spec)):
+            want = int(spec.get(fam, 0))
+            got = found.get(fam, 0)
+            if got != want:
+                by = census[fam].bytes if fam in census else 0.0
+                out.append(f"{label}collective census: {fam} x{got} "
+                           f"({by:.0f} shard bytes), contract wants "
+                           f"x{want}")
+        return out
+    total = sum(found.values())
+    if total != int(spec):
+        detail = ", ".join(f"{k} x{v.count} ({v.bytes:.0f} B)"
+                           for k, v in sorted(census.items())) or "none"
+        return [f"{label}collective census: {total} collective "
+                f"instruction(s) [{detail}], contract wants {int(spec)}"]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# donation audit
+# ---------------------------------------------------------------------------
+
+def _leaf_counts(example_args) -> List[int]:
+    import jax
+    return [len(jax.tree_util.tree_leaves(a)) for a in example_args]
+
+
+def audit_donation(text: str, donated: Sequence[int],
+                   example_args=None, name: str = "") -> List[str]:
+    """Verify each donated positional arg produced input-output aliasing.
+
+    With `example_args` (the positional args the program was lowered on;
+    avals/ShapeDtypeStructs work) the audit maps every donated argnum to
+    its flattened entry-parameter range and requires each parameter in
+    the range to appear in the module's `input_output_alias` table —
+    which is exactly what JAX fails to establish when a donated leaf's
+    dtype or sharding matches no output. Without example args it can
+    only require *some* aliasing to exist per the contract.
+    """
+    donated = sorted(int(a) for a in donated)
+    if not donated:
+        return []
+    label = f"[{name}] " if name else ""
+    aliased = set(parse_io_aliases(text))
+    if example_args is None:
+        if not aliased:
+            return [f"{label}donation audit: contract donates args "
+                    f"{donated} but the compiled module has no "
+                    "input_output_alias entries at all (donation dropped)"]
+        return []
+    counts = _leaf_counts(example_args)
+    for a in donated:
+        if a >= len(counts):
+            return [f"{label}donation audit: donated argnum {a} out of "
+                    f"range for {len(counts)} example args"]
+    n_params = entry_param_count(text)
+    offsets = [0]
+    for c in counts:
+        offsets.append(offsets[-1] + c)
+    out: List[str] = []
+    if n_params is not None and n_params == offsets[-1]:
+        # exact mapping: flattened args are the entry params, in order
+        for a in donated:
+            missing = [p for p in range(offsets[a], offsets[a + 1])
+                       if p not in aliased]
+            if missing:
+                out.append(
+                    f"{label}donation audit: arg {a} donated but "
+                    f"{len(missing)}/{counts[a]} of its leaves are not "
+                    f"aliased to any output (entry params "
+                    f"{missing[:6]}{'...' if len(missing) > 6 else ''}) — "
+                    "JAX drops donation silently on dtype/sharding "
+                    "mismatch")
+    else:
+        # params don't line up 1:1 with flattened args (hoisted consts,
+        # tokens): fall back to counting
+        expected = sum(counts[a] for a in donated)
+        if len(aliased) < expected:
+            out.append(
+                f"{label}donation audit: contract donates {expected} "
+                f"leaves (args {donated}) but only {len(aliased)} entry "
+                f"parameter(s) are aliased to outputs "
+                f"(module has {n_params} params vs {offsets[-1]} example "
+                "leaves — count-based audit)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# combined checks
+# ---------------------------------------------------------------------------
+
+def check_hlo(text: str, *, collectives: CollectiveSpec = None,
+              donated: Sequence[int] = (), example_args=None,
+              name: str = "") -> List[str]:
+    """Run every applicable pass; returns violation strings (empty=clean)."""
+    return (check_collectives(text, collectives, name)
+            + audit_donation(text, donated, example_args, name))
+
+
+def check_compiled(compiled, con: Contract, example_args=None) -> List[str]:
+    text = compiled.as_text() if hasattr(compiled, "as_text") else compiled
+    return check_hlo(text, collectives=con.collectives, donated=con.donated,
+                     example_args=example_args, name=con.name)
+
+
+def check_lowered(fn, *args, con: Optional[Contract] = None) -> List[str]:
+    """Lower+compile a jitted callable on example args and check its
+    contract (the one passed, else the attached `@contract` metadata)."""
+    con = con or contract_of(fn)
+    if con is None:
+        raise ValueError("no contract given and none attached to fn")
+    compiled = fn.lower(*args).compile()
+    return check_compiled(compiled, con, example_args=args)
+
+
+def assert_contract(text_or_compiled, con: Contract,
+                    example_args=None) -> None:
+    viol = check_compiled(text_or_compiled, con, example_args)
+    if viol:
+        raise ContractViolation("\n".join(viol))

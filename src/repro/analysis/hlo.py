@@ -1,0 +1,273 @@
+"""Shared HLO-text parser + whole-module passes (DESIGN.md §9.1).
+
+This is the single HLO parser in the repo: `repro.roofline.analysis`
+consumes it for the trip-count-aware cost model, and
+`repro.analysis.contracts` consumes it for the collective census and the
+donation audit. It walks the *optimized post-SPMD per-device* HLO text
+(`compiled.as_text()`), producing per-computation instruction lists with
+output shapes/bytes, operand names, called computations and
+`known_trip_count` backend configs.
+
+Whole-module passes on top of the parse:
+
+* `collective_census`  — per-collective *instruction* counts and shard
+  bytes (operand/output max, i.e. the per-device payload). Counts are
+  static occurrences, not dynamic executions: an all-reduce inside a
+  scanned body counts once — which is exactly the quantity the repo's
+  contracts constrain ("one psum per tap" is one all-reduce instruction
+  regardless of layer count).
+* `parse_io_aliases`   — the `input_output_alias` table from the
+  HloModule header: which entry parameters XLA actually aliased to
+  outputs. JAX drops `donate_argnums` silently on dtype/sharding
+  mismatch; the only ground truth that a donated buffer is reused in
+  place is this table in the compiled module.
+* `entry_param_count`  — entry parameter count from
+  `entry_computation_layout`, used to map flattened pytree args onto
+  parameter numbers.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+
+
+def _parse_shape(s: str) -> Tuple[int, int]:
+    """'f32[256,128]{1,0}' -> (elements, bytes). Tuples: sum of parts."""
+    total_el, total_by = 0, 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        el = 1
+        if dims:
+            for d in dims.split(","):
+                el *= int(d)
+        total_el += el
+        total_by += el * _DTYPE_BYTES[dt]
+    return total_el, total_by
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    out_elements: int
+    out_bytes: int
+    operands: List[str]
+    text: str
+    called: List[str] = field(default_factory=list)
+    trip_count: int = 1
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+
+
+_CALL_SINGLE_RE = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
+_CALL_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _split_shape_op(rhs: str):
+    """rhs = '<shape> <op>(<args>)...' where shape may be a paren tuple."""
+    rhs = rhs.lstrip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape_s = rhs[: i + 1]
+                    rest = rhs[i + 1:].lstrip()
+                    break
+        else:
+            return None
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        shape_s, rest = rhs[:sp], rhs[sp + 1:].lstrip()
+    opm = re.match(r"([\w\-]+)\(", rest)
+    if not opm:
+        return None
+    op = opm.group(1)
+    args_region = rest[opm.end():]
+    depth = 1
+    for i, ch in enumerate(args_region):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                args = args_region[:i]
+                break
+    else:
+        args = args_region
+    return shape_s, op, args
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in text.splitlines():
+        stripped = comment_re.sub("", line).strip()
+        if "=" not in stripped and stripped.endswith("{") and "->" in stripped:
+            first = stripped.split()[0]
+            is_entry = first == "ENTRY"
+            name = (stripped.split()[1] if is_entry else first).lstrip("%")
+            name = name.split("(")[0].strip()
+            cur = Computation(name)
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            continue
+        if stripped == "}":
+            continue
+        if cur is None or "=" not in stripped:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        parts = _split_shape_op(rhs)
+        if parts is None:
+            continue
+        shape_s, op, args = parts
+        out_el, out_by = _parse_shape(shape_s)
+        operands = _OPERAND_RE.findall(args)
+        called = [c.lstrip("%") for c in _CALL_SINGLE_RE.findall(rhs)]
+        bm = _CALL_BRANCH_RE.search(rhs)
+        if bm:
+            called += [c.strip().lstrip("%")
+                       for c in bm.group(1).split(",") if c.strip()]
+        trip = 1
+        tm = _TRIP_RE.search(rhs)
+        if tm:
+            trip = int(tm.group(1))
+        inst = Instr(name, op, out_el, out_by, operands, rhs, called, trip)
+        cur.instrs.append(inst)
+        cur.by_name[name] = inst
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# collective census
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CollectiveStat:
+    count: int = 0
+    bytes: float = 0.0
+
+
+def classify_collective(op: str) -> Optional[str]:
+    """Map an HLO opcode to its collective family, or None.
+
+    Async pairs count once: `all-reduce-start` is the collective,
+    `all-reduce-done` is bookkeeping and is skipped.
+    """
+    if op.endswith("-done"):
+        return None
+    for c in COLLECTIVES:
+        if op == c or op.startswith(c + "-"):
+            return c
+    return None
+
+
+def collective_census(text: str) -> Dict[str, CollectiveStat]:
+    """Per-collective static instruction counts + shard bytes over the
+    whole module (every computation — fusion bodies, scan bodies and the
+    entry alike), the quantity the `collectives=` contracts constrain."""
+    comps, _ = parse_hlo(text)
+    census: Dict[str, CollectiveStat] = {}
+    for comp in comps.values():
+        for inst in comp.instrs:
+            fam = classify_collective(inst.op)
+            if fam is None:
+                continue
+            in_bytes = sum(comp.by_name[o].out_bytes for o in inst.operands
+                           if o in comp.by_name)
+            stat = census.setdefault(fam, CollectiveStat())
+            stat.count += 1
+            stat.bytes += float(max(in_bytes, inst.out_bytes))
+    return census
+
+
+# ---------------------------------------------------------------------------
+# input/output aliasing (donation ground truth)
+# ---------------------------------------------------------------------------
+
+_ALIAS_TABLE_RE = re.compile(r"input_output_alias=\{(.*?)\}[,\s]")
+_ALIAS_ENTRY_RE = re.compile(
+    r"\{[\d,\s]*\}:\s*\((\d+),\s*\{[\d,\s]*\},\s*(?:may|must)-alias\)")
+_ENTRY_LAYOUT_RE = re.compile(r"entry_computation_layout=\{\((.*?)\)->")
+
+
+def parse_io_aliases(text: str) -> List[int]:
+    """Entry parameter numbers that XLA aliased to an output buffer.
+
+    Parsed from the HloModule header's `input_output_alias` table — the
+    compiled module's ground truth for donation. An empty list means no
+    donated buffer survived lowering (or none was requested).
+    """
+    m = _ALIAS_TABLE_RE.search(text)
+    if not m:
+        return []
+    inner = m.group(1)
+    # the table nests one brace level: find its true extent by balance
+    start = text.find("input_output_alias={") + len("input_output_alias=")
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                inner = text[start + 1:i]
+                break
+    return sorted(int(p) for p in _ALIAS_ENTRY_RE.findall(inner))
+
+
+def entry_param_count(text: str) -> Optional[int]:
+    """Number of entry parameters, from `entry_computation_layout`."""
+    m = _ENTRY_LAYOUT_RE.search(text)
+    if not m:
+        return None
+    params = m.group(1).strip()
+    if not params:
+        return 0
+    # count top-level commas (shapes contain commas inside [...] and {...})
+    depth, count = 0, 1
+    for ch in params:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            count += 1
+    return count

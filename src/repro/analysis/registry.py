@@ -1,0 +1,197 @@
+"""The registry of gated entry points (DESIGN.md §9.5).
+
+Each entry names one jitted program the repo's performance story depends
+on, builds a smoke-sized instance, lowers it on example operands, and
+checks its `Contract` against the compiled HLO:
+
+* ``serve.decode_step``    — zero collectives; the paged KV pool
+  (positional arg 1) is donated *and actually aliased* — a dropped
+  donation would double decode-step HBM traffic without failing a test;
+* ``serve.prefill``        — zero collectives (per-bucket program);
+* ``serve.prefill_write``  — pool donated+aliased through the scatter;
+* ``solver.comq_blocked``  — zero collectives; the permuted weights and
+  the scale vector are donated+aliased through the multi-sweep driver;
+* ``train.step``           — the train state is donated+aliased (params
+  and optimizer moments update in place);
+* ``dist.solve``           — the column-sharded solve issues *no*
+  collectives between the Gram psum and the final codes (§4.3);
+* ``dist.gram``            — exactly one all-reduce per tap (§4.2).
+
+`run_gate()` executes every entry that fits the local device count
+(`dist.*` need >= 2 devices and report as skipped otherwise) and returns
+`GateResult`s; the CLI turns any violation into a non-zero exit.
+
+Entries build fresh smoke models per run — a few seconds of CPU; the
+gate is a CI step, not a hot path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.contracts import Contract, check_lowered
+
+
+@dataclass
+class GateResult:
+    name: str
+    violations: List[str] = field(default_factory=list)
+    skipped: str = ""          # non-empty reason => entry did not run
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+@dataclass(frozen=True)
+class Entry:
+    name: str
+    run: Callable[[], List[str]]     # -> violation strings
+    min_devices: int = 1
+    notes: str = ""
+
+
+def _smoke_serve():
+    """One tiny float32 runtime shared by the serve entries of a run."""
+    from repro.configs import get_smoke_config
+    from repro.models import BuildPlan, init_params
+    from repro.serve import Runtime, ServeConfig
+    cfg = get_smoke_config("qwen2-7b").replace(compute_dtype="float32")
+    plan = BuildPlan(remat=False, cache_dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg, plan)
+    return Runtime(params, cfg, plan,
+                   ServeConfig(max_slots=2, block_size=8, num_blocks=16,
+                               buckets=(8, 16), max_blocks_per_slot=4))
+
+
+def _check_decode() -> List[str]:
+    rt = _smoke_serve()
+    B = rt.serve_cfg.max_slots
+    args = (rt.params, rt.pool, jnp.zeros((B, rt.maxb), jnp.int32),
+            jnp.zeros((B, 1), jnp.int32), jnp.zeros((B,), jnp.int32))
+    con = Contract(name="serve.decode_step", collectives=0, donated=(1,))
+    return check_lowered(rt._decode, *args, con=con)
+
+
+def _check_prefill() -> List[str]:
+    rt = _smoke_serve()
+    bucket = rt.serve_cfg.buckets[0]
+    fn = rt._prefill_fn(bucket)
+    con = Contract(name="serve.prefill", collectives=0)
+    return check_lowered(fn, rt.params, jnp.zeros((1, bucket), jnp.int32),
+                         con=con)
+
+
+def _check_prefill_write() -> List[str]:
+    rt = _smoke_serve()
+    bucket = rt.serve_cfg.buckets[0]
+    _, cache = rt._prefill_fn(bucket)(rt.params,
+                                      jnp.zeros((1, bucket), jnp.int32))
+    kv = cache["kv"]
+    fn = rt._write_fn(int(kv.k.shape[2]))
+    args = (rt.pool, kv.k[:, 0], kv.v[:, 0], kv.pos[0, 0],
+            jnp.int32(bucket), jnp.zeros((rt.maxb,), jnp.int32))
+    con = Contract(name="serve.prefill_write", collectives=0, donated=(0,))
+    return check_lowered(fn, *args, con=con)
+
+
+def _check_solver_blocked() -> List[str]:
+    import numpy as np
+    from repro.core.comq_hessian import (_blocked_jit_donate,
+                                         panel_sweep_dq_ref)
+    from repro.core.quantizer import QuantSpec
+    m, n = 32, 16
+    rng = np.random.default_rng(0)
+    hp = jnp.asarray(np.eye(m, dtype=np.float32) * 2.0)
+    wp = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    args = (hp, wp, jnp.diagonal(hp), jnp.full((n,), 0.05, jnp.float32),
+            jnp.float32(-8.0), jnp.float32(7.0))
+    con = Contract(name="solver.comq_blocked", collectives=0,
+                   donated=(1, 3))
+    lowered = _blocked_jit_donate.lower(
+        *args, spec=QuantSpec(bits=4), m=m, block=m,
+        panel_fn=panel_sweep_dq_ref, schedule="trailing")
+    from repro.analysis.contracts import check_compiled
+    return check_compiled(lowered.compile(), con, example_args=args)
+
+
+def _check_train_step() -> List[str]:
+    from repro.configs import RunConfig, get_smoke_config
+    from repro.models import BuildPlan, init_params
+    from repro.optim import AdamWConfig
+    from repro.train.train_step import init_train_state, make_train_step
+    cfg = get_smoke_config("qwen2-7b")
+    plan = BuildPlan(remat=False)
+    run_cfg = RunConfig(arch="qwen2-7b", total_steps=10)
+    adamw = AdamWConfig(weight_decay=run_cfg.weight_decay)
+    step = jax.jit(make_train_step(cfg, plan, run_cfg, adamw),
+                   donate_argnums=(0,))
+    params = init_params(jax.random.PRNGKey(0), cfg, plan)
+    state = init_train_state(params, adamw, run_cfg)
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32),
+             "labels": jnp.zeros((2, 16), jnp.int32)}
+    con = Contract(name="train.step", donated=(0,))
+    return check_lowered(step, state, batch, con=con)
+
+
+def _check_dist_solve() -> List[str]:
+    from repro.core.quantizer import QuantSpec
+    from repro.dist.calibrate import _solve_fn, calib_mesh
+    mesh = calib_mesh(model=jax.device_count())
+    spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
+                     order="cyclic")
+    fn = _solve_fn(mesh, spec, "comq_blocked", 32)
+    m, n = 64, 96
+    args = (jnp.eye(m), jnp.ones((m, n)), jnp.arange(m, dtype=jnp.int32))
+    con = Contract(name="dist.solve", collectives=0)
+    return check_lowered(fn, *args, con=con)
+
+
+def _check_dist_gram() -> List[str]:
+    from repro.dist.calibrate import _gram_fn, data_mesh
+    mesh = data_mesh()
+    fn = _gram_fn(mesh)
+    nd = mesh.shape["data"]
+    con = Contract(name="dist.gram", collectives={"all-reduce": 1},
+                   notes="one psum per tap (DESIGN.md §4.2)")
+    return check_lowered(fn, jnp.ones((4 * nd, 16)), con=con)
+
+
+ENTRIES: Dict[str, Entry] = {e.name: e for e in (
+    Entry("serve.decode_step", _check_decode,
+          notes="pool donated+aliased, zero collectives"),
+    Entry("serve.prefill", _check_prefill, notes="zero collectives"),
+    Entry("serve.prefill_write", _check_prefill_write,
+          notes="pool donated+aliased through the scatter"),
+    Entry("solver.comq_blocked", _check_solver_blocked,
+          notes="permuted W + scales donated+aliased, zero collectives"),
+    Entry("train.step", _check_train_step,
+          notes="train state donated+aliased"),
+    Entry("dist.solve", _check_dist_solve, min_devices=2,
+          notes="zero-communication column-sharded solve"),
+    Entry("dist.gram", _check_dist_gram, min_devices=2,
+          notes="exactly one all-reduce per Gram tap"),
+)}
+
+
+def run_gate(names: Optional[Sequence[str]] = None) -> List[GateResult]:
+    """Run the named entries (default: all); skips entries the local
+    device count cannot exercise rather than vacuously passing them."""
+    results: List[GateResult] = []
+    for name in (names or sorted(ENTRIES)):
+        entry = ENTRIES[name]
+        if jax.device_count() < entry.min_devices:
+            results.append(GateResult(
+                name, skipped=f"needs >= {entry.min_devices} devices "
+                              f"(have {jax.device_count()})"))
+            continue
+        try:
+            results.append(GateResult(name, violations=entry.run()))
+        except Exception as e:            # a broken builder is a failure
+            results.append(GateResult(
+                name, violations=[f"[{name}] gate entry raised: "
+                                  f"{type(e).__name__}: {e}"]))
+    return results

@@ -1,0 +1,144 @@
+"""Runtime retrace guard: compile-count budgets on jitted entry points
+(DESIGN.md §9.3).
+
+`guard_jit(fun, name=..., max_traces=N)` is a drop-in for `jax.jit(fun)`
+that counts *traces* — each jit cache miss re-enters the wrapped Python
+callable exactly once, so counting entries counts compiles without any
+private JAX API. Budgets:
+
+* ``max_traces=N``        — hard ceiling on total compiles (the serve
+  decode step declares 1; each per-bucket prefill program declares 1);
+* ``per_signature=True``  — unlimited *distinct* (shape/dtype/static)
+  signatures, but re-tracing a signature that was already compiled is a
+  violation (solver sweeps: one compile per (shape, statics) signature —
+  a second trace means a silently thrashing jit cache).
+
+A violation warns in dev and raises `RetraceViolation` under pytest/CI
+(`PYTEST_CURRENT_TEST` in the environment, or `COMQ_STRICT_RETRACE=1`;
+`COMQ_STRICT_RETRACE=0` force-disables strictness). Every guard
+registers under its name: `compile_count("serve.decode_step")` is how
+the tests assert "exactly one decode-step compile across a mixed/
+staggered run", and `retrace_report()` feeds the CLI gate.
+
+Re-creating a guard under an existing name (a fresh Runtime, an
+lru-cache rebuild) starts a fresh record — budgets are per live jitted
+object, not per process.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set
+
+import jax
+
+
+class RetraceViolation(RuntimeError):
+    """A jitted entry point exceeded its declared compile budget."""
+
+
+def strict_mode() -> bool:
+    env = os.environ.get("COMQ_STRICT_RETRACE")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "")
+    return "PYTEST_CURRENT_TEST" in os.environ
+
+
+@dataclass
+class GuardRecord:
+    name: str
+    max_traces: Optional[int] = None
+    per_signature: bool = False
+    traces: int = 0
+    signatures: Set[Any] = field(default_factory=set)
+    violations: List[str] = field(default_factory=list)
+
+    def note_trace(self, sig) -> Optional[str]:
+        """Record one trace; returns a violation message or None."""
+        self.traces += 1
+        msg = None
+        if self.per_signature and sig in self.signatures:
+            msg = (f"retrace guard [{self.name}]: re-traced an already-"
+                   f"compiled signature (trace #{self.traces}) — the jit "
+                   "cache is thrashing")
+        self.signatures.add(sig)
+        if (msg is None and self.max_traces is not None
+                and self.traces > self.max_traces):
+            msg = (f"retrace guard [{self.name}]: compile #{self.traces} "
+                   f"exceeds the declared budget of {self.max_traces}")
+        if msg is not None:
+            self.violations.append(msg)
+        return msg
+
+
+_GUARDS: Dict[str, GuardRecord] = {}
+
+
+def _signature_of(args, kwargs):
+    def leaf_key(x):
+        aval = getattr(x, "aval", None)
+        if aval is not None:
+            return (tuple(aval.shape), str(aval.dtype))
+        shape = getattr(x, "shape", None)
+        dtype = getattr(x, "dtype", None)
+        if shape is not None and dtype is not None:
+            return (tuple(shape), str(dtype))
+        return repr(x)     # static operand: identity by repr
+    leaves, treedef = jax.tree_util.tree_flatten((args, tuple(sorted(
+        kwargs.items()))))
+    return (treedef, tuple(leaf_key(leaf) for leaf in leaves))
+
+
+def guard_jit(fun, *, name: str, max_traces: Optional[int] = None,
+              per_signature: bool = False, **jit_kwargs):
+    """`jax.jit` with a compile-count budget registered under `name`."""
+    rec = GuardRecord(name, max_traces, per_signature)
+    _GUARDS[name] = rec
+
+    import functools
+
+    @functools.wraps(fun)
+    def traced(*args, **kwargs):
+        msg = rec.note_trace(_signature_of(args, kwargs))
+        if msg is not None:
+            if strict_mode():
+                raise RetraceViolation(msg)
+            warnings.warn(msg, stacklevel=2)
+        return fun(*args, **kwargs)
+
+    jitted = jax.jit(traced, **jit_kwargs)
+    jitted.__comq_retrace_guard__ = rec
+    return jitted
+
+
+def compile_count(name: str) -> int:
+    """Traces recorded by the most recent guard registered under `name`."""
+    rec = _GUARDS.get(name)
+    return 0 if rec is None else rec.traces
+
+
+def guard_violations(name: Optional[str] = None) -> List[str]:
+    if name is not None:
+        rec = _GUARDS.get(name)
+        return list(rec.violations) if rec else []
+    return [v for rec in _GUARDS.values() for v in rec.violations]
+
+
+def retrace_report() -> Dict[str, Dict[str, Any]]:
+    return {
+        n: {"traces": r.traces, "max_traces": r.max_traces,
+            "per_signature": r.per_signature,
+            "distinct_signatures": len(r.signatures),
+            "violations": list(r.violations)}
+        for n, r in sorted(_GUARDS.items())
+    }
+
+
+def reset_guards(name: Optional[str] = None) -> None:
+    """Drop guard records (all, or one name). Live jitted objects keep
+    counting into their own (now unregistered) records."""
+    if name is None:
+        _GUARDS.clear()
+    else:
+        _GUARDS.pop(name, None)

@@ -278,16 +278,21 @@ def _blocked_core(hp: Array, wp: Array, hdiag: Array, delta, z_lo, z_hi, *,
     else:
         raise ValueError(f"unknown schedule {schedule!r}")
 
-    q = jnp.clip(jnp.round(qf[:m]), z_lo, z_hi).astype(jnp.int32)
-    return q, delta, jnp.stack(errs)
+    # return the full padded float codes: the caller rounds/clips/slices
+    # outside the jit, and the (m_pad, n) output is what lets the donated
+    # wp buffer alias in place (int32 q in here could alias nothing — the
+    # donation audit in repro.analysis caught exactly that)
+    return qf, delta, jnp.stack(errs)
 
 
 _BLOCK_STATICS = ("spec", "m", "block", "panel_fn", "schedule")
 _blocked_jit = partial(jax.jit, static_argnames=_BLOCK_STATICS)(_blocked_core)
-# donating the permuted/padded operands lets XLA reuse their buffers for the
-# maintained P / HW products; CPU has no donation support, so gate on backend
+# donate the operands that genuinely alias an output: wp -> the returned
+# (m_pad, n) float codes, delta -> the updated delta. hp/hdiag alias nothing
+# (donating them is silently dropped by JAX — audited in analysis/registry);
+# the audit contract for this entry point is donated={1, 3}
 _blocked_jit_donate = partial(jax.jit, static_argnames=_BLOCK_STATICS,
-                              donate_argnums=(0, 1))(_blocked_core)
+                              donate_argnums=(1, 3))(_blocked_core)
 
 
 def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
@@ -337,9 +342,9 @@ def comq_quantize_blocked(h: Array, w: Array, spec: QuantSpec,
         wp = jnp.pad(wp, ((0, m_pad - m), (0, 0)))
         hdiag = jnp.pad(hdiag, (0, m_pad - m))
 
-    core = (_blocked_jit if jax.default_backend() == "cpu"
-            else _blocked_jit_donate)
-    q, delta, errs = core(hp, wp, hdiag, delta, z_lo, z_hi, spec=spec, m=m,
-                          block=B, panel_fn=panel_fn, schedule=schedule)
+    qf, delta, errs = _blocked_jit_donate(
+        hp, wp, hdiag, delta, z_lo, z_hi, spec=spec, m=m, block=B,
+        panel_fn=panel_fn, schedule=schedule)
+    q = jnp.clip(jnp.round(qf[:m]), z_lo, z_hi).astype(jnp.int32)
     q = q[inv_perm]
     return QuantResult(q=q, delta=delta, z_lo=z_lo, z_hi=z_hi, errors=errs)

@@ -96,6 +96,7 @@ class GuardContext:
 
 def nonfinite_count(x: Array) -> int:
     """Host int: number of NaN/Inf entries (one small transfer)."""
+    # comq: allow(host-sync) sentinel: one small intentional transfer
     return int(jax.device_get(jnp.sum(~jnp.isfinite(x))))
 
 def sanitize_array(x: Array) -> Tuple[Array, int]:
@@ -116,6 +117,7 @@ def gram_health(h: Array, w2ds: Sequence[Array] = ()) -> Tuple[int, int,
     diag = jnp.diagonal(h, axis1=-2, axis2=-1)
     vals = [jnp.sum(~jnp.isfinite(h)), jnp.sum(diag <= EPS)]
     vals += [jnp.sum(~jnp.isfinite(w)) for w in w2ds]
+    # comq: allow(host-sync) sentinel: one batched health transfer per Gram
     out = jax.device_get(jnp.stack([jnp.asarray(v, jnp.int32)
                                     for v in vals]))
     return int(out[0]), int(out[1]), [int(v) for v in out[2:]]
@@ -200,7 +202,7 @@ def result_ok(r, ref_err=None) -> bool:
         base = jnp.maximum(jnp.asarray(ref_err, jnp.float32),
                            jnp.float32(1e-6))
         ok = ok & (errs[-1] <= EXPLODE_FACTOR * base)
-    return bool(jax.device_get(ok))
+    return bool(jax.device_get(ok))  # comq: allow(host-sync) one scalar verdict per solve
 
 
 def guarded_solve(h: Array, w2d: Array, spec: QuantSpec, method: str, *,
@@ -226,6 +228,7 @@ def guarded_solve(h: Array, w2d: Array, spec: QuantSpec, method: str, *,
         if n_badw:
             for nm in names:
                 gctx.record(layer, nm, "nonfinite_weight", count=n_badw)
+        # comq: allow(host-sync) sentinel: one scalar per guarded solve
         n_dead = int(jax.device_get(jnp.sum(jnp.diag(h) <= EPS)))
         if n_dead:
             for nm in names:

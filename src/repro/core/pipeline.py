@@ -279,7 +279,7 @@ def _results_finite(results) -> bool:
              & jnp.isfinite(jnp.asarray(eb, jnp.float32))
              & jnp.isfinite(jnp.asarray(ea, jnp.float32))
              for qt, eb, ea, _ in results]
-    return bool(jax.device_get(jnp.all(jnp.stack(flags))))
+    return bool(jax.device_get(jnp.all(jnp.stack(flags))))  # comq: allow(host-sync) one batched finiteness verdict
 
 
 def _solve_group(ws, h: Array, specs, method: str,
@@ -616,13 +616,15 @@ class _RunCtx:
         bytes); without a journal the walk stays sync-free."""
         if self.journal is None:
             return results
-        errs = jax.device_get(
+        errs = jax.device_get(  # comq: allow(host-sync) journal commit: one batched pull per run
+
             jnp.stack([jnp.stack([jnp.asarray(eb, jnp.float32),
                                   jnp.asarray(ea, jnp.float32)])
                        for _, eb, ea, _ in results]))
         rows = []
         for (nm, spec, (qt, _, _, secs)), (ebf, eaf) in zip(
                 zip(names, specs, results), errs):
+            # comq: allow(host-sync) journal payloads must be host arrays
             qt_host = {k: np.asarray(jax.device_get(v))
                        if isinstance(v, jax.Array) else v
                        for k, v in qt.items()}
@@ -832,7 +834,7 @@ def _finalize_report(report: "QuantReport", pending: List[tuple]):
     errs = jnp.stack([jnp.stack([jnp.asarray(eb, jnp.float32),
                                  jnp.asarray(ea, jnp.float32)])
                       for (_, _, eb, ea, _) in pending])
-    vals = jax.device_get(errs)
+    vals = jax.device_get(errs)  # comq: allow(host-sync) one batched pull at report finalize
     for (li, name, _, _, secs), (eb, ea) in zip(pending, vals):
         report.layers.append(LayerReport(li, name, float(eb), float(ea),
                                          secs))

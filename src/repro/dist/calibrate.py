@@ -14,6 +14,12 @@ Communication accounting per transformer layer (dense family): 4 taps →
 4 Gram all-reduces of m·m f32 ≈ 4·d² + (Hp·hd)² + f² bytes·4, independent
 of the number of calibration tokens. Compare the data it replaces: an
 all-gather of the (N, m) features would move N·m·4 bytes per tap.
+
+Both wire invariants are *checked against compiled HLO*, not just
+documented: the analysis gate (`repro.analysis.registry`) holds the
+`dist.gram` contract to exactly one all-reduce and the `dist.solve`
+contract to zero collectives, and tests/test_dist.py re-asserts them via
+`repro.analysis.check_lowered` on the local mesh.
 """
 from __future__ import annotations
 

@@ -3,8 +3,11 @@
 XLA's built-in `compiled.cost_analysis()` counts while-loop bodies ONCE
 (verified experimentally — a 10-step scan reports 1/10 the flops of its
 unrolled twin), which would under-report every scanned layer stack by the
-layer count. This parser walks the *optimized post-SPMD per-device* HLO
-text (`compiled.as_text()`), computing per-computation:
+layer count. The HLO-text parsing itself lives in `repro.analysis.hlo`
+(shared with the compile-contract passes — one parser, two consumers;
+`parse_hlo`/`Instr`/`Computation` are re-exported here for back-compat).
+This module walks the *optimized post-SPMD per-device* parse, computing
+per-computation:
 
   * dot/convolution flops (2 × output elements × contraction size)
   * bytes accessed (operand + output bytes of memory-relevant ops)
@@ -27,157 +30,16 @@ Hardware model (TPU v5e-class, per assignment):
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
+
+from repro.analysis.hlo import (COLLECTIVES, Computation, Instr,  # noqa: F401
+                                _SHAPE_RE, parse_hlo)
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link (per-direction, one link)
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
-
-
-def _parse_shape(s: str) -> Tuple[int, int]:
-    """'f32[256,128]{1,0}' -> (elements, bytes). Tuples: sum of parts."""
-    total_el, total_by = 0, 0
-    for m in _SHAPE_RE.finditer(s):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        el = 1
-        if dims:
-            for d in dims.split(","):
-                el *= int(d)
-        total_el += el
-        total_by += el * _DTYPE_BYTES[dt]
-    return total_el, total_by
-
-
-@dataclass
-class Instr:
-    name: str
-    op: str
-    out_elements: int
-    out_bytes: int
-    operands: List[str]
-    text: str
-    called: List[str] = field(default_factory=list)
-    trip_count: int = 1
-
-
-@dataclass
-class Computation:
-    name: str
-    instrs: List[Instr] = field(default_factory=list)
-    by_name: Dict[str, Instr] = field(default_factory=dict)
-
-
-_CALL_SINGLE_RE = re.compile(
-    r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
-_CALL_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
-_OPERAND_RE = re.compile(r"%([\w.\-]+)")
-
-
-def _split_shape_op(rhs: str):
-    """rhs = '<shape> <op>(<args>)...' where shape may be a paren tuple."""
-    rhs = rhs.lstrip()
-    if rhs.startswith("("):
-        depth = 0
-        for i, ch in enumerate(rhs):
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                depth -= 1
-                if depth == 0:
-                    shape_s = rhs[: i + 1]
-                    rest = rhs[i + 1:].lstrip()
-                    break
-        else:
-            return None
-    else:
-        sp = rhs.find(" ")
-        if sp < 0:
-            return None
-        shape_s, rest = rhs[:sp], rhs[sp + 1:].lstrip()
-    opm = re.match(r"([\w\-]+)\(", rest)
-    if not opm:
-        return None
-    op = opm.group(1)
-    args_region = rest[opm.end():]
-    depth = 1
-    for i, ch in enumerate(args_region):
-        if ch == "(":
-            depth += 1
-        elif ch == ")":
-            depth -= 1
-            if depth == 0:
-                args = args_region[:i]
-                break
-    else:
-        args = args_region
-    return shape_s, op, args
-
-
-def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
-    comps: Dict[str, Computation] = {}
-    cur: Optional[Computation] = None
-    entry = None
-    comment_re = re.compile(r"/\*.*?\*/")
-    for line in text.splitlines():
-        stripped = comment_re.sub("", line).strip()
-        if "=" not in stripped and stripped.endswith("{") and "->" in stripped:
-            first = stripped.split()[0]
-            is_entry = first == "ENTRY"
-            name = (stripped.split()[1] if is_entry else first).lstrip("%")
-            name = name.split("(")[0].strip()
-            cur = Computation(name)
-            comps[name] = cur
-            if is_entry:
-                entry = name
-            continue
-        if stripped == "}":
-            continue
-        if cur is None or "=" not in stripped:
-            continue
-        m = _INSTR_RE.match(line)
-        if not m:
-            continue
-        name, rhs = m.group(1), m.group(2)
-        parts = _split_shape_op(rhs)
-        if parts is None:
-            continue
-        shape_s, op, args = parts
-        out_el, out_by = _parse_shape(shape_s)
-        operands = _OPERAND_RE.findall(args)
-        called = [c.lstrip("%") for c in _CALL_SINGLE_RE.findall(rhs)]
-        bm = _CALL_BRANCH_RE.search(rhs)
-        if bm:
-            called += [c.strip().lstrip("%")
-                       for c in bm.group(1).split(",") if c.strip()]
-        trip = 1
-        tm = _TRIP_RE.search(rhs)
-        if tm:
-            trip = int(tm.group(1))
-        inst = Instr(name, op, out_el, out_by, operands, rhs, called, trip)
-        cur.instrs.append(inst)
-        cur.by_name[name] = inst
-    if entry is None and comps:
-        entry = list(comps)[-1]
-    return comps, entry
-
 
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 

@@ -56,4 +56,5 @@ class Engine:
             logits, cache = self._decode(self.params, cache, nxt[:, None],
                                          jnp.int32(pos))
             pos += 1
+        # comq: allow(host-sync) end-of-batch: tokens leave the device once
         return np.asarray(jax.device_get(out))

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.retrace import guard_jit
 from repro.ft.inject import InjectedFault, SimulatedKill  # noqa: F401
 from repro.ft.journal import Journal
 from repro.models.model import decode_step_paged, forward
@@ -109,16 +110,27 @@ class Runtime:
 
         self._prefill_cache: Dict[int, object] = {}
         self._write_cache: Dict[int, object] = {}
-        self._decode = jax.jit(
+        # retrace budgets (analysis/retrace.py): the decode program compiles
+        # exactly once per Runtime — a second trace means shape-unstable
+        # decode state and would serialize every step behind a compile
+        self._decode = guard_jit(
             lambda p, pool, bt, t, pos: decode_step_paged(
                 p, cfg, plan, pool, bt, t, pos),
-            donate_argnums=(1,))
-        self._sample = jax.jit(
+            name="serve.decode_step", max_traces=1, donate_argnums=(1,))
+        self._sample = guard_jit(
             lambda lg, sd, ct, t, tk, tp: sample_batch_seeded(
-                lg, sd, ct, temperature=t, top_k=tk, top_p=tp))
+                lg, sd, ct, temperature=t, top_k=tk, top_p=tp),
+            name="serve.sample", per_signature=True)
         # all-greedy fast path: skips the (B, V) sort/softmax machinery
-        self._argmax = jax.jit(
-            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        self._argmax = guard_jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32),
+            name="serve.argmax", per_signature=True)
+        # device-resident block tables, re-uploaded only on change: steady
+        # greedy decode keeps the table constant, so the per-step
+        # host->device copy is pure overhead the moment tables settle
+        self._bt_dev = None
+        self._bt_dirty = True
+        self._any_sampling = False   # any live slot with temperature > 0
         # run() metrics
         self.steps = 0
         self.decode_seconds = 0.0
@@ -140,7 +152,8 @@ class Runtime:
                 logits, _, cache = forward(p, cfg, plan, t, make_cache=True)
                 return logits, cache
 
-            fn = jax.jit(prefill_full)
+            fn = guard_jit(prefill_full, name=f"serve.prefill[{bucket}]",
+                           max_traces=1)
             self._prefill_cache[bucket] = fn
         return fn
 
@@ -152,7 +165,8 @@ class Runtime:
                 pos_row = jnp.where((kv_pos >= 0) & (kv_pos < tlen),
                                     kv_pos, -1)
                 return write_prefill(pool, k_seq, v_seq, pos_row, table_row)
-            fn = jax.jit(write, donate_argnums=(0,))
+            fn = guard_jit(write, name=f"serve.prefill_write[{cache_len}]",
+                           max_traces=1, donate_argnums=(0,))
             self._write_cache[cache_len] = fn
         return fn
 
@@ -208,6 +222,8 @@ class Runtime:
         self._topp[s] = 0.0
         self._seed[s] = 0
         self._count[s] = 0
+        self._bt_dirty = True
+        self._any_sampling = bool((self._temp > 0.0).any())
         if self.journal is not None:
             self.journal.record_preempt(req)
 
@@ -245,6 +261,8 @@ class Runtime:
         self._topk[s] = req.top_k
         self._topp[s] = req.top_p
         self._seed[s] = np.uint32(req.seed or 0)
+        self._bt_dirty = True
+        self._any_sampling = bool((self._temp > 0.0).any())
         if resume:
             self._tok[s] = req.out_tokens[-1]
             self._count[s] = len(req.out_tokens)
@@ -262,7 +280,7 @@ class Runtime:
                 jnp.asarray([req.temperature], jnp.float32),
                 jnp.asarray([req.top_k], jnp.int32),
                 jnp.asarray([req.top_p], jnp.float32))
-        first = int(np.asarray(first)[0])
+        first = int(np.asarray(first)[0])  # comq: allow(host-sync) TTFT token must reach the stream callback
         self._emit(req, first, time.time())
         self._tok[s] = first
         self._count[s] = 1
@@ -286,6 +304,14 @@ class Runtime:
         self._bt[s] = 0
         self._tok[s] = 0
         self._count[s] = 0
+        # clear sampling settings too: greedy rows of the seeded sampler
+        # are bit-identical to the argmax fast path, so dropping back to
+        # it when the last sampling request retires cannot change tokens
+        self._temp[s] = 0.0
+        self._topk[s] = 0
+        self._topp[s] = 0.0
+        self._bt_dirty = True
+        self._any_sampling = bool((self._temp > 0.0).any())
 
     def step(self) -> int:
         """Admit what fits (possibly preempting lower-priority victims),
@@ -308,20 +334,29 @@ class Runtime:
         if not running:
             return emitted
         for s, req in running.items():
-            self._bt[s, :len(req.blocks)] = req.blocks   # grown tables
+            row = np.asarray(req.blocks, np.int32)       # grown tables
+            if not np.array_equal(self._bt[s, :len(row)], row):
+                self._bt[s, :len(row)] = row
+                self._bt_dirty = True
         if self.injector is not None:
             self.injector.check("decode_step")
         t0 = time.time()
+        # block tables only cross to the device when they changed (admit,
+        # retire, preempt, page growth) — steady decode re-uses the
+        # device-resident copy instead of re-uploading (B, maxb) per step
+        if self._bt_dirty or self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self._bt)
+            self._bt_dirty = False
         logits, self.pool = self._decode(
-            self.params, self.pool, jnp.asarray(self._bt),
+            self.params, self.pool, self._bt_dev,
             jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos))
-        if (self._temp > 0.0).any():
-            toks = np.asarray(self._sample(
+        if self._any_sampling:
+            toks = np.asarray(self._sample(  # comq: allow(host-sync) decode loop needs the tokens
                 logits, jnp.asarray(self._seed), jnp.asarray(self._count),
                 jnp.asarray(self._temp), jnp.asarray(self._topk),
                 jnp.asarray(self._topp)))
         else:
-            toks = np.asarray(self._argmax(logits))
+            toks = np.asarray(self._argmax(logits))  # comq: allow(host-sync) decode loop needs the tokens
         now = time.time()
         self.steps += 1
         self.decode_seconds += now - t0
@@ -369,8 +404,11 @@ class Runtime:
             "wall_seconds": wall,
             "tok_per_s": new_tokens / max(wall, 1e-9),
             "ttft_s": [r.ttft for r in done],
+            # comq: allow(host-sync) end-of-run metrics over host lists
             "itl_mean_s": float(np.mean(itls)) if itls else 0.0,
+            # comq: allow(host-sync)
             "itl_p50_s": float(np.percentile(itls, 50)) if itls else 0.0,
+            # comq: allow(host-sync)
             "itl_p99_s": float(np.percentile(itls, 99)) if itls else 0.0,
             "decode_steps": self.steps - steps_before,
             "preemptions": self.scheduler.preemptions - preempt0,

@@ -185,8 +185,10 @@ def test_sharded_solve_matches_replicated():
 
 def test_sharded_solve_issues_no_collectives():
     """DESIGN.md §4.3: between the Gram psum and the final quantized
-    weights the column-sharded solve is zero-communication — the compiled
-    HLO contains no collective ops at all."""
+    weights the column-sharded solve is zero-communication. Checked via
+    the contract API (analysis/contracts.py) — the census covers every
+    collective family, not just the ones an ad-hoc grep remembers."""
+    from repro.analysis import Contract, check_lowered
     from repro.dist.calibrate import _solve_fn
     mesh = calib_mesh(model=jax.device_count())
     spec = QuantSpec(bits=4, granularity="per_channel", lam=0.9, sweeps=2,
@@ -196,12 +198,26 @@ def test_sharded_solve_issues_no_collectives():
     h = jnp.eye(m)
     w = jnp.ones((m, n))
     perm = jnp.arange(m, dtype=jnp.int32)
-    hlo = f.lower(h, w, perm).compile().as_text()
-    bad = [l for l in hlo.splitlines()
-           if any(t in l for t in ("all-reduce", "all-gather",
-                                   "collective-permute", "reduce-scatter",
-                                   "all-to-all"))]
-    assert not bad, bad[:3]
+    viol = check_lowered(f, h, w, perm,
+                         con=Contract(name="dist.solve", collectives=0))
+    assert not viol, viol
+
+
+def test_sharded_gram_is_one_psum_per_tap():
+    """DESIGN.md §4.2: the data-parallel Gram compiles to exactly one
+    all-reduce (and no other collective family). On a single device the
+    psum compiles away, so the exact-count contract binds only under the
+    multi-device CI job."""
+    from repro.analysis import Contract, check_lowered
+    mesh = data_mesh()
+    nd = mesh.shape["data"]
+    if nd < 2:
+        pytest.skip("psum compiles away on a 1-device data axis")
+    from repro.dist.calibrate import _gram_fn
+    viol = check_lowered(
+        _gram_fn(mesh), jnp.ones((4 * nd, 32)),
+        con=Contract(name="dist.gram", collectives={"all-reduce": 1}))
+    assert not viol, viol
 
 
 def test_shard_batch_rejects_indivisible():
