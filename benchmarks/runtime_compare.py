@@ -160,6 +160,20 @@ def run():
     rows.append(("pipeline/journaled_vs_plain", round(us_journaled, 1),
                  round(us_journaled / us_plain, 3)))
 
+    # --- per-leaf timing semantics (DESIGN.md §3/§10) ---------------------
+    # LayerReport.dispatch_seconds is host dispatch time of the sync-free
+    # walk; wall_seconds (tracer-enabled runs only) blocks on the solved
+    # codes per tap group, so summed wall is the real solve cost. This row
+    # tracks how far the two drift apart (derived = wall/dispatch ratio —
+    # large on async backends, ~1 on CPU XLA which computes eagerly-ish).
+    from repro.obs import Tracer
+    rep_traced = quantize_model(params, cfg, plan, jtok, qspec,
+                                tracer=Tracer(run="bench"))[1]
+    disp = sum(r.dispatch_seconds for r in rep_traced.layers)
+    wall = sum(r.wall_seconds for r in rep_traced.layers)
+    rows.append(("pipeline/report_wall_vs_dispatch", round(wall * 1e6, 1),
+                 round(wall / max(disp, 1e-9), 3)))
+
     # --- sharded Gram (shard_map + one psum) vs single-device Gram --------
     # both sides jitted so the row isolates the shard_map/psum overhead,
     # not jit-vs-eager dispatch

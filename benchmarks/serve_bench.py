@@ -6,6 +6,11 @@
   this tracks the gather-fallback + scheduler overhead against the dense
   masked attend, not the HBM savings a TPU sees — the *capacity* win
   (pages scale with live tokens, not slots x max_len) is the point.
+* serve/obs_overhead — instrumentation cost of a fully live Tracer +
+  MetricsRegistry on the decode hot path; `us_per_call` = microbenched
+  per-decode-step hook-sequence cost (µs), `derived` = 1 + that cost
+  over the measured per-step wall, hard-gated < 1.02 (the DESIGN.md
+  §10.3 budget) with a bit-identical-tokens gate on top.
 * serve/packed_qt_vs_materialized — the Runtime serving a packed QT-leaf
   tree (quant_matmul path, no materialize) vs the same COMQ codes
   materialized to dense; `derived` = materialized/packed wall ratio.
@@ -38,11 +43,11 @@ ARCH = "qwen2-7b"
 N_REQ, PROMPT, MAX_NEW = 4, 32, 16
 
 
-def _runtime_for(params, cfg, plan):
+def _runtime_for(params, cfg, plan, **kw):
     return Runtime(params, cfg, plan,
                    ServeConfig(max_slots=N_REQ, block_size=16,
                                num_blocks=N_REQ * 4, buckets=(PROMPT,),
-                               max_blocks_per_slot=4))
+                               max_blocks_per_slot=4), **kw)
 
 
 def _time_runtime(params, cfg, plan, prompts, repeats=3):
@@ -76,6 +81,85 @@ def run():
         best = min(best, time.perf_counter() - t0)
     rows.append(("serve/paged_vs_dense_cache", round(t_paged * 1e6, 1),
                  round(best / t_paged, 3)))
+
+    # --- observability overhead (DESIGN.md §10.3 budget) ------------------
+    # Two hard gates on a fully instrumented Runtime (live Tracer +
+    # MetricsRegistry): (1) it must emit bit-identical tokens to the
+    # plain one; (2) its per-decode-step instrumentation cost must stay
+    # under 2% of the measured decode-step wall. The cost side is NOT
+    # taken by differencing two whole-run walls -- on shared CI boxes
+    # per-call jitter (+-50% observed) dwarfs the ~1% true overhead and
+    # any such gate flakes. Instead the exact per-step hook sequence
+    # (decode_step span, one token_event + counter per live slot, the
+    # two pool gauges) is replayed standalone, where it microbenches
+    # stably at the microsecond level, and divided by the median
+    # per-step wall of the real traced run. An events-per-step
+    # cross-check pins the replayed sequence to what Runtime.step
+    # actually emits, so a new hook on the hot path can't silently
+    # dodge the gate.
+    from repro.obs import MetricsRegistry, Tracer
+    OBS_MAX_NEW = 48
+    obs_cfg = dict(max_slots=N_REQ, block_size=16, num_blocks=N_REQ * 6,
+                   buckets=(PROMPT,), max_blocks_per_slot=6)
+    rt_plain = Runtime(params, cfg, plan, ServeConfig(**obs_cfg))
+    rt_traced = Runtime(params, cfg, plan, ServeConfig(**obs_cfg),
+                        tracer=Tracer(run="bench"),
+                        metrics=MetricsRegistry(run="bench"))
+    toks_plain = rt_plain.generate([p for p in prompts],
+                                   max_new_tokens=OBS_MAX_NEW)   # compile
+    toks_traced = rt_traced.generate([p for p in prompts],
+                                     max_new_tokens=OBS_MAX_NEW)  # compile
+    for a, b in zip(toks_plain, toks_traced):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    tr, reg = rt_traced.tracer, rt_traced.metrics
+    ev0, st0 = len(tr.events), rt_traced.steps
+    walls = []
+    for _ in range(6):
+        t0 = time.perf_counter()
+        rt_traced.generate([p for p in prompts],
+                           max_new_tokens=OBS_MAX_NEW)
+        walls.append(time.perf_counter() - t0)
+    real_steps = rt_traced.steps - st0
+    real_ev_per_step = (len(tr.events) - ev0) / real_steps
+    wall_per_step = float(np.median(walls)) * 6 / real_steps
+
+    m_tok = reg.counter("serve.tokens_emitted")
+    m_free = reg.gauge("serve.pool_free_blocks")
+    m_occ = reg.gauge("serve.pool_live_occupancy")
+
+    def obs_step(i):
+        # mirror of Runtime.step()'s per-step instrumentation with all
+        # N_REQ slots live (the traced workload's steady state)
+        with tr.span("decode_step", device=True, step=i, slots=N_REQ):
+            pass
+        now_us = time.time() * 1e6
+        for s in range(N_REQ):
+            tr.token_event(s, i, 42, now_us)
+            m_tok.inc()
+        m_free.set(8)
+        m_occ.set(0.5)
+
+    ev0 = len(tr.events)
+    obs_step(0)
+    replay_ev_per_step = len(tr.events) - ev0
+    # lifecycle events (submit/admit/first_token/retire) amortize to
+    # well under one event per step; anything bigger means the replay
+    # no longer mirrors the real hot path
+    assert abs(replay_ev_per_step - real_ev_per_step) <= 1.0, (
+        f"obs replay drift: step() emits {real_ev_per_step:.2f} "
+        f"events/step, replay emits {replay_ev_per_step}")
+    REPS = 20000
+    t0 = time.perf_counter()
+    for i in range(REPS):
+        obs_step(i)
+    obs_s_per_step = (time.perf_counter() - t0) / REPS
+    ratio = 1.0 + obs_s_per_step / wall_per_step
+    assert ratio < 1.02, (f"obs overhead {ratio:.3f} breaches the 2% "
+                          f"tokens/s budget ({obs_s_per_step * 1e6:.1f}us "
+                          f"per {wall_per_step * 1e6:.0f}us step)")
+    rows.append(("serve/obs_overhead", round(obs_s_per_step * 1e6, 2),
+                 round(ratio, 3)))
 
     # --- packed QT vs materialized ----------------------------------------
     calib = jax.random.randint(key, (4, 32), 0, cfg.vocab_size)

@@ -6,11 +6,14 @@ durability story depends on:
 * ``host-sync``   — inside *hot zones* (the functions listed in
   `HOT_ZONES`: the serve decode/admission path, the engine decode loop,
   the per-leaf pipeline sentinels), flag calls that force a device→host
-  sync: `jax.device_get(...)`, `.item()`, `np.asarray(...)`/
-  `np.array(...)` of a non-literal, and `float(...)`/`int(...)` of a
-  call expression. Streaming a sampled token to a callback is a sync by
-  design — such sites carry a pragma; anything unannotated is a new
-  stall on the hot path.
+  sync: `jax.device_get(...)`, `.item()`, `block_until_ready(...)`,
+  `np.asarray(...)`/`np.array(...)` of a non-literal, and `float(...)`/
+  `int(...)` of a call expression. Streaming a sampled token to a
+  callback is a sync by design — such sites carry a pragma; anything
+  unannotated is a new stall on the hot path. The observability hooks
+  (`obs/trace.py`, `obs/metrics.py`) are hot zones too: they run once
+  per token/leaf from inside the decode/solve loops and must stay
+  append-only host work.
 * ``time-in-jit`` — `time.time()`/`perf_counter()`/`monotonic()` inside
   a function that is jitted (decorated with `jax.jit`/`partial(jax.jit)`
   or passed to `jax.jit(...)`/`guard_jit(...)`, including lambdas).
@@ -42,13 +45,21 @@ RULES = ("host-sync", "time-in-jit", "fsync-before-replace")
 # decode/solve hot loops: any host sync inside runs once per step/leaf
 HOT_ZONES: Dict[str, Tuple[str, ...]] = {
     "serve/runtime.py": ("Runtime.step", "Runtime._admit_one",
-                         "Runtime.run"),
+                         "Runtime.run", "Runtime._emit",
+                         "Runtime._clear_slot", "Runtime._retire"),
     "serve/engine.py": ("Engine.generate_batch",),
     "core/guards.py": ("nonfinite_count", "sanitize_array", "gram_health",
                        "result_ok", "guarded_solve"),
     "core/pipeline.py": ("_results_finite", "_RunCtx.commit",
-                         "_finalize_report"),
+                         "_finalize_report", "_timed_solve"),
     "dist/calibrate.py": ("sharded_gram", "sharded_batched_gram"),
+    # observability hooks run once per token/leaf from inside the zones
+    # above — they must stay append-only host work (DESIGN.md §10.3)
+    "obs/trace.py": ("Tracer.span", "Tracer.instant",
+                     "Tracer.request_event", "Tracer.token_event",
+                     "Span.__exit__"),
+    "obs/metrics.py": ("Counter.inc", "Gauge.set", "Gauge.add",
+                       "Histogram.observe"),
 }
 
 # dirs (relative to the package root) under the durability rule
@@ -116,6 +127,9 @@ def _host_sync_reason(call: ast.Call) -> str:
         return "jax.device_get forces a blocking device->host transfer"
     if tail == "item":
         return ".item() forces a blocking scalar device->host sync"
+    if tail == "block_until_ready":
+        return ("block_until_ready stalls the host until the device "
+                "queue drains")
     if (name in ("np.asarray", "np.array", "numpy.asarray", "numpy.array")
             and call.args and isinstance(call.args[0], ast.Call)):
         # np.asarray(<call result>): pulling a freshly computed device

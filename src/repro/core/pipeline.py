@@ -55,6 +55,8 @@ from repro.core.policy import as_policy, policy_to_dict
 from repro.core.quantizer import QuantSpec
 from repro.ft.inject import InjectedFault, SimulatedKill
 from repro.ft.journal import QuantJournal, ResumeMismatch
+from repro.obs.metrics import NULL_METRICS
+from repro.obs.trace import NULL_TRACER
 from repro.models import transformer as tfm
 from repro.models.common import apply_norm
 
@@ -152,13 +154,26 @@ class LayerReport:
     err_after: float      # ‖X(W - W_q)‖ after COMQ
     # host time spent *dispatching* this leaf's solve: the walk is sync-free
     # (errors stay on device until one batched transfer at the end), so on
-    # an async backend this is not the solve's compute time — use
-    # QuantReport.wall_seconds for end-to-end cost
-    seconds: float
+    # an async backend this is not the solve's compute time
+    dispatch_seconds: float = 0.0
+    # span-derived wall time of the leaf's solve (dispatch + device
+    # compute), measured by the `leaf_solve` tracer span which blocks on
+    # the solved codes before closing. Only populated when a tracer is
+    # enabled — with tracing off the walk stays sync-free and this is
+    # 0.0 (unmeasured). Fused shared-tap groups split the group wall
+    # evenly, like dispatch_seconds.
+    wall_seconds: float = 0.0
     # comma-joined guard-event kinds for this leaf ("" = no intervention;
     # e.g. "dead_columns,damping_escalated") — see QuantReport.guard_events
     # for the full records
     guard: str = ""
+
+    @property
+    def seconds(self) -> float:
+        """Pre-PR-9 alias. The old field recorded dispatch time since the
+        sync-free walk landed but consumers still read it as wall time —
+        use `dispatch_seconds` or `wall_seconds` explicitly."""
+        return self.dispatch_seconds
 
 
 @dataclass
@@ -545,7 +560,8 @@ class _RunCtx:
 
     def __init__(self, method: str, gctx: Optional[GuardContext] = None,
                  journal: Optional[QuantJournal] = None, solved=None,
-                 injector=None, progress_cb=None):
+                 injector=None, progress_cb=None, tracer=None,
+                 metrics=None):
         self.method = method
         self.gctx = gctx
         self.journal = journal
@@ -553,6 +569,11 @@ class _RunCtx:
         self.injector = injector
         self.progress_cb = progress_cb
         self.resumed = 0
+        # observability (DESIGN.md §10): null singletons when disabled
+        self.tracer = tracer or NULL_TRACER
+        self.metrics = metrics or NULL_METRICS
+        self.m_layers = self.metrics.counter("quant.layers_done")
+        self.m_leaves = self.metrics.counter("quant.leaves_solved")
 
     # -- fault injection ----------------------------------------------------
 
@@ -620,9 +641,9 @@ class _RunCtx:
 
             jnp.stack([jnp.stack([jnp.asarray(eb, jnp.float32),
                                   jnp.asarray(ea, jnp.float32)])
-                       for _, eb, ea, _ in results]))
+                       for _, eb, ea, *_ in results]))
         rows = []
-        for (nm, spec, (qt, _, _, secs)), (ebf, eaf) in zip(
+        for (nm, spec, (qt, _, _, secs, wall)), (ebf, eaf) in zip(
                 zip(names, specs, results), errs):
             # comq: allow(host-sync) journal payloads must be host arrays
             qt_host = {k: np.asarray(jax.device_get(v))
@@ -633,7 +654,7 @@ class _RunCtx:
             self.journal.record_leaf(layer, nm,
                                      _spec_digest(spec, self.method),
                                      fname, crc, float(ebf), float(eaf))
-            rows.append((qt, float(ebf), float(eaf), secs))
+            rows.append((qt, float(ebf), float(eaf), secs, wall))
         return rows
 
     def _ckpt_write_fault(self) -> None:
@@ -645,9 +666,33 @@ class _RunCtx:
         layers shot — after the layer's leaves are durably journaled."""
         if self.journal is not None:
             self.journal.record_layer_done(layer)
+        self.m_layers.inc()
         if self.progress_cb is not None:
             self.progress_cb(layer)
         self.fault("kill", SimulatedKill)
+
+
+def _timed_solve(ctx: "_RunCtx", layer: int, tapname: str, names,
+                 solve_thunk):
+    """Run one tap group's solve under a `leaf_solve` tracer span and
+    extend each (qt, eb, ea, secs) row with a span-derived wall_seconds.
+
+    With tracing on, the span blocks on the solved codes before closing,
+    so its duration — split evenly across the group like dispatch secs —
+    is true solve wall time. With tracing off the thunk runs bare and the
+    walk stays exactly sync-free (wall 0.0 = unmeasured)."""
+    if not ctx.tracer.enabled:
+        results = solve_thunk()
+        ctx.m_leaves.inc(len(results))
+        return [r + (0.0,) for r in results]
+    with ctx.tracer.span("leaf_solve", device=True, layer=layer,
+                         tap=tapname, leaves=",".join(names)) as sp:
+        results = solve_thunk()
+        # comq: allow(host-sync) span wall time: tracing-on path only
+        jax.block_until_ready([qt["codes"] for qt, *_ in results])
+        wall = sp.elapsed_s / max(len(results), 1)
+    ctx.m_leaves.inc(len(results))
+    return [r + (wall,) for r in results]
 
 
 def _tap_groups(lp, tapmap) -> Dict[str, List[Tuple[str, str]]]:
@@ -704,7 +749,7 @@ def _quantize_layer_leaves(lp, taps, tapmap, resolve, method: str,
             for (mod, leaf), nm, (qt, rec) in zip(entries, names, cached):
                 lp_q = _set_nested(lp_q, mod, leaf, qt)
                 pending.append((layer_idx, nm, rec["err_before"],
-                                rec["err_after"], 0.0))
+                                rec["err_after"], 0.0, 0.0))
             continue
         ctx.fault("gram_accumulate")
         tap = ctx.sanitize_tap(ctx.poison_tap(taps[tapname]), layer_idx,
@@ -713,19 +758,23 @@ def _quantize_layer_leaves(lp, taps, tapmap, resolve, method: str,
             ctx.fault("leaf_solve")
         if tapname.startswith("expert"):
             hs = cache.batched(tapname, tap)
-            results = _solve_group_experts(ws, hs, specs, method,
-                                           gctx=ctx.gctx, layer=layer_idx,
-                                           names=names)
+            results = _timed_solve(
+                ctx, layer_idx, tapname, names,
+                lambda: _solve_group_experts(ws, hs, specs, method,
+                                             gctx=ctx.gctx, layer=layer_idx,
+                                             names=names))
         else:
             h = cache.gram(tapname, tap)
-            results = _solve_group(ws, h, specs, method, solve_sh=solve_sh,
-                                   gctx=ctx.gctx, layer=layer_idx,
-                                   names=names)
+            results = _timed_solve(
+                ctx, layer_idx, tapname, names,
+                lambda: _solve_group(ws, h, specs, method,
+                                     solve_sh=solve_sh, gctx=ctx.gctx,
+                                     layer=layer_idx, names=names))
         results = ctx.commit(layer_idx, names, specs, results)
-        for (mod, leaf), nm, (qt, eb, ea, secs) in zip(entries, names,
-                                                       results):
+        for (mod, leaf), nm, (qt, eb, ea, secs, wall) in zip(entries, names,
+                                                             results):
             lp_q = _set_nested(lp_q, mod, leaf, qt)
-            pending.append((layer_idx, nm, eb, ea, secs))
+            pending.append((layer_idx, nm, eb, ea, secs, wall))
     return lp_q
 
 
@@ -761,7 +810,7 @@ def _staged_cb(lp, groups, taps, resolve, method: str,
             for (mod, leaf), nm, (qt, rec) in zip(entries, names, cached):
                 holder["lp_q"] = _set_nested(holder["lp_q"], mod, leaf, qt)
                 pending.append((layer_idx, nm, rec["err_before"],
-                                rec["err_after"], 0.0))
+                                rec["err_after"], 0.0, 0.0))
                 repl[leaf] = dequant_qtensor(qt)
             return repl
         ctx.fault("gram_accumulate")
@@ -771,20 +820,24 @@ def _staged_cb(lp, groups, taps, resolve, method: str,
             ctx.fault("leaf_solve")
         if tapname.startswith("expert"):
             hs = batched_fn(tap)
-            results = _solve_group_experts(ws, hs, specs, method,
-                                           gctx=ctx.gctx, layer=layer_idx,
-                                           names=names)
+            results = _timed_solve(
+                ctx, layer_idx, tapname, names,
+                lambda: _solve_group_experts(ws, hs, specs, method,
+                                             gctx=ctx.gctx, layer=layer_idx,
+                                             names=names))
         else:
             h = gram_fn(tap)
-            results = _solve_group(ws, h, specs, method, solve_sh=solve_sh,
-                                   gctx=ctx.gctx, layer=layer_idx,
-                                   names=names)
+            results = _timed_solve(
+                ctx, layer_idx, tapname, names,
+                lambda: _solve_group(ws, h, specs, method,
+                                     solve_sh=solve_sh, gctx=ctx.gctx,
+                                     layer=layer_idx, names=names))
         results = ctx.commit(layer_idx, names, specs, results)
         repl = {}
-        for (mod, leaf), nm, (qt, eb, ea, secs) in zip(entries, names,
-                                                       results):
+        for (mod, leaf), nm, (qt, eb, ea, secs, wall) in zip(entries, names,
+                                                             results):
             holder["lp_q"] = _set_nested(holder["lp_q"], mod, leaf, qt)
-            pending.append((layer_idx, nm, eb, ea, secs))
+            pending.append((layer_idx, nm, eb, ea, secs, wall))
             repl[leaf] = dequant_qtensor(qt)
         return repl
     return cb
@@ -826,18 +879,27 @@ def _quantize_layer_staged(lp, x, state, cfg, plan, tapmap,
     return holder["lp_q"], y, new_state
 
 
-def _finalize_report(report: "QuantReport", pending: List[tuple]):
+def _finalize_report(report: "QuantReport", pending: List[tuple],
+                     metrics=NULL_METRICS):
     """Materialize every accumulated on-device error scalar with a single
-    batched transfer — the pipeline walk itself never blocks on the host."""
+    batched transfer — the pipeline walk itself never blocks on the host.
+    Per-leaf metrics (solve seconds, final errors) are observed here, on
+    the already-host values — never mid-walk."""
     if not pending:
         return report
     errs = jnp.stack([jnp.stack([jnp.asarray(eb, jnp.float32),
                                  jnp.asarray(ea, jnp.float32)])
-                      for (_, _, eb, ea, _) in pending])
+                      for (_, _, eb, ea, _, _) in pending])
     vals = jax.device_get(errs)  # comq: allow(host-sync) one batched pull at report finalize
-    for (li, name, _, _, secs), (eb, ea) in zip(pending, vals):
+    h_err = metrics.histogram("quant.leaf_err_after")
+    h_disp = metrics.histogram("quant.leaf_dispatch_seconds")
+    h_wall = metrics.histogram("quant.leaf_wall_seconds")
+    for (li, name, _, _, secs, wall), (eb, ea) in zip(pending, vals):
         report.layers.append(LayerReport(li, name, float(eb), float(ea),
-                                         secs))
+                                         secs, wall))
+        h_err.observe(float(ea))
+        h_disp.observe(secs)
+        h_wall.observe(wall)
     return report
 
 
@@ -870,7 +932,9 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
                    journal=None,
                    resume: bool = False,
                    injector=None,
-                   progress_cb: Optional[Callable[[int], None]] = None):
+                   progress_cb: Optional[Callable[[int], None]] = None,
+                   tracer=None,
+                   metrics=None):
     """Quantize all projection weights of an LM. `tokens`: (B, T) calib batch.
 
     `spec` is either a global QuantSpec (every leaf gets it — bit-identical
@@ -914,6 +978,13 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
       (gram_accumulate / leaf_solve / ckpt_write / kill / nan_tap);
       progress_cb(layer) fires after each durably-journaled layer (the
       supervisor's progress signal, e.g. ft.Heartbeat.beat).
+    * tracer (obs.Tracer) records layer / leaf_solve spans — with a
+      tracer each tap group's span blocks on its solved codes so
+      LayerReport.wall_seconds is true wall time; without one the walk
+      stays sync-free. metrics (obs.MetricsRegistry) accumulates
+      quant.* counters/histograms and, under a mesh, the
+      dist.bytes_all_reduced counter. Both default to disabled null
+      singletons with zero cost (DESIGN.md §10).
 
     Returns (qparams, QuantReport). qparams has QTensor leaves (each
     carrying its resolved bit width); use `dequantize_tree` (or the
@@ -967,12 +1038,22 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
 
     gctx = GuardContext(enabled=guards)
     ctx = _RunCtx(method, gctx=gctx, journal=qj, solved=solved,
-                  injector=injector, progress_cb=progress_cb)
+                  injector=injector, progress_cb=progress_cb,
+                  tracer=tracer, metrics=metrics)
 
     t_start = time.time()
     report = QuantReport()
     pending: List[tuple] = []
     gram_fn, batched_fn = _gram_fns(mesh)
+    # dist bytes-all-reduced accounting: install the counter hook for the
+    # run's duration (shape-derived host ints, no device sync)
+    dist_obs_prev = None
+    dist_obs_set = False
+    if mesh is not None and ctx.metrics.enabled:
+        from repro.dist import calibrate as _dcal
+        _c_bytes = ctx.metrics.counter("dist.bytes_all_reduced")
+        dist_obs_prev = _dcal.set_allreduce_observer(_c_bytes.inc)
+        dist_obs_set = True
     solve_sh = None
     if mesh is not None:
         from repro.dist import model_size, shard_batch, sharded_solve
@@ -1008,24 +1089,28 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
             if propagation == "legacy":
                 layer_full_j = _legacy_layer_fn(cfg, plan)
                 for l in range(cfg.n_layers):
-                    lp = _tree_slice(params["layers"], l)
-                    _, taps, _ = layer_full_j(lp, x, state)
-                    lp_q = _quantize_layer_leaves(
-                        lp, taps, tapmap, resolve, method, pending, l,
-                        gram_fn, batched_fn, solve_sh=solve_sh, ctx=ctx)
-                    # propagate through the *quantized* layer
-                    lp_deq = dequantize_tree(lp_q)
-                    x, _, state = layer_full_j(lp_deq, x, state)
-                    qparams = _store_layer(qparams, l, lp_q)
+                    with ctx.tracer.span("layer", layer=l,
+                                         schedule="legacy"):
+                        lp = _tree_slice(params["layers"], l)
+                        _, taps, _ = layer_full_j(lp, x, state)
+                        lp_q = _quantize_layer_leaves(
+                            lp, taps, tapmap, resolve, method, pending, l,
+                            gram_fn, batched_fn, solve_sh=solve_sh, ctx=ctx)
+                        # propagate through the *quantized* layer
+                        lp_deq = dequantize_tree(lp_q)
+                        x, _, state = layer_full_j(lp_deq, x, state)
+                        qparams = _store_layer(qparams, l, lp_q)
                     ctx.layer_done(l)
             else:
                 for l in range(cfg.n_layers):
-                    lp = _tree_slice(params["layers"], l)
-                    lp_q, x, state = _quantize_layer_staged(
-                        lp, x, state, cfg, plan, tapmap, resolve, method,
-                        pending, l, gram_fn, batched_fn, solve_sh=solve_sh,
-                        ctx=ctx)
-                    qparams = _store_layer(qparams, l, lp_q)
+                    with ctx.tracer.span("layer", layer=l,
+                                         schedule="staged"):
+                        lp_q, x, state = _quantize_layer_staged(
+                            _tree_slice(params["layers"], l), x, state,
+                            cfg, plan, tapmap, resolve, method,
+                            pending, l, gram_fn, batched_fn,
+                            solve_sh=solve_sh, ctx=ctx)
+                        qparams = _store_layer(qparams, l, lp_q)
                     ctx.layer_done(l)
 
             if quantize_unembed and "unembed" in params:
@@ -1034,7 +1119,7 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
                 if cached is not None:
                     qt, rec = cached[0]
                     pending.append((-1, "unembed", rec["err_before"],
-                                    rec["err_after"], 0.0))
+                                    rec["err_after"], 0.0, 0.0))
                 else:
                     ctx.fault("gram_accumulate")
                     xn = ctx.sanitize_tap(
@@ -1042,24 +1127,30 @@ def quantize_model(params, cfg, plan, tokens: Array, spec,
                                                   cfg)), -1, names)
                     ctx.fault("leaf_solve")
                     h = gram_fn(xn)
-                    results = _solve_group([params["unembed"]], h, specs,
-                                           method, solve_sh=solve_sh,
-                                           gctx=ctx.gctx, layer=-1,
-                                           names=names)
-                    qt, eb, ea, secs = ctx.commit(-1, names, specs,
-                                                  results)[0]
-                    pending.append((-1, "unembed", eb, ea, secs))
+                    results = _timed_solve(
+                        ctx, -1, "unembed_in", names,
+                        lambda: _solve_group([params["unembed"]], h, specs,
+                                             method, solve_sh=solve_sh,
+                                             gctx=ctx.gctx, layer=-1,
+                                             names=names))
+                    qt, eb, ea, secs, wall = ctx.commit(-1, names, specs,
+                                                        results)[0]
+                    pending.append((-1, "unembed", eb, ea, secs, wall))
                 qparams["unembed"] = qt
         if qj is not None:
             qj.record_run_done()
     finally:
         if own_journal and qj is not None:
             qj.close()
+        if dist_obs_set:
+            _dcal.set_allreduce_observer(dist_obs_prev)
 
-    _finalize_report(report, pending)
+    _finalize_report(report, pending, metrics=ctx.metrics)
     report.wall_seconds = time.time() - t_start
     report.guard_events = list(gctx.events)
     report.resumed_leaves = ctx.resumed
+    ctx.metrics.counter("quant.guard_events").inc(len(report.guard_events))
+    ctx.metrics.counter("quant.resumed_leaves").inc(ctx.resumed)
     gmap = gctx.by_leaf()
     if gmap:
         for lr in report.layers:

@@ -37,6 +37,21 @@ from repro.dist.collectives import psum_gram
 
 Array = jax.Array
 
+# obs hook (DESIGN.md §10): fires once per Gram psum with the all-reduced
+# byte count, derived from static shapes on the host — no device sync and
+# no cost when unset. The pipeline installs a metrics-counter callback
+# here for the run's duration (`dist.bytes_all_reduced`).
+_allreduce_observer = None
+
+
+def set_allreduce_observer(cb):
+    """Install `cb(n_bytes)` (or None to clear); returns the previous
+    observer so callers can restore it."""
+    global _allreduce_observer
+    prev = _allreduce_observer
+    _allreduce_observer = cb
+    return prev
+
 
 def data_mesh(n: Optional[int] = None) -> Mesh:
     """1-axis ("data",) mesh over the first n (default: all) local devices.
@@ -107,7 +122,10 @@ def sharded_gram(mesh: Mesh, tap: Array) -> Array:
             "replicated Gram (no psum) for this tap", stacklevel=2)
         from repro.core.calibrate import gram_from_tap
         return gram_from_tap(tap)
-    return _gram_fn(mesh)(tap)
+    h = _gram_fn(mesh)(tap)
+    if _allreduce_observer is not None:
+        _allreduce_observer(int(h.shape[0]) * int(h.shape[1]) * 4)
+    return h
 
 
 def sharded_batched_gram(mesh: Mesh, tap: Array) -> Array:
@@ -128,7 +146,11 @@ def sharded_batched_gram(mesh: Mesh, tap: Array) -> Array:
             "psum path.", stacklevel=2)
         from repro.core.calibrate import batched_gram
         return batched_gram(tap)
-    return _batched_gram_fn(mesh)(tap)
+    hs = _batched_gram_fn(mesh)(tap)
+    if _allreduce_observer is not None:
+        _allreduce_observer(int(hs.shape[0]) * int(hs.shape[1])
+                            * int(hs.shape[2]) * 4)
+    return hs
 
 
 # ---------------------------------------------------------------------------

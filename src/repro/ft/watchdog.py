@@ -64,15 +64,23 @@ class Heartbeat:
         os.makedirs(directory, exist_ok=True)
         self.host_id = host_id
 
-    def beat(self, step: int):
+    def beat(self, step: int, metrics: Optional[Dict] = None):
         # atomic publish: write the record to a temp file and rename it
         # over the live path, so a concurrent reader can never observe a
         # truncated JSON document (it sees either the old beat or the new
-        # one — a torn read used to be swallowed as a dead host)
+        # one — a torn read used to be swallowed as a dead host).
+        # `metrics` is an optional JSON-able health snapshot (e.g.
+        # Runtime.metrics_snapshot(): retired count, live occupancy,
+        # last guard event) published under a "metrics" key so the
+        # watchdog file is inspectable mid-run — liveness readers that
+        # only look at step/time are unaffected.
+        rec: Dict = {"step": step, "time": time.time()}
+        if metrics:
+            rec["metrics"] = metrics
         tmp = f"{self.path}.tmp.{os.getpid()}"
         try:
             with open(tmp, "w") as f:
-                json.dump({"step": step, "time": time.time()}, f)
+                json.dump(rec, f)
                 f.flush()
                 os.fsync(f.fileno())
             os.replace(tmp, self.path)

@@ -34,6 +34,7 @@ from repro.core import (QuantSpec, materialize, parse_policy,
 from repro.ft import (FaultInjector, Heartbeat, QuantJournal,
                       run_with_restarts)
 from repro.models import BuildPlan, init_params, lm_loss
+from repro.obs import MetricsRegistry, Tracer, next_trace_path
 
 
 def main():
@@ -99,6 +100,15 @@ def main():
     ap.add_argument("--no-guards", action="store_true",
                     help="disable the numeric guards (core/guards); "
                          "healthy runs are bit-identical either way")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write a Chrome-trace JSON of the run (layer + "
+                         "leaf_solve spans; open in chrome://tracing or "
+                         "Perfetto, or summarize with `python -m "
+                         "repro.obs.report DIR`)")
+    ap.add_argument("--metrics", default=None, metavar="DIR",
+                    help="dump the quant.* metrics registry (layers/"
+                         "leaves counters, per-leaf error + seconds "
+                         "histograms) as metrics.jsonl + metrics.prom")
     args = ap.parse_args()
     if args.restarts and not args.journal:
         raise SystemExit("--restarts needs --journal (resume source)")
@@ -157,8 +167,19 @@ def main():
         from repro.dist import data_mesh
         mesh = data_mesh()
     injector = FaultInjector.parse(args.inject) if args.inject else None
+    # observability (DESIGN.md §10): absent flags keep the pipeline on the
+    # zero-cost null singletons
+    tracer = Tracer(run=f"quantize:{cfg.name}") if args.trace else None
+    registry = (MetricsRegistry(run=f"quantize:{cfg.name}")
+                if args.metrics else None)
     hb = Heartbeat(args.journal, host_id=0) if args.journal else None
-    progress_cb = (lambda layer: hb.beat(layer)) if hb is not None else None
+    progress_cb = None
+    if hb is not None:
+        # the heartbeat doubles as a liveness + health publisher: each
+        # layer beat carries the current metrics snapshot when enabled
+        def progress_cb(layer):
+            hb.beat(layer, metrics=(registry.snapshot()
+                                    if registry is not None else None))
 
     def run_once(resume: bool):
         return quantize_model(params, cfg, plan, tokens, spec,
@@ -166,7 +187,8 @@ def main():
                               propagation=args.propagation, mesh=mesh,
                               guards=not args.no_guards,
                               journal=args.journal, resume=resume,
-                              injector=injector, progress_cb=progress_cb)
+                              injector=injector, progress_cb=progress_cb,
+                              tracer=tracer, metrics=registry)
 
     t0 = time.time()
     if args.journal:
@@ -218,6 +240,15 @@ def main():
         batch["vision_embeds"] = ve
     fp_loss = float(lm_loss(params, cfg, plan, batch)[0])
     q_loss = float(lm_loss(materialize(qparams, cfg), cfg, plan, batch)[0])
+
+    if tracer is not None:
+        tp = next_trace_path(args.trace, "quantize")
+        tracer.save(tp)
+        print(f"# trace: {tp} ({len(tracer.events)} events)")
+    if registry is not None:
+        registry.dump_jsonl(os.path.join(args.metrics, "metrics.jsonl"))
+        registry.dump_prometheus(os.path.join(args.metrics, "metrics.prom"))
+        print(f"# metrics: {args.metrics}/metrics.jsonl + metrics.prom")
 
     dense_bytes = sum(l.size * l.dtype.itemsize for l in
                       jax.tree_util.tree_leaves(params))

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -44,9 +45,10 @@ from repro.ckpt import (load_packed_ckpt, pack_tree, save_packed_ckpt,
 from repro.configs import get_config, get_smoke_config
 from repro.core import (QuantSpec, materialize, quantize_model,
                         serving_params)
-from repro.ft import (FaultInjector, Journal, SimulatedKill,
+from repro.ft import (FaultInjector, Heartbeat, Journal, SimulatedKill,
                       run_with_restarts)
 from repro.models import BuildPlan, count_params, init_params
+from repro.obs import MetricsRegistry, Tracer, next_trace_path
 from repro.serve import (Engine, Runtime, ServeConfig, blocks_for,
                          recover_runtime)
 
@@ -124,6 +126,17 @@ def main():
     ap.add_argument("--inject", default=None, metavar="SPEC",
                     help="deterministic fault schedule, e.g. "
                          "'page_alloc:3+7,decode_step:5,kill:9'")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write a Chrome-trace JSON (host spans + per-"
+                         "request lifecycle events) to DIR/serve.gN."
+                         "trace.json; inspect with chrome://tracing, "
+                         "Perfetto, or `python -m repro.obs.report DIR` "
+                         "(paged engine only)")
+    ap.add_argument("--metrics", default=None, metavar="DIR",
+                    help="dump the metrics registry (TTFT/ITL histograms, "
+                         "pool gauges, preemption counters) to "
+                         "DIR/metrics.jsonl + DIR/metrics.prom "
+                         "(paged engine only)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -225,6 +238,12 @@ def main():
                             max_blocks_per_slot=maxb,
                             policy=args.admission)
     injector = FaultInjector.parse(args.inject) if args.inject else None
+    # observability (DESIGN.md §10): absent flags keep the runtime on the
+    # zero-cost null singletons (the static-engine branch returned above)
+    tracer = Tracer(run=f"serve:{cfg.name}") if args.trace else None
+    registry = (MetricsRegistry(run=f"serve:{cfg.name}")
+                if args.metrics else None)
+    hb = Heartbeat(args.journal, host_id=0) if args.journal else None
     kw = dict(max_new_tokens=args.max_new, temperature=args.temperature,
               top_k=args.top_k, top_p=args.top_p,
               stop_tokens=tuple(args.stop_token))
@@ -236,7 +255,8 @@ def main():
     def build(resume: bool):
         if resume:
             rt, state = recover_runtime(params, cfg, plan, args.journal,
-                                        serve_cfg, injector=injector)
+                                        serve_cfg, injector=injector,
+                                        tracer=tracer, metrics=registry)
             box["rt"] = rt
             print(f"resume: {len(state.completed)} retired in journal, "
                   f"replaying {len(state.inflight)} in-flight")
@@ -252,7 +272,7 @@ def main():
             return rt, reqs
         journal = Journal(args.journal) if args.journal else None
         rt = Runtime(params, cfg, plan, serve_cfg, journal=journal,
-                     injector=injector)
+                     injector=injector, tracer=tracer, metrics=registry)
         box["rt"] = rt
         n_up_front = args.stagger if args.stagger > 0 else len(prompts)
         reqs = [rt.submit(p, priority=pr, **kw)
@@ -275,7 +295,12 @@ def main():
             resume = args.resume or bool(Journal.replay(args.journal).records)
             rt, reqs = build(resume)
             box["reqs"] = reqs
-            return rt.run()
+            if hb is not None:   # watchdog file inspectable mid-run
+                hb.beat(rt.steps, metrics=rt.metrics_snapshot())
+            out = rt.run()
+            if hb is not None:
+                hb.beat(rt.steps, metrics=rt.metrics_snapshot())
+            return out
 
         def progress():
             return len(Journal.replay(args.journal).completed)
@@ -287,6 +312,17 @@ def main():
     else:
         rt, reqs = build(args.resume)
         metrics = rt.run()
+        if hb is not None:
+            hb.beat(rt.steps, metrics=rt.metrics_snapshot())
+
+    if tracer is not None:
+        tpath = next_trace_path(args.trace, "serve")
+        tracer.save(tpath)
+        print(f"trace: {tpath} ({len(tracer.events)} events)")
+    if registry is not None:
+        registry.dump_jsonl(os.path.join(args.metrics, "metrics.jsonl"))
+        registry.dump_prometheus(os.path.join(args.metrics, "metrics.prom"))
+        print(f"metrics: {args.metrics}/metrics.jsonl + metrics.prom")
 
     metrics.update({
         "arch": cfg.name, "engine": "paged",

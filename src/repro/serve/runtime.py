@@ -46,6 +46,8 @@ from repro.analysis.retrace import guard_jit
 from repro.ft.inject import InjectedFault, SimulatedKill  # noqa: F401
 from repro.ft.journal import Journal
 from repro.models.model import decode_step_paged, forward
+from repro.obs.metrics import NULL_METRICS, Histogram
+from repro.obs.trace import NULL_TRACER
 from repro.serve.kv_cache import (BlockAllocator, blocks_for,
                                   init_paged_cache, paged_cache_bytes,
                                   write_prefill)
@@ -68,7 +70,8 @@ class Runtime:
     """Continuous-batching runtime: submit() requests, run() to drain."""
 
     def __init__(self, params, cfg, plan, serve_cfg: ServeConfig = None,
-                 journal: Optional[Journal] = None, injector=None):
+                 journal: Optional[Journal] = None, injector=None,
+                 tracer=None, metrics=None):
         if cfg.attn_free or cfg.parallel_ssm_heads or cfg.family == "vlm":
             raise NotImplementedError(
                 f"paged runtime does not cover family={cfg.family!r} / "
@@ -84,6 +87,22 @@ class Runtime:
         self.serve_cfg = sc
         self.journal = journal
         self.injector = injector
+        # observability (DESIGN.md §10): null singletons when disabled, so
+        # every hook below is an unconditional call that costs nothing.
+        # Instrument handles are resolved once here — hot-zone call sites
+        # never do registry lookups, only a float add / list append on
+        # values that are already host scalars (sync-free rule).
+        self.tracer = tracer or NULL_TRACER
+        self.metrics = metrics or NULL_METRICS
+        self._m_ttft = self.metrics.histogram("serve.ttft_seconds")
+        self._m_itl = self.metrics.histogram("serve.itl_seconds")
+        self._m_tokens = self.metrics.counter("serve.tokens_emitted")
+        self._m_retired = self.metrics.counter("serve.requests_retired")
+        self._m_preempt = self.metrics.counter("serve.preemptions")
+        self._m_admits = self.metrics.counter("serve.admits")
+        self._m_resumes = self.metrics.counter("serve.resumes")
+        self._m_free = self.metrics.gauge("serve.pool_free_blocks")
+        self._m_occ = self.metrics.gauge("serve.pool_live_occupancy")
 
         fail_hook = None
         if injector is not None:
@@ -188,6 +207,10 @@ class Runtime:
                         + req.rid) & 0x7FFFFFFF
         if self.journal is not None:
             self.journal.record_submit(req)
+        self.tracer.request_event("submit", req.rid,
+                                  prompt_len=int(req.prompt.shape[0]),
+                                  max_new_tokens=int(max_new_tokens),
+                                  priority=int(priority))
         return req
 
     # -- serving loop --------------------------------------------------------
@@ -209,6 +232,11 @@ class Runtime:
                 req.stream_cb = orig
         else:
             req.emit(token, now)
+        # token index is its position in the output stream; crash-replay
+        # re-delivers the same prefix, so timelines dedup by (rid, i)
+        self.tracer.token_event(req.rid, len(req.out_tokens) - 1, token,
+                                now * 1e6)
+        self._m_tokens.inc()
 
     def _clear_slot(self, req: Request) -> None:
         """Scheduler preemption callback: wipe the victim's device-side
@@ -226,6 +254,9 @@ class Runtime:
         self._any_sampling = bool((self._temp > 0.0).any())
         if self.journal is not None:
             self.journal.record_preempt(req)
+        self.tracer.request_event("preempt", req.rid,
+                                  n_preempts=int(req.n_preempts) + 1)
+        self._m_preempt.inc()
 
     def _admit_one(self, req: Request) -> int:
         """Prefill + scatter for a newly (re-)admitted request. Fresh
@@ -263,11 +294,15 @@ class Runtime:
         self._seed[s] = np.uint32(req.seed or 0)
         self._bt_dirty = True
         self._any_sampling = bool((self._temp > 0.0).any())
+        self.tracer.request_event("admit", req.rid, slot=int(s),
+                                  resumed=resume, prefill_len=tlen)
+        self._m_admits.inc()
         if resume:
             self._tok[s] = req.out_tokens[-1]
             self._count[s] = len(req.out_tokens)
             if self.journal is not None:
                 self.journal.record_resume(req)
+            self._m_resumes.inc()
             return 0
         # first token comes straight from the prefill logits (TTFT token)
         if req.temperature <= 0.0:
@@ -286,6 +321,8 @@ class Runtime:
         self._count[s] = 1
         if self.journal is not None:
             self.journal.record_first_token(req, first)
+        self.tracer.request_event("first_token", req.rid, token=first)
+        self._m_ttft.observe(req.ttft)
         if req.finished():       # max_new == 1, or the TTFT token is a stop
             self._retire(req)
         return 1
@@ -299,6 +336,12 @@ class Runtime:
         req.finished()               # ensure finish_reason is set
         if self.journal is not None:
             self.journal.record_retire(req)
+        self.tracer.request_event("retire", req.rid,
+                                  reason=req.finish_reason,
+                                  new_tokens=len(req.out_tokens))
+        self._m_retired.inc()
+        for dt in req.itl:           # host floats collected by emit()
+            self._m_itl.observe(dt)
         self.scheduler.release(req)
         self._pos[s] = -1
         self._bt[s] = 0
@@ -347,16 +390,21 @@ class Runtime:
         if self._bt_dirty or self._bt_dev is None:
             self._bt_dev = jnp.asarray(self._bt)
             self._bt_dirty = False
-        logits, self.pool = self._decode(
-            self.params, self.pool, self._bt_dev,
-            jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos))
-        if self._any_sampling:
-            toks = np.asarray(self._sample(  # comq: allow(host-sync) decode loop needs the tokens
-                logits, jnp.asarray(self._seed), jnp.asarray(self._count),
-                jnp.asarray(self._temp), jnp.asarray(self._topk),
-                jnp.asarray(self._topp)))
-        else:
-            toks = np.asarray(self._argmax(logits))  # comq: allow(host-sync) decode loop needs the tokens
+        # the span brackets dispatch + the token pull the loop needs
+        # anyway — no extra syncs, and device=True annotates the XLA
+        # timeline so profiler slices line up with this host span
+        with self.tracer.span("decode_step", device=True,
+                              step=self.steps, slots=len(running)):
+            logits, self.pool = self._decode(
+                self.params, self.pool, self._bt_dev,
+                jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos))
+            if self._any_sampling:
+                toks = np.asarray(self._sample(  # comq: allow(host-sync) decode loop needs the tokens
+                    logits, jnp.asarray(self._seed), jnp.asarray(self._count),
+                    jnp.asarray(self._temp), jnp.asarray(self._topk),
+                    jnp.asarray(self._topp)))
+            else:
+                toks = np.asarray(self._argmax(logits))  # comq: allow(host-sync) decode loop needs the tokens
         now = time.time()
         self.steps += 1
         self.decode_seconds += now - t0
@@ -378,6 +426,8 @@ class Runtime:
                    if self._pos[s] >= 0)
         self._occ_sum += live / self.allocator.num_blocks
         self._occ_steps += 1
+        self._m_free.set(self.allocator.num_free)
+        self._m_occ.set(live / self.allocator.num_blocks)
         return emitted
 
     def run(self) -> Dict[str, object]:
@@ -391,12 +441,19 @@ class Runtime:
         occ_sum0, occ_n0 = self._occ_sum, self._occ_steps
         preempt0 = self.scheduler.preemptions
         new_tokens = 0
-        while not self.scheduler.idle:
-            new_tokens += self.step()
+        with self.tracer.span("serve.run"):
+            while not self.scheduler.idle:
+                new_tokens += self.step()
         wall = time.time() - t0
         done = self.scheduler.completed[done_before:]
-        itls = [dt for r in done for dt in r.itl]
         occ_n = self._occ_steps - occ_n0
+        # histogram over this run's ITLs: quantile() matches
+        # np.percentile bit-for-bit (obs/metrics.py), so swapping the
+        # ad-hoc percentile math for the histogram changed no numbers
+        itl_hist = Histogram("serve.itl_seconds")
+        for r in done:
+            for dt in r.itl:
+                itl_hist.observe(dt)
         return {
             "requests": len(done),
             "finish_reasons": [r.finish_reason for r in done],
@@ -404,12 +461,10 @@ class Runtime:
             "wall_seconds": wall,
             "tok_per_s": new_tokens / max(wall, 1e-9),
             "ttft_s": [r.ttft for r in done],
-            # comq: allow(host-sync) end-of-run metrics over host lists
-            "itl_mean_s": float(np.mean(itls)) if itls else 0.0,
-            # comq: allow(host-sync)
-            "itl_p50_s": float(np.percentile(itls, 50)) if itls else 0.0,
-            # comq: allow(host-sync)
-            "itl_p99_s": float(np.percentile(itls, 99)) if itls else 0.0,
+            "itl_mean_s": (itl_hist.sum / itl_hist.count
+                           if itl_hist.count else 0.0),
+            "itl_p50_s": itl_hist.quantile(0.5) if itl_hist.count else 0.0,
+            "itl_p99_s": itl_hist.quantile(0.99) if itl_hist.count else 0.0,
             "decode_steps": self.steps - steps_before,
             "preemptions": self.scheduler.preemptions - preempt0,
             "cache_blocks": self.allocator.num_blocks,
@@ -421,6 +476,24 @@ class Runtime:
             "cache_bytes": paged_cache_bytes(
                 self.cfg, self.plan, self.serve_cfg.num_blocks,
                 self.serve_cfg.block_size),
+        }
+
+    # -- observability -------------------------------------------------------
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """Cheap host-side health snapshot for `ft.Heartbeat`: what an
+        operator tailing the watchdog file needs to see mid-run. No
+        device state is touched."""
+        live = sum(blocks_for(int(self._pos[s]), self.serve_cfg.block_size)
+                   for s in range(self.serve_cfg.max_slots)
+                   if self._pos[s] >= 0)
+        return {
+            "retired": len(self.scheduler.completed),
+            "queued": len(self.scheduler.queue),
+            "running": len(self.scheduler.running),
+            "live_occupancy": live / self.allocator.num_blocks,
+            "preemptions": self.scheduler.preemptions,
+            "decode_steps": self.steps,
         }
 
     # -- convenience ---------------------------------------------------------
@@ -437,7 +510,7 @@ class Runtime:
 
 def recover_runtime(params, cfg, plan, journal_dir: str,
                     serve_cfg: ServeConfig = None, injector=None,
-                    fsync: bool = True):
+                    fsync: bool = True, tracer=None, metrics=None):
     """Crash-recovery entry point: rebuild a Runtime from a request
     journal after a process death. Retired requests are never re-run
     (their tokens live in the journal); every in-flight request is
@@ -448,7 +521,7 @@ def recover_runtime(params, cfg, plan, journal_dir: str,
     state = Journal.replay(journal_dir)
     journal = Journal(journal_dir, fsync=fsync)
     rt = Runtime(params, cfg, plan, serve_cfg, journal=journal,
-                 injector=injector)
+                 injector=injector, tracer=tracer, metrics=metrics)
     rt.scheduler.advance_rids(state.max_rid)
     for rid in sorted(state.inflight):
         rec = state.inflight[rid]

@@ -140,9 +140,11 @@ def test_gram_computed_once_per_tap(monkeypatch):
 
 
 def test_layer_report_seconds_reset_per_leaf():
-    """Regression: seconds was measured from one t0 per *layer*, inflating
-    later leaves cumulatively. Each leaf now reports its own solve time, so
-    the per-layer sum must be far below n_leaves × layer wall time."""
+    """Regression: dispatch time was measured from one t0 per *layer*,
+    inflating later leaves cumulatively. Each leaf now reports its own
+    dispatch time, so the per-layer sum must be far below n_leaves ×
+    layer wall time. (`seconds` is the deprecated alias and must keep
+    reading the dispatch field.)"""
     cfg = get_smoke_config("qwen2-7b")
     params = init_params(KEY, cfg, PLAN)
     tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
@@ -150,12 +152,35 @@ def test_layer_report_seconds_reset_per_leaf():
     t0 = _time.time()
     _, report = quantize_model(params, cfg, PLAN, tokens, SPEC)
     wall = _time.time() - t0
-    assert all(r.seconds >= 0.0 for r in report.layers)
+    assert all(r.dispatch_seconds >= 0.0 for r in report.layers)
     # the cumulative-t0 bug multiple-counted solve time (leaf k charged the
     # sum of leaves 1..k), pushing the report total well past wall clock;
     # per-leaf timing keeps the total within the actual elapsed time
-    total = sum(r.seconds for r in report.layers)
+    total = sum(r.dispatch_seconds for r in report.layers)
     assert total <= wall + 1e-6, (total, wall)
+    assert all(r.seconds == r.dispatch_seconds for r in report.layers)
+    # no tracer: the walk stays sync-free, wall time is unmeasured
+    assert all(r.wall_seconds == 0.0 for r in report.layers)
+
+
+def test_layer_report_wall_seconds_with_tracer():
+    """With a tracer the `leaf_solve` span blocks on the solved codes, so
+    every leaf reports a real wall time ≥ its dispatch time, and their
+    total stays within the end-to-end run wall."""
+    from repro.obs import Tracer
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(KEY, cfg, PLAN)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    tr = Tracer(run="wall-test")
+    _, report = quantize_model(params, cfg, PLAN, tokens, SPEC, tracer=tr)
+    assert report.layers
+    assert all(r.wall_seconds > 0.0 for r in report.layers)
+    assert all(r.wall_seconds + 1e-9 >= r.dispatch_seconds
+               for r in report.layers)
+    assert sum(r.wall_seconds for r in report.layers) \
+        <= report.wall_seconds + 1e-6
+    spans = [e for e in tr.events if e["name"] == "leaf_solve"]
+    assert len(spans) > 0 and all(e["ph"] == "X" for e in spans)
 
 
 def test_staged_runs_one_layer_forward_per_layer(monkeypatch):
