@@ -24,6 +24,19 @@
   useful work. Correctness-gated: both policies must emit exactly the
   solo-run tokens for every request. serve/preempt_itl_p99 reports the
   tail inter-token latency cost of the recompute-based resumes.
+* serve/paged_int8_vs_bf16 — the Runtime on int8 KV pages (per-page
+  scales, kv_bits=8) vs bf16 pages, same workload; `derived` =
+  bf16/int8 wall ratio. serve/paged_int8_vs_bf16_bytes reports the
+  pool-bytes ratio (code payload + scale tensors vs bf16 rows),
+  hard-gated >= 1.8x. Token identity is gated on the preempt oracle:
+  int8 must match its own solo runs exactly under mixed + staggered +
+  preempted traffic; 4-bit gates a prefix-agreement drift bound
+  (serve/paged_kv4_prefix_agreement).
+* roofline/kv_bytes_predicted_vs_measured — the analytic
+  bytes-per-decode-token model (roofline/kv_bytes.py) vs the
+  HLO-measured decode-step bytes of the compiled runtime; `derived` =
+  predicted/measured int8-vs-bf16 ratio-of-ratios, hard-gated within
+  [0.75, 1.25] (the ISSUE's 25% accuracy bar).
 """
 from __future__ import annotations
 
@@ -127,6 +140,7 @@ def run():
     m_tok = reg.counter("serve.tokens_emitted")
     m_free = reg.gauge("serve.pool_free_blocks")
     m_occ = reg.gauge("serve.pool_live_occupancy")
+    m_kvb = reg.gauge("serve.pool_kv_bytes")
 
     def obs_step(i):
         # mirror of Runtime.step()'s per-step instrumentation with all
@@ -139,6 +153,7 @@ def run():
             m_tok.inc()
         m_free.set(8)
         m_occ.set(0.5)
+        m_kvb.set(123456)
 
     ev0 = len(tr.events)
     obs_step(0)
@@ -211,4 +226,83 @@ def run():
                  round(occ["preempt"]["itl_p99_s"] * 1e6, 1),
                  round(occ["reserve"]["itl_p99_s"]
                        / max(occ["preempt"]["itl_p99_s"], 1e-9), 3)))
+
+    # --- quantized KV pages: int8 pool vs bf16 pool (DESIGN.md §11) -------
+    # Time row reuses the first section's bf16 paged wall; bytes row is the
+    # pool-accounting ratio (code payload + per-page scales vs bf16 rows),
+    # hard-gated >= 1.8x. Correctness rides the preempt oracle above: the
+    # int8 runtime must emit, under the over-subscribed mixed + staggered
+    # workload with preemption-by-page-reclaim, exactly the tokens its own
+    # solo (one-slot, unpreempted) runs emit — quantization error must be a
+    # pure function of the written pages, never of scheduling history.
+    # 4-bit pages trade exactness for bytes: the same workload gates a
+    # prefix-agreement drift bound instead (rounding at 15 levels shifts
+    # near-tie logits a few steps into some decodes).
+    from repro.serve.kv_cache import paged_cache_bytes
+    plan_q8 = plan.replace(kv_bits=8)
+    t_q8 = _time_runtime(params, cfg, plan_q8, prompts)
+    rows.append(("serve/paged_int8_vs_bf16", round(t_q8 * 1e6, 1),
+                 round(t_paged / t_q8, 3)))
+    b_bf16 = paged_cache_bytes(cfg, plan, N_REQ * 4, 16)
+    b_q8 = paged_cache_bytes(cfg, plan_q8, N_REQ * 4, 16)
+    bytes_ratio = b_bf16 / b_q8
+    assert bytes_ratio >= 1.8, (
+        f"int8 pool bytes reduction {bytes_ratio:.3f}x < 1.8x")
+    rows.append(("serve/paged_int8_vs_bf16_bytes", b_q8,
+                 round(bytes_ratio, 3)))
+
+    for kv_bits, exact in ((8, True), (4, False)):
+        plan_kv = plan.replace(kv_bits=kv_bits)
+        solo_kv_rt = Runtime(params, cfg, plan_kv,
+                             ServeConfig(max_slots=1, block_size=8,
+                                         num_blocks=3, buckets=(8, 16, 32),
+                                         max_blocks_per_slot=3))
+        solo_kv = [solo_kv_rt.generate([p], max_new_tokens=P_MAX_NEW)[0]
+                   for p in mixed]
+        rt = Runtime(params, cfg, plan_kv,
+                     ServeConfig(max_slots=4, block_size=8, num_blocks=8,
+                                 buckets=(8, 16, 32), max_blocks_per_slot=3,
+                                 policy="preempt"))
+        reqs = [rt.submit(p, max_new_tokens=P_MAX_NEW) for p in mixed]
+        rt.run()
+        if exact:
+            for r, want in zip(reqs, solo_kv):
+                np.testing.assert_array_equal(np.asarray(r.out_tokens),
+                                              np.asarray(want))
+        else:
+            agree = []
+            for r, want in zip(reqs, solo_kv):
+                got, want = np.asarray(r.out_tokens), np.asarray(want)
+                n = min(len(got), len(want))
+                same = got[:n] == want[:n]
+                pfx = int(np.argmin(same)) if not same.all() else n
+                agree.append(pfx / P_MAX_NEW)
+            mean_agree = float(np.mean(agree))
+            assert mean_agree >= 0.5, (
+                f"4-bit pages drifted past the tolerance: mean prefix "
+                f"agreement {mean_agree:.3f} < 0.5 ({agree})")
+            rows.append(("serve/paged_kv4_prefix_agreement",
+                         round(mean_agree, 4), round(min(agree), 3)))
+
+    # --- roofline: predicted vs measured decode-step bytes ratio ----------
+    # The analytic byte model (roofline/kv_bytes.py) must predict the
+    # HLO-measured int8-vs-bf16 decode-step bytes ratio within 25%. The
+    # f32-cache config is the one the write-once cost model tracks: with
+    # bf16 pages the CPU backend inserts f32-upcast copies that push the
+    # measured ratio above what any storage-width model can produce.
+    from repro.roofline.kv_bytes import predicted_vs_measured_ratio
+    plan_rf = BuildPlan(remat=False, cache_dtype=jnp.float32)
+    rf_sc = ServeConfig(max_slots=N_REQ, block_size=16, num_blocks=64,
+                        buckets=(PROMPT,), max_blocks_per_slot=16)
+    rf = predicted_vs_measured_ratio(
+        params, cfg, plan_rf, plan_rf.replace(kv_bits=8),
+        max_slots=N_REQ, block_size=16, max_blocks_per_slot=16,
+        num_blocks=64,
+        make_runtime=lambda p: Runtime(params, cfg, p, rf_sc))
+    rr = rf["ratio_of_ratios"]
+    assert 0.75 <= rr <= 1.25, (
+        f"roofline kv-bytes model off by >25%: predicted "
+        f"{rf['predicted']:.3f}x vs measured {rf['measured']:.3f}x")
+    rows.append(("roofline/kv_bytes_predicted_vs_measured",
+                 round(rf["measured"], 3), round(rr, 3)))
     return rows

@@ -8,9 +8,41 @@ solver/colsharded_vs_replicated rows into BENCH_solver.json without
 re-running the whole t9 table; the measurement itself lives in
 benchmarks/runtime_compare.py::colsharded_rows (forced-8-device (2, 4)
 mesh in a subprocess).
+
+Also emits solver/w2_vs_w4_decode_matmul: the decode-shaped (M=4)
+quant_matmul at 2-bit quad-packed (4 codes/byte, the Pallas kernel's
+in-register quad unpack) vs 4-bit nibble-packed. Wall is CPU XLA
+(relative only); `derived` is the weight-byte stream ratio (2.0: the
+2-bit panel is half the 4-bit bytes) that holds on TPU, where the
+kernel's unpack stays in registers instead of materializing.
 """
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
 from benchmarks.runtime_compare import colsharded_rows
+from repro.core.quantizer import pack_codes
+from repro.kernels import ops
+
+
+def _w2_w4_rows():
+    rows = []
+    M, K, N = 4, 2048, 2048
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (M, K), jnp.bfloat16)
+    scale = jnp.full((N,), 0.01)
+    z = jnp.full((N,), 0, jnp.int32)
+    times = {}
+    for bits in (2, 4):
+        u = jax.random.randint(k2, (K, N), 0, 2 ** bits).astype(jnp.uint8)
+        packed, cpb = pack_codes(u, bits)
+        fn = jax.jit(lambda a, c, s, zz, b=bits, cc=cpb: ops.quant_matmul(
+            a, c, s, zz, bits=b, cpb=cc, mode="xla"))
+        _, times[bits] = timed(fn, x, packed, scale, z, repeats=3)
+    rows.append(("solver/w2_vs_w4_decode_matmul", round(times[2], 1),
+                 round((K * N // 2) / (K * N // 4), 1)))
+    return rows
 
 
 def run():
-    return colsharded_rows()
+    return colsharded_rows() + _w2_w4_rows()

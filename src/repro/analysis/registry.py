@@ -7,6 +7,10 @@ checks its `Contract` against the compiled HLO:
 * ``serve.decode_step``    — zero collectives; the paged KV pool
   (positional arg 1) is donated *and actually aliased* — a dropped
   donation would double decode-step HBM traffic without failing a test;
+* ``serve.decode_step_q8`` — the same contract on int8 KV pages
+  (per-page scales dequantized inside the attention); its ``_tp``
+  variant lowers the slot+page-sharded decode on a model-axis mesh and
+  must *still* be collective-free with the sharded pool donated;
 * ``serve.prefill``        — zero collectives (per-bucket program);
 * ``serve.prefill_write``  — pool donated+aliased through the scatter;
 * ``solver.comq_blocked``  — zero collectives; the permuted weights and
@@ -54,26 +58,46 @@ class Entry:
     notes: str = ""
 
 
-def _smoke_serve():
+def _smoke_serve(kv_bits: int = 0, mesh=None):
     """One tiny float32 runtime shared by the serve entries of a run."""
     from repro.configs import get_smoke_config
     from repro.models import BuildPlan, init_params
     from repro.serve import Runtime, ServeConfig
     cfg = get_smoke_config("qwen2-7b").replace(compute_dtype="float32")
-    plan = BuildPlan(remat=False, cache_dtype=jnp.float32)
+    plan = BuildPlan(remat=False, cache_dtype=jnp.float32,
+                     kv_bits=kv_bits)
     params = init_params(jax.random.PRNGKey(0), cfg, plan)
     return Runtime(params, cfg, plan,
                    ServeConfig(max_slots=2, block_size=8, num_blocks=16,
-                               buckets=(8, 16), max_blocks_per_slot=4))
+                               buckets=(8, 16), max_blocks_per_slot=4),
+                   mesh=mesh)
 
 
-def _check_decode() -> List[str]:
-    rt = _smoke_serve()
+def _decode_violations(rt, name: str) -> List[str]:
     B = rt.serve_cfg.max_slots
     args = (rt.params, rt.pool, jnp.zeros((B, rt.maxb), jnp.int32),
             jnp.zeros((B, 1), jnp.int32), jnp.zeros((B,), jnp.int32))
-    con = Contract(name="serve.decode_step", collectives=0, donated=(1,))
+    con = Contract(name=name, collectives=0, donated=(1,))
     return check_lowered(rt._decode, *args, con=con)
+
+
+def _check_decode() -> List[str]:
+    return _decode_violations(_smoke_serve(), "serve.decode_step")
+
+
+def _check_decode_quant() -> List[str]:
+    # int8 pages: the in-kernel dequant (per-page scales folded into the
+    # attention) must not cost the decode step its alias or add traffic
+    return _decode_violations(_smoke_serve(kv_bits=8),
+                              "serve.decode_step_q8")
+
+
+def _check_decode_quant_tp() -> List[str]:
+    import numpy as np
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:2]).reshape(2), ("model",))
+    return _decode_violations(_smoke_serve(kv_bits=8, mesh=mesh),
+                              "serve.decode_step_q8_tp")
 
 
 def _check_prefill() -> List[str]:
@@ -163,6 +187,12 @@ def _check_dist_gram() -> List[str]:
 ENTRIES: Dict[str, Entry] = {e.name: e for e in (
     Entry("serve.decode_step", _check_decode,
           notes="pool donated+aliased, zero collectives"),
+    Entry("serve.decode_step_q8", _check_decode_quant,
+          notes="int8 pages + per-page scales: pool donated+aliased, "
+                "zero collectives, dequant fused into attention"),
+    Entry("serve.decode_step_q8_tp", _check_decode_quant_tp, min_devices=2,
+          notes="slot+page-sharded quantized decode over a model-axis "
+                "mesh: still zero collectives, pool donated"),
     Entry("serve.prefill", _check_prefill, notes="zero collectives"),
     Entry("serve.prefill_write", _check_prefill_write,
           notes="pool donated+aliased through the scatter"),

@@ -172,6 +172,37 @@ def cache_specs(cache_shape: PyTree, mesh: Mesh, global_batch: int) -> PyTree:
     return jax.tree_util.tree_map(one, cache_shape)
 
 
+def paged_runtime_specs(pool: PyTree, mesh: Mesh, max_slots: int,
+                        num_blocks: int) -> Dict[str, Any]:
+    """Specs for the TP-sharded paged serving runtime (DESIGN.md §11).
+
+    Slot+page parallelism over "model": the pool's page dim (dim 1 of
+    every leaf — codes (L, NB, BS, KV, hd) and scales (L, NB, KV) alike)
+    shards together with the batch dim of every per-slot operand, and the
+    partitioned `BlockAllocator` only ever hands a slot pages from its own
+    partition. Each shard therefore decodes its own slots against its own
+    pages: the decode step is pure local compute — zero collectives, pool
+    donated — which is what the `serve.decode_step` contract gate checks.
+    (Head-TP decode could not satisfy that: the wo contraction over
+    sharded heads forces a psum every step.)"""
+    tp = tp_size(mesh)
+    if num_blocks % tp != 0 or max_slots % tp != 0:
+        raise ValueError(
+            f"TP paged runtime needs num_blocks ({num_blocks}) and "
+            f"max_slots ({max_slots}) divisible by the model axis ({tp})")
+
+    def one(x):
+        return P(*([None, "model"] + [None] * (x.ndim - 2)))
+
+    return {
+        "pool": jax.tree_util.tree_map(one, pool),
+        "bt": P("model", None),       # (max_slots, maxb) block tables
+        "tok": P("model", None),      # (max_slots, 1) last tokens
+        "pos": P("model"),            # (max_slots,) write positions
+        "logits": P("model", None),   # (max_slots, V) decode outputs
+    }
+
+
 def make_constrain(mesh: Mesh, global_batch: int, *, seq_shard: bool = False,
                    block_gather: bool = False, ffn_shard: bool = False):
     """Activation-sharding callback for `BuildPlan.constrain`.

@@ -19,7 +19,8 @@ from repro.kernels import ref
 from repro.kernels.comq_panel import (comq_panel_dq_pallas,
                                       comq_panel_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention import (paged_attention_pallas,
+                                           paged_attention_quant_pallas)
 from repro.kernels.quant_matmul import quant_matmul_pallas
 
 Array = jax.Array
@@ -47,13 +48,14 @@ def quant_matmul(x: Array, codes_u: Array, scale: Array, z_lo: Array, *,
 
     `cpb` is the storage density (codes per byte, quantizer.codes_per_byte;
     defaults to the historical rule: nibble-packed iff bits==4). The Pallas
-    kernel covers cpb ∈ {1, 2} — unpacked any-bit codes and nibble-packed
-    3/4-bit codes; the 2-bit 4-per-byte layout takes the XLA fallback
-    (unpack + oracle GEMM) until a quad-unpack kernel exists."""
+    kernel covers every layout — cpb ∈ {1, 2, 4}: unpacked any-bit codes,
+    nibble-packed 3/4-bit codes, and the quad-packed 2-bit 4-per-byte
+    layout (in-register quad unpack, so 2-bit decode streams a quarter of
+    the bytes instead of paying an XLA unpack materialization)."""
     mode = resolve_mode(mode)
     if cpb is None:
         cpb = 2 if bits == 4 else 1
-    if mode == "xla" or cpb == 4:
+    if mode == "xla":
         from repro.core.quantizer import unpack_codes
         u = unpack_codes(codes_u, cpb)
         return ref.quant_matmul_ref(x, u, scale, z_lo, out_dtype=out_dtype)
@@ -102,6 +104,27 @@ def paged_attention(q: Array, k_pool: Array, v_pool: Array,
     return paged_attention_pallas(q, k_pool, v_pool, block_tables, lengths,
                                   window=window,
                                   interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kv_bits", "mode"))
+def paged_attention_quant(q: Array, k_pool: Array, v_pool: Array,
+                          k_scale: Array, v_scale: Array,
+                          block_tables: Array, lengths: Array, *,
+                          window: int = 0, kv_bits: int = 8,
+                          mode: Optional[str] = None) -> Array:
+    """Decode attention over a *quantized* paged pool: k_pool/v_pool hold
+    integer codes (int8 / packed 4-bit) and k_scale/v_scale (NB, KV) the
+    per-(page, kv_head) scales. The Pallas path streams codes and folds
+    the scales inside the kernel; `xla` takes the dequantizing oracle."""
+    mode = resolve_mode(mode)
+    if mode == "xla":
+        return ref.paged_attention_quant_ref(
+            q, k_pool, v_pool, k_scale, v_scale, block_tables, lengths,
+            window=window, kv_bits=kv_bits).astype(q.dtype)
+    return paged_attention_quant_pallas(q, k_pool, v_pool, k_scale, v_scale,
+                                        block_tables, lengths, window=window,
+                                        kv_bits=kv_bits,
+                                        interpret=(mode == "interpret"))
 
 
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,

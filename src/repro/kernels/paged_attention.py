@@ -71,6 +71,119 @@ def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def _quant_kernel(bt_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, bs: int, n_blocks: int,
+                  scale: float, window: int, n_kv: int, group: int,
+                  kv_bits: int):
+    """Quantized-pool variant: k_ref/v_ref stream integer codes (int8, or
+    packed 4-bit nibble pairs) and the per-(page, kv_head) scales arrive
+    as extra scalar-prefetch operands. Codes unpack in VMEM registers and
+    the scales fold into the online-softmax inputs (scores) and the PV
+    accumulation — K/V never materialize dequantized in HBM."""
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    H = n_kv * group
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    def dequant(codes):
+        if kv_bits == 8:
+            return codes.astype(jnp.float32)
+        lo = codes & jnp.uint8(0x0F)
+        hi = (codes >> 4) & jnp.uint8(0x0F)
+        un = jnp.stack([lo, hi], axis=-1).reshape(bs, n_kv, -1)
+        return un.astype(jnp.float32) - 8.0
+
+    @pl.when(i * bs < length)
+    def _compute():
+        page = bt_ref[b, i]
+        # one SMEM scalar read per kv head: the page's K and V scales
+        ks = jnp.stack([ks_ref[page, j] for j in range(n_kv)])
+        vs = jnp.stack([vs_ref[page, j] for j in range(n_kv)])
+        q = q_ref[0].astype(jnp.float32).reshape(n_kv, group, -1)
+        k = dequant(k_ref[0])                         # (bs, KV, hd) codes
+        s = jnp.einsum("kgh,skh->kgs", q, k,
+                       preferred_element_type=jnp.float32) \
+            * (scale * ks)[:, None, None]
+        kpos = i * bs + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (n_kv, group, bs), 2)
+        mask = kpos < length
+        if window > 0:   # query sits at position length-1
+            mask = jnp.logical_and(mask, (length - 1) - kpos < window)
+        s = jnp.where(mask, s, NEG_INF).reshape(H, bs)
+        m_prev = m_ref[...]                           # (H, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        v = dequant(v_ref[0])
+        pv = jnp.einsum("kgs,skh->kgh", p.reshape(n_kv, group, bs), v,
+                        preferred_element_type=jnp.float32) \
+            * vs[:, None, None]
+        acc_ref[...] = acc_ref[...] * corr + pv.reshape(H, -1)
+        m_ref[...] = m_new
+
+    @pl.when(i == n_blocks - 1)
+    def _epilogue():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_quant_pallas(q: Array, k_pool: Array, v_pool: Array,
+                                 k_scale: Array, v_scale: Array,
+                                 block_tables: Array, lengths: Array, *,
+                                 window: int = 0, kv_bits: int = 8,
+                                 interpret: bool = False) -> Array:
+    """Quantized-pool paged attention: k_pool/v_pool (NB, BS, KV, hd/cpb)
+    integer codes, k_scale/v_scale (NB, KV) f32 per-page scales riding as
+    scalar-prefetch operands 3/4. Same grid/softmax structure as the bf16
+    kernel; returns (B, Hp, hd) in q.dtype."""
+    B, H, hd = q.shape
+    NB, BS, KV, _ = k_pool.shape
+    MAXB = block_tables.shape[1]
+    assert H % KV == 0, "pallas paged kernel needs grouped GQA (Hp % KV == 0)"
+    assert kv_bits in (4, 8)
+    group = H // KV
+    hdp = k_pool.shape[3]
+    scale = 1.0 / float(hd) ** 0.5
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, MAXB),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, i, bt, ln, ks, vs: (b, 0, 0)),
+            pl.BlockSpec((1, BS, KV, hdp),
+                         lambda b, i, bt, ln, ks, vs: (bt[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, BS, KV, hdp),
+                         lambda b, i, bt, ln, ks, vs: (bt[b, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd),
+                               lambda b, i, bt, ln, ks, vs: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, bs=BS, n_blocks=MAXB, scale=scale,
+                          window=window, n_kv=KV, group=group,
+                          kv_bits=kv_bits),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+      q, k_pool, v_pool)
+
+
 def paged_attention_pallas(q: Array, k_pool: Array, v_pool: Array,
                            block_tables: Array, lengths: Array, *,
                            window: int = 0,

@@ -27,7 +27,7 @@ Array = jax.Array
 
 
 def _kernel(x_ref, u_ref, scale_ref, z_ref, o_ref, acc_ref, rsum_ref, *,
-            n_k: int, packed: bool, out_dtype):
+            n_k: int, cpb: int, out_dtype):
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -36,11 +36,19 @@ def _kernel(x_ref, u_ref, scale_ref, z_ref, o_ref, acc_ref, rsum_ref, *,
         rsum_ref[...] = jnp.zeros_like(rsum_ref)
 
     x = x_ref[...]                                    # (bm, bk)
-    u = u_ref[...]                                    # (bk, bn) or (bk, bn//2)
-    if packed:
+    u = u_ref[...]                                    # (bk, bn // cpb)
+    if cpb == 2:
         lo = (u & jnp.uint8(0x0F)).astype(jnp.uint8)
         hi = ((u >> 4) & jnp.uint8(0x0F)).astype(jnp.uint8)
         u = jnp.stack([lo, hi], axis=-1).reshape(u.shape[0], u.shape[1] * 2)
+    elif cpb == 4:
+        # quad unpack: four 2-bit fields per byte, lowest bits first
+        # (quantizer.pack_int2 layout) — in-register, so the 2-bit path
+        # streams 0.25 B/code from HBM instead of XLA-materializing the
+        # unpacked codes
+        parts = [((u >> (2 * i)) & jnp.uint8(0x03)).astype(jnp.uint8)
+                 for i in range(4)]
+        u = jnp.stack(parts, axis=-1).reshape(u.shape[0], u.shape[1] * 4)
     xw = x.astype(jnp.bfloat16)
     uw = u.astype(jnp.bfloat16)
     acc_ref[...] += jax.lax.dot(xw, uw,
@@ -60,31 +68,31 @@ def quant_matmul_pallas(x: Array, codes_u: Array, scale: Array, z_lo: Array,
                         bm: int = 128, bn: int = 128,
                         bk: int = 512, out_dtype=jnp.float32,
                         interpret: bool = False) -> Array:
-    """x: (M, K) float; codes_u: (K, N) uint8 unpacked (cpb=1) or (K, N//2)
-    nibble-packed (cpb=2 — 3/4-bit codes); scale/z_lo: (N,). Returns
-    (M, N). cpb defaults from bits (packed iff bits==4); the 2-bit
-    four-per-byte layout is not kernelized — kernels/ops.quant_matmul
-    routes it to the XLA fallback."""
+    """x: (M, K) float; codes_u: (K, N/cpb) uint8 — unpacked (cpb=1),
+    nibble-packed 3/4-bit (cpb=2) or quad-packed 2-bit (cpb=4);
+    scale/z_lo: (N,). Returns (M, N). cpb defaults from bits (packed iff
+    bits==4); every stored layout unpacks in-register."""
     M, K = x.shape
     if cpb is None:
         cpb = 2 if bits == 4 else 1
-    assert cpb in (1, 2), f"pallas quant_matmul covers cpb 1/2, got {cpb}"
-    packed = cpb == 2
+    assert cpb in (1, 2, 4), \
+        f"pallas quant_matmul covers cpb 1/2/4, got {cpb}"
     N = codes_u.shape[1] * cpb
     bm = min(bm, M)
     bn = min(bn, N)
     bk = min(bk, K)
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
         f"shape ({M},{K},{N}) not divisible by blocks ({bm},{bk},{bn})"
+    assert bn % cpb == 0, f"bn={bn} must align to cpb={cpb}"
     n_k = K // bk
-    un = bn // 2 if packed else bn
+    un = bn // cpb
 
     scale2 = scale.reshape(1, N).astype(jnp.float32)
     z2 = z_lo.reshape(1, N).astype(jnp.float32)
 
     grid = (M // bm, N // bn, n_k)
     return pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, packed=packed,
+        functools.partial(_kernel, n_k=n_k, cpb=cpb,
                           out_dtype=out_dtype),
         grid=grid,
         in_specs=[

@@ -60,6 +60,23 @@ def paged_attention_ref(q: Array, k_pool: Array, v_pool: Array,
     return jnp.einsum("bkgs,bskh->bkgh", p, vg).reshape(B, H, hd)
 
 
+def paged_attention_quant_ref(q: Array, k_pool: Array, v_pool: Array,
+                              k_scale: Array, v_scale: Array,
+                              block_tables: Array, lengths: Array, *,
+                              window: int = 0, kv_bits: int = 8) -> Array:
+    """Quantized-pool oracle: k_pool/v_pool hold integer codes
+    (NB, BS, KV, hd/cpb — int8, or packed 4-bit nibble pairs) with one f32
+    scale per (page, kv_head) in k_scale/v_scale (NB, KV). Dequantizes
+    page-wise with `serve.kv_cache.kv_decode` and delegates to the bf16
+    oracle — the ground truth both the Pallas in-kernel dequant and the
+    XLA gather fallback must match."""
+    from repro.serve.kv_cache import kv_decode
+    kd = kv_decode(k_pool, k_scale[:, None], kv_bits)   # (NB, BS, KV, hd)
+    vd = kv_decode(v_pool, v_scale[:, None], kv_bits)
+    return paged_attention_ref(q, kd, vd, block_tables, lengths,
+                               window=window)
+
+
 def comq_panel_ref(h_bb: Array, s0: Array, qf: Array, delta: Array,
                    z_lo: Array, z_hi: Array, hdiag: Array) -> Array:
     """Intra-panel COMQ sweep oracle — delegates to the core reference."""

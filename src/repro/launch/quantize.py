@@ -149,9 +149,15 @@ def main():
     elif parsed is not None:
         spec = parsed
     if spec is not base and spec.kv_bits:
-        if spec.kv_bits != 8:
-            raise SystemExit(f"kv={spec.kv_bits} unsupported (0 or 8)")
-        plan = plan.replace(cache_quant=True)
+        if spec.kv_bits not in (4, 8):
+            raise SystemExit(f"kv={spec.kv_bits} unsupported (0, 4 or 8)")
+        if spec.kv_bits == 8:
+            # dense eval cache quantizes per-entry at int8 (core/apply.py)
+            plan = plan.replace(cache_quant=True)
+        # the paged runtime consumes the same rider as page codes with
+        # per-(layer, page, kv_head) scales (serve --kv-bits; 4-bit has no
+        # dense-cache analogue, so eval there runs bf16 caches)
+        plan = plan.replace(kv_bits=spec.kv_bits)
     mesh = None
     if args.shard_solve:
         from repro.dist import calib_mesh

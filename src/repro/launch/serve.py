@@ -103,6 +103,11 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="0 -> sized for num_requests at full length")
+    ap.add_argument("--kv-bits", type=int, default=0, choices=(0, 4, 8),
+                    help="quantize the paged KV pool: 8/4-bit page codes "
+                         "with per-(layer, page, kv_head) scales, "
+                         "dequantized inside the attention kernel "
+                         "(0 = bf16 pages; paged engine only)")
     ap.add_argument("--admission", choices=("preempt", "reserve"),
                     default="preempt",
                     help="preempt: incremental pages + preemption-by-page-"
@@ -141,6 +146,12 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     plan = BuildPlan(remat=False)
+    if args.kv_bits:
+        if args.engine == "static":
+            print("note: --kv-bits quantizes the paged pool; the static "
+                  "engine's dense cache ignores it")
+        else:
+            plan = plan.replace(kv_bits=args.kv_bits)
     if args.engine == "paged" and (cfg.attn_free or cfg.parallel_ssm_heads
                                    or cfg.family == "vlm"):
         print(f"note: {cfg.family}/attention-free archs use the dense-"
@@ -237,6 +248,13 @@ def main():
                             buckets=(bucket // 4, bucket // 2, bucket),
                             max_blocks_per_slot=maxb,
                             policy=args.admission)
+    if plan.kv_bits:
+        from repro.serve import paged_cache_bytes
+        pool_b = paged_cache_bytes(cfg, plan, num_blocks, args.block_size)
+        bf16_b = paged_cache_bytes(cfg, plan.replace(kv_bits=0),
+                                   num_blocks, args.block_size)
+        print(f"kv pages: int{plan.kv_bits} pool {pool_b:,} bytes vs "
+              f"{bf16_b:,} bf16 ({bf16_b / pool_b:.2f}x smaller)")
     injector = FaultInjector.parse(args.inject) if args.inject else None
     # observability (DESIGN.md §10): absent flags keep the runtime on the
     # zero-cost null singletons (the static-engine branch returned above)

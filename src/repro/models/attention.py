@@ -518,3 +518,101 @@ def paged_decode_attend(q: Array, k_pool: Array, v_pool: Array,
     return _dense_attention(q, kg, vg, head_map, causal=True, window=window,
                             q_positions=qp, kv_positions=kpos,
                             kv_valid=valid)
+
+
+def paged_insert_quant(k_pool: Array, v_pool: Array, k_scale: Array,
+                       v_scale: Array, k_new: Array, v_new: Array,
+                       block_tables: Array, pos: Array, *, kv_bits: int):
+    """Write one token per slot into a *quantized* pool (decode append).
+
+    k_pool/v_pool: (NB, BS, KV, hd/cpb) integer codes; k_scale/v_scale:
+    (NB, KV) f32 per-(page, kv_head) scales; k_new/v_new: (B, 1, KV, hd)
+    float; pos: (B,), -1 = inactive (write dropped).
+
+    The page scale is a running max: appending a token with a larger
+    absmax raises the page scale, and the page's existing codes rescale
+    in-register by old/new (exact identity when the scale is unchanged —
+    the common case — and at most one code unit of double-rounding when it
+    grows). A token landing at page offset 0 starts a fresh page: the old
+    scale/codes belong to a freed request and are overwritten, not
+    maxed."""
+    from repro.serve.kv_cache import _kv_qmax, kv_encode, kv_scale_of
+    NB, BS = k_pool.shape[0], k_pool.shape[1]
+    B = pos.shape[0]
+    qmax = _kv_qmax(kv_bits)
+    safe = jnp.maximum(pos, 0)
+    phys = jnp.take_along_axis(block_tables, (safe // BS)[:, None],
+                               axis=1)[:, 0]
+    off = safe % BS
+    dest = jnp.where(pos >= 0, phys, NB)             # OOB page -> drop
+    fresh = (off == 0)[:, None]                      # (B, 1)
+    out = []
+    for pool, scale, new in ((k_pool, k_scale, k_new),
+                             (v_pool, v_scale, v_new)):
+        row = new[:, 0].astype(jnp.float32)          # (B, KV, hd)
+        s_tok = kv_scale_of(jnp.max(jnp.abs(row), axis=-1), kv_bits)
+        old = scale[phys]                            # (B, KV)
+        s_new = jnp.where(fresh, s_tok, jnp.maximum(old, s_tok))
+        # rescale the page's existing codes to the (possibly) raised
+        # scale; ratio 0 wipes a fresh page's stale codes outright
+        ratio = jnp.where(fresh | (s_new <= 0), 0.0,
+                          old / jnp.where(s_new > 0, s_new, 1.0))
+        page = pool[phys]                            # (B, BS, KV, hd/cpb)
+        if kv_bits == 8:
+            pq = page.astype(jnp.float32) * ratio[:, None, :, None]
+            page2 = jnp.clip(jnp.round(pq), -qmax, qmax).astype(jnp.int8)
+        else:
+            from repro.core.quantizer import pack_int4, unpack_int4
+            pq = (unpack_int4(page).astype(jnp.float32) - 8.0) \
+                * ratio[:, None, :, None]
+            pq = jnp.clip(jnp.round(pq), -qmax, qmax)
+            page2 = pack_int4((pq + 8.0).astype(jnp.uint8))
+        tok = kv_encode(row, s_new, kv_bits)         # (B, KV, hd/cpb)
+        at_off = jnp.arange(BS)[None, :, None, None] \
+            == off[:, None, None, None]
+        page2 = jnp.where(at_off, tok[:, None], page2)
+        out.append(pool.at[dest].set(page2, mode="drop"))
+        out.append(scale.at[dest].set(s_new, mode="drop"))
+    return tuple(out)  # (k_pool, k_scale, v_pool, v_scale)
+
+
+def paged_decode_attend_quant(q: Array, k_pool: Array, v_pool: Array,
+                              k_scale: Array, v_scale: Array,
+                              block_tables: Array, lengths: Array,
+                              head_map: Array, *, window: int = 0,
+                              kv_bits: int = 8,
+                              mode: Optional[str] = None) -> Array:
+    """Quantized-pool decode attention. Pallas/interpret streams the codes
+    and folds the per-page scales inside the kernel; the XLA fallback
+    gathers codes + per-row scales, dequantizes, and runs the same
+    `_dense_attention` as the bf16 fallback — elementwise it is exactly
+    the bf16 fallback applied to the dequantized pool."""
+    from repro.serve.kv_cache import kv_decode
+    H, KV = q.shape[2], k_pool.shape[2]
+    if mode is None:
+        from repro.kernels.ops import resolve_mode
+        mode = resolve_mode(None)
+    if mode in ("pallas", "interpret") and H % KV == 0:
+        from repro.kernels import ops
+        o = ops.paged_attention_quant(q[:, 0], k_pool, v_pool, k_scale,
+                                      v_scale, block_tables, lengths,
+                                      window=window, kv_bits=kv_bits,
+                                      mode=mode)
+        return o[:, None].astype(q.dtype)
+    BS = k_pool.shape[1]
+    B, MAXB = block_tables.shape
+    # per-row scales in logical order: page scale repeated over the page
+    ks_rows = jnp.repeat(k_scale[block_tables], BS,
+                         axis=1)                     # (B, MAXB*BS, KV)
+    vs_rows = jnp.repeat(v_scale[block_tables], BS, axis=1)
+    kg = kv_decode(paged_gather(k_pool, block_tables), ks_rows, kv_bits,
+                   dtype=q.dtype)
+    vg = kv_decode(paged_gather(v_pool, block_tables), vs_rows, kv_bits,
+                   dtype=q.dtype)
+    S = kg.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    valid = kpos < lengths[:, None]
+    qp = jnp.maximum(lengths - 1, 0)[:, None].astype(jnp.int32)
+    return _dense_attention(q, kg, vg, head_map, causal=True, window=window,
+                            q_positions=qp, kv_positions=kpos,
+                            kv_valid=valid)

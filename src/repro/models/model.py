@@ -428,18 +428,35 @@ def decode_step_paged(p: Params, cfg, plan: BuildPlan, pool, block_tables,
     x = embed_tokens(p, cfg, plan, tokens)
     cd = dtype_of(cfg.compute_dtype)
 
-    def body(x, xs):
-        lp, kl, vl = xs
-        lp = dequantize_qt_tree(lp, cd, keep_fused=True)
-        x, kl, vl = tfm.layer_decode_paged(lp, x, cfg, plan, kl, vl,
-                                           block_tables, pos)
-        return plan.constrain(x, "residual"), (kl, vl)
+    if plan.kv_bits:
+        # quantized pool: per-(layer, page, kv_head) scales ride the scan
+        # as two extra per-layer operands (DESIGN.md §11)
+        def body(x, xs):
+            lp, kl, vl, ksl, vsl = xs
+            lp = dequantize_qt_tree(lp, cd, keep_fused=True)
+            x, kl, vl, ksl, vsl = tfm.layer_decode_paged(
+                lp, x, cfg, plan, kl, vl, block_tables, pos, ksl, vsl)
+            return plan.constrain(x, "residual"), (kl, vl, ksl, vsl)
 
-    x, (nk, nv) = scan_layers(body, x, p["layers"], pool["k"], pool["v"])
+        x, (nk, nv, nks, nvs) = scan_layers(
+            body, x, p["layers"], pool["k"], pool["v"],
+            pool["k_scale"], pool["v_scale"])
+        new_pool = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+    else:
+        def body(x, xs):
+            lp, kl, vl = xs
+            lp = dequantize_qt_tree(lp, cd, keep_fused=True)
+            x, kl, vl = tfm.layer_decode_paged(lp, x, cfg, plan, kl, vl,
+                                               block_tables, pos)
+            return plan.constrain(x, "residual"), (kl, vl)
+
+        x, (nk, nv) = scan_layers(body, x, p["layers"], pool["k"],
+                                  pool["v"])
+        new_pool = {"k": nk, "v": nv}
     from repro.models.common import apply_norm
     x = apply_norm(p["final_norm"], x, cfg)
     logits = unembed(p, cfg, plan, x)
-    return logits[:, 0], {"k": nk, "v": nv}
+    return logits[:, 0], new_pool
 
 
 # ---------------------------------------------------------------------------

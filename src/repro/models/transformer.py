@@ -49,6 +49,9 @@ class BuildPlan:
     remat: bool = True
     cache_dtype: Any = jnp.bfloat16
     cache_quant: bool = False    # int8 KV cache (per-entry absmax scales)
+    # paged-pool KV quantization (serve runtime): 0 = bf16 pages, 8/4 =
+    # integer codes with per-(layer, page, kv_head) scales (DESIGN.md §11)
+    kv_bits: int = 0
     # prefill cache capacity (0 -> prompt length); serving engines set
     # prompt+max_new so decode can continue without ring eviction
     prefill_cache_len: int = 0
@@ -310,7 +313,8 @@ def _decode_ffn(p: dict, x: Array, cfg, plan: BuildPlan) -> Array:
 
 def layer_decode_paged(p: dict, x: Array, cfg, plan: BuildPlan,
                        k_pool: Array, v_pool: Array, block_tables: Array,
-                       pos: Array):
+                       pos: Array, k_scale: Optional[Array] = None,
+                       v_scale: Optional[Array] = None):
     """One decode step against the paged KV pool (serve/kv_cache.py).
 
     x: (B, 1, d); k_pool/v_pool: this layer's (NB, BS, KV, hd) pages;
@@ -318,7 +322,13 @@ def layer_decode_paged(p: dict, x: Array, cfg, plan: BuildPlan,
     write position per slot, -1 = inactive (write dropped, output garbage
     that the runtime masks). Unlike `layer_decode`, positions are per-slot
     vectors — slots sit at different sequence lengths (continuous batching).
-    Returns (x, k_pool, v_pool)."""
+    Returns (x, k_pool, v_pool).
+
+    With `plan.kv_bits` set the pools hold integer codes and
+    k_scale/v_scale (NB, KV) carry the per-(page, kv_head) scales: the
+    append re-quantizes under a running-max page scale and attention
+    dequantizes in-kernel (or in the gather fallback). Returns
+    (x, k_pool, v_pool, k_scale, v_scale) in that case."""
     hp = plan.heads_padded(cfg)
     hmap = head_to_kv_map(cfg.n_heads, hp, cfg.n_kv_heads)
     xn = apply_norm(p["ln1"], x, cfg)
@@ -326,8 +336,18 @@ def layer_decode_paged(p: dict, x: Array, cfg, plan: BuildPlan,
     posb = jnp.maximum(pos, 0)[:, None]                   # (B, 1)
     q = apply_rope(q, posb, cfg.rope_theta)
     k = apply_rope(k, posb, cfg.rope_theta)
-    k_pool, v_pool = paged_insert(k_pool, v_pool, k, v, block_tables, pos)
     lengths = jnp.maximum(pos + 1, 0)
+    if plan.kv_bits:
+        k_pool, k_scale, v_pool, v_scale = attn_mod.paged_insert_quant(
+            k_pool, v_pool, k_scale, v_scale, k, v, block_tables, pos,
+            kv_bits=plan.kv_bits)
+        o = attn_mod.paged_decode_attend_quant(
+            q, k_pool, v_pool, k_scale, v_scale, block_tables, lengths,
+            hmap, window=cfg.sliding_window, kv_bits=plan.kv_bits)
+        x = x + attn_mod.out_project(p["attn"], o)
+        x = x + _decode_ffn(p, x, cfg, plan)
+        return x, k_pool, v_pool, k_scale, v_scale
+    k_pool, v_pool = paged_insert(k_pool, v_pool, k, v, block_tables, pos)
     o = paged_decode_attend(q, k_pool, v_pool, block_tables, lengths, hmap,
                             window=cfg.sliding_window)
     x = x + attn_mod.out_project(p["attn"], o)

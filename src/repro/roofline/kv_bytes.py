@@ -1,0 +1,166 @@
+"""Bytes-per-decode-token model for the paged serving runtime.
+
+Analytic companion to the HLO cost parser (`roofline/analysis.py`): where
+`hlo_cost` measures what a *compiled* decode program touches, this module
+predicts the same per-step HBM traffic from first principles — so the
+`roofline/kv_bytes_predicted_vs_measured` bench row can gate that the two
+agree, and DESIGN.md §11's accounting table has a source of truth.
+
+The byte model mirrors the parser's write-once discipline:
+
+* weights stream from HBM once per decode step (decode is weight-bound at
+  batch ~slots: every matmul re-reads its weight panel);
+* the paged pool's page *codes* and per-(layer, page, kv_head) scales are
+  the only KV read traffic — dequantization folds into the attention
+  (in-kernel on the Pallas path, a fused convert on the gather fallback),
+  so quantized pages cut the KV term by 8/kv_bits vs the bf16 pool, which
+  is the whole point of the tentpole;
+* the decode append rewrites the touched page (the quantized insert
+  rescales the page in-register: one page read + one page write per
+  layer/slot; the bf16 insert only writes the new row);
+* the gather fallback ("xla" mode) walks every block-table slot — MAXB
+  pages per slot regardless of live length — while the Pallas kernel
+  ("pallas") DMAs only the pages the slot's length covers.
+
+Activations are deliberately excluded: at decode (T=1) they are VMEM/
+register-resident between the HBM-counted tensors in the TPU-shaped
+program, and the one materialized output (logits) is counted explicitly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def pool_elem_bytes(plan) -> float:
+    """Bytes per stored K/V element: code width under `plan.kv_bits`,
+    cache dtype width otherwise."""
+    kv_bits = int(getattr(plan, "kv_bits", 0) or 0)
+    if kv_bits:
+        return kv_bits / 8.0
+    return float(jnp.dtype(plan.cache_dtype).itemsize)
+
+
+def weight_stream_bytes(params) -> int:
+    """Per-step weight traffic: every leaf streams once. Works on real
+    arrays or `jax.eval_shape` structs."""
+    return int(sum(math.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree_util.tree_leaves(params)))
+
+
+def decode_kv_bytes(cfg, plan, *, max_slots: int, block_size: int,
+                    max_blocks_per_slot: int, num_blocks: int = 0,
+                    mode: str = "xla",
+                    live_tokens: Optional[int] = None) -> Dict[str, float]:
+    """Per-decode-step KV traffic (bytes), by term.
+
+    "pallas" is the TPU-shaped truth: the kernel DMAs only the live pages'
+    codes + scales (bounded by `live_tokens`), and the append touches one
+    page per slot. "xla" counts what the gather-fallback program
+    *materializes* under the write-once cost model — the same accounting
+    `hlo_cost` applies to the compiled decode step, which is what the
+    predicted-vs-measured bench row compares against: gather outputs at
+    storage width for every table slot, the compute-width attention
+    operand the dequant/convert produces, and the insert scatter's
+    full-buffer output (XLA scatter writes the whole result tensor;
+    `num_blocks` sizes it — required for "xla" mode)."""
+    kv_bits = int(getattr(plan, "kv_bits", 0) or 0)
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim
+    B, BS, maxb = max_slots, block_size, max_blocks_per_slot
+    eb = pool_elem_bytes(plan)
+    if mode == "pallas":
+        pages = maxb
+        if live_tokens is not None:
+            pages = min(maxb, max(1, math.ceil(live_tokens / BS)))
+        codes = 2.0 * L * B * pages * BS * KV * hd * eb
+        scales = 2.0 * L * B * pages * KV * 4.0 if kv_bits else 0.0
+        if kv_bits:
+            # the quantized append rescales the slot's tail page
+            # in-register: page read + page write + its scale row
+            append = 2.0 * L * B * 2.0 * (BS * KV * hd * eb + KV * 4.0)
+        else:
+            append = 2.0 * L * B * KV * hd * eb   # one row per slot
+        materialize = 0.0                          # stays in VMEM
+    else:
+        if not num_blocks:
+            raise ValueError("xla mode needs num_blocks (scatter output)")
+        # gather output: every table slot, at storage width
+        codes = 2.0 * L * B * maxb * BS * KV * hd * eb
+        scales = 2.0 * L * B * maxb * KV * 4.0 if kv_bits else 0.0
+        # dense attention consumes a compute-width K/V copy (the fused
+        # dequant/convert's materialized output)
+        cw = 4.0
+        materialize = 2.0 * L * B * maxb * BS * KV * hd * cw
+        # insert scatter writes the whole pool buffer per layer
+        append = 2.0 * L * num_blocks * BS * KV * hd * eb
+        if kv_bits:
+            append += 2.0 * L * num_blocks * KV * 4.0
+    if mode == "xla":
+        # the layer scan carries the pool as loop state: the compiled
+        # while loop materializes a copy of the carried buffers once per
+        # step (visible as copy ops in the lowered program)
+        carry = 2.0 * L * num_blocks * BS * KV * hd * eb
+        if kv_bits:
+            carry += 2.0 * L * num_blocks * KV * 4.0
+    else:
+        carry = 0.0                                # donated, in-place
+    total = codes + scales + append + materialize + carry
+    return {"codes": codes, "scales": scales, "append": append,
+            "materialize": materialize, "carry": carry, "kv_total": total}
+
+
+def decode_step_bytes(params, cfg, plan, *, max_slots: int, block_size: int,
+                      max_blocks_per_slot: int, num_blocks: int = 0,
+                      mode: str = "xla",
+                      live_tokens: Optional[int] = None) -> Dict[str, float]:
+    """Predicted total HBM bytes for one decode step (all slots), plus the
+    per-token figure the roofline quotes."""
+    kv = decode_kv_bytes(cfg, plan, max_slots=max_slots,
+                         block_size=block_size,
+                         max_blocks_per_slot=max_blocks_per_slot,
+                         num_blocks=num_blocks, mode=mode,
+                         live_tokens=live_tokens)
+    weights = float(weight_stream_bytes(params))
+    logits = float(max_slots * cfg.vocab_size * 4)
+    total = weights + kv["kv_total"] + logits
+    out = dict(kv)
+    out.update({"weights": weights, "logits": logits, "total": total,
+                "per_token": total / max_slots})
+    return out
+
+
+def measured_decode_bytes(rt) -> float:
+    """HLO-measured bytes of a runtime's decode program (write-once cost
+    model, `roofline.analysis.hlo_cost`). Pass a *fresh* Runtime — this
+    lowers+compiles the decode step, which spends its one-trace budget."""
+    from repro.roofline.analysis import hlo_cost
+    B = rt.serve_cfg.max_slots
+    args = (rt.params, rt.pool, jnp.zeros((B, rt.maxb), jnp.int32),
+            jnp.zeros((B, 1), jnp.int32), jnp.zeros((B,), jnp.int32))
+    compiled = rt._decode.lower(*args).compile()
+    return float(hlo_cost(compiled.as_text()).bytes_accessed)
+
+
+def predicted_vs_measured_ratio(params, cfg, plan_bf16, plan_quant, *,
+                                max_slots: int, block_size: int,
+                                max_blocks_per_slot: int, num_blocks: int,
+                                make_runtime) -> Dict[str, float]:
+    """The bench gate: predicted vs HLO-measured int8(or 4-bit)-vs-bf16
+    decode-step bytes ratio. `make_runtime(plan)` must return a fresh
+    Runtime for the given plan (the caller owns ServeConfig choices)."""
+    kw = dict(max_slots=max_slots, block_size=block_size,
+              max_blocks_per_slot=max_blocks_per_slot,
+              num_blocks=num_blocks)
+    pred_b = decode_step_bytes(params, cfg, plan_bf16, **kw)["total"]
+    pred_q = decode_step_bytes(params, cfg, plan_quant, **kw)["total"]
+    meas_b = measured_decode_bytes(make_runtime(plan_bf16))
+    meas_q = measured_decode_bytes(make_runtime(plan_quant))
+    predicted = pred_b / pred_q
+    measured = meas_b / meas_q
+    return {"predicted": predicted, "measured": measured,
+            "pred_bytes_bf16": pred_b, "pred_bytes_quant": pred_q,
+            "meas_bytes_bf16": meas_b, "meas_bytes_quant": meas_q,
+            "ratio_of_ratios": predicted / measured}

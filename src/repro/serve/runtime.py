@@ -71,20 +71,36 @@ class Runtime:
 
     def __init__(self, params, cfg, plan, serve_cfg: ServeConfig = None,
                  journal: Optional[Journal] = None, injector=None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, mesh=None):
         if cfg.attn_free or cfg.parallel_ssm_heads or cfg.family == "vlm":
             raise NotImplementedError(
                 f"paged runtime does not cover family={cfg.family!r} / "
                 "attention-free / parallel-ssm archs — use serve.Engine")
-        if plan.cache_quant:
-            raise NotImplementedError(
-                "int8 KV quantization is dense-cache only for now "
-                "(ROADMAP open item); use serve.Engine")
+        # Quantized pages (DESIGN.md §11): a `kv=` policy rider on the
+        # paged path means integer page codes + per-(layer, page, kv_head)
+        # scales, not the dense engine's per-slot int8 cache — so the plan
+        # the prefill programs see must produce bf16 rows (cache_quant
+        # off) for write_prefill to quantize page-wise on the way in.
+        kv_bits = int(getattr(plan, "kv_bits", 0) or 0)
+        if plan.cache_quant and kv_bits == 0:
+            kv_bits = 8
+        if kv_bits not in (0, 4, 8):
+            raise ValueError(f"kv_bits must be 0, 4 or 8, got {kv_bits}")
+        if kv_bits:
+            plan = plan.replace(cache_quant=False, kv_bits=kv_bits)
+        self.kv_bits = kv_bits
         self.params = params
         self.cfg = cfg
         self.plan = plan
         sc = serve_cfg or ServeConfig()
         self.serve_cfg = sc
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.dist.sharding import tp_size
+            tp = tp_size(mesh)
+        else:
+            tp = 1
+        self._tp = tp
         self.journal = journal
         self.injector = injector
         # observability (DESIGN.md §10): null singletons when disabled, so
@@ -103,11 +119,13 @@ class Runtime:
         self._m_resumes = self.metrics.counter("serve.resumes")
         self._m_free = self.metrics.gauge("serve.pool_free_blocks")
         self._m_occ = self.metrics.gauge("serve.pool_live_occupancy")
+        self._m_pool_bytes = self.metrics.gauge("serve.pool_kv_bytes")
 
         fail_hook = None
         if injector is not None:
             fail_hook = lambda: injector.fire("page_alloc")  # noqa: E731
-        self.allocator = BlockAllocator(sc.num_blocks, fail_hook=fail_hook)
+        self.allocator = BlockAllocator(sc.num_blocks, fail_hook=fail_hook,
+                                        partitions=tp)
         self.scheduler = Scheduler(sc.max_slots, self.allocator,
                                    buckets=sc.buckets,
                                    block_size=sc.block_size,
@@ -115,6 +133,18 @@ class Runtime:
                                    policy=sc.policy)
         self.maxb = self.scheduler.max_blocks_per_slot
         self.pool = init_paged_cache(cfg, plan, sc.num_blocks, sc.block_size)
+        # bytes per live page (codes + its share of the scale rows) — the
+        # pool-bytes gauge below is a host multiply, never a device sync
+        self._page_bytes = paged_cache_bytes(
+            cfg, plan, sc.num_blocks, sc.block_size) // sc.num_blocks
+        if mesh is not None:
+            from repro.dist.sharding import named, paged_runtime_specs
+            self._specs = paged_runtime_specs(self.pool, mesh, sc.max_slots,
+                                              sc.num_blocks)
+            # pages live pre-sharded over "model" so the donated decode
+            # pool never reshards (slot s's pages sit on s's partition)
+            self.pool = jax.device_put(self.pool,
+                                       named(mesh, self._specs["pool"]))
 
         B = sc.max_slots
         # host-side decode state, one row per slot
@@ -132,10 +162,33 @@ class Runtime:
         # retrace budgets (analysis/retrace.py): the decode program compiles
         # exactly once per Runtime — a second trace means shape-unstable
         # decode state and would serialize every step behind a compile
+        if mesh is None:
+            step_fn = lambda p, pool, bt, t, pos: decode_step_paged(  # noqa: E731
+                p, cfg, plan, pool, bt, t, pos)
+        else:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            nbl = sc.num_blocks // tp
+            sp = self._specs
+
+            def local_step(p, pool, bt, t, pos):
+                # block tables carry *global* page ids; a shard's slots
+                # only ever hold pages it owns (partitioned allocator), so
+                # localizing is a subtract — the clamp only touches the
+                # padding entries past a slot's live blocks, which the
+                # length mask already hides from attention
+                me = jax.lax.axis_index("model")
+                btl = jnp.maximum(bt - me * nbl, 0)
+                return decode_step_paged(p, cfg, plan, pool, btl, t, pos)
+
+            step_fn = shard_map(
+                local_step, mesh=mesh,
+                in_specs=(P(), sp["pool"], sp["bt"], sp["tok"], sp["pos"]),
+                out_specs=(sp["logits"], sp["pool"]),
+                check_rep=False)
         self._decode = guard_jit(
-            lambda p, pool, bt, t, pos: decode_step_paged(
-                p, cfg, plan, pool, bt, t, pos),
-            name="serve.decode_step", max_traces=1, donate_argnums=(1,))
+            step_fn, name="serve.decode_step", max_traces=1,
+            donate_argnums=(1,))
         self._sample = guard_jit(
             lambda lg, sd, ct, t, tk, tp: sample_batch_seeded(
                 lg, sd, ct, temperature=t, top_k=tk, top_p=tp),
@@ -179,12 +232,39 @@ class Runtime:
     def _write_fn(self, cache_len: int):
         fn = self._write_cache.get(cache_len)
         if fn is None:
+            kv_bits = self.kv_bits
+
             def write(pool, k_seq, v_seq, kv_pos, tlen, table_row):
                 # exclude right-pad rows: only positions < true length
                 pos_row = jnp.where((kv_pos >= 0) & (kv_pos < tlen),
                                     kv_pos, -1)
-                return write_prefill(pool, k_seq, v_seq, pos_row, table_row)
-            fn = guard_jit(write, name=f"serve.prefill_write[{cache_len}]",
+                return write_prefill(pool, k_seq, v_seq, pos_row, table_row,
+                                     kv_bits=kv_bits)
+
+            if self.mesh is not None:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+                nbl = self.serve_cfg.num_blocks // self._tp
+                sp = self._specs
+
+                def write_sharded(pool, k_seq, v_seq, kv_pos, tlen,
+                                  table_row):
+                    # the prefill rows are replicated; every shard runs
+                    # the same scatter with unowned pages remapped to the
+                    # local out-of-range sentinel, so only the owner's
+                    # pages take the rows (write_prefill drops OOB)
+                    me = jax.lax.axis_index("model")
+                    owned = (table_row // nbl) == me
+                    tbl = jnp.where(owned, table_row - me * nbl, nbl)
+                    return write(pool, k_seq, v_seq, kv_pos, tlen, tbl)
+
+                inner = shard_map(
+                    write_sharded, mesh=self.mesh,
+                    in_specs=(sp["pool"], P(), P(), P(), P(), P()),
+                    out_specs=sp["pool"], check_rep=False)
+            else:
+                inner = write
+            fn = guard_jit(inner, name=f"serve.prefill_write[{cache_len}]",
                            max_traces=1, donate_argnums=(0,))
             self._write_cache[cache_len] = fn
         return fn
@@ -428,6 +508,7 @@ class Runtime:
         self._occ_steps += 1
         self._m_free.set(self.allocator.num_free)
         self._m_occ.set(live / self.allocator.num_blocks)
+        self._m_pool_bytes.set(live * self._page_bytes)
         return emitted
 
     def run(self) -> Dict[str, object]:
@@ -510,7 +591,8 @@ class Runtime:
 
 def recover_runtime(params, cfg, plan, journal_dir: str,
                     serve_cfg: ServeConfig = None, injector=None,
-                    fsync: bool = True, tracer=None, metrics=None):
+                    fsync: bool = True, tracer=None, metrics=None,
+                    mesh=None):
     """Crash-recovery entry point: rebuild a Runtime from a request
     journal after a process death. Retired requests are never re-run
     (their tokens live in the journal); every in-flight request is
@@ -521,7 +603,8 @@ def recover_runtime(params, cfg, plan, journal_dir: str,
     state = Journal.replay(journal_dir)
     journal = Journal(journal_dir, fsync=fsync)
     rt = Runtime(params, cfg, plan, serve_cfg, journal=journal,
-                 injector=injector, tracer=tracer, metrics=metrics)
+                 injector=injector, tracer=tracer, metrics=metrics,
+                 mesh=mesh)
     rt.scheduler.advance_rids(state.max_rid)
     for rid in sorted(state.inflight):
         rec = state.inflight[rid]

@@ -148,6 +148,19 @@ class Scheduler:
         self._rid = itertools.count()
         self.completed: List[Request] = []
         self.preemptions = 0
+        # TP pool sharding (DESIGN.md §11): the allocator splits the pool
+        # into one contiguous page range per device shard, and slots pin
+        # to the partition holding their shard's slice of the batch dim —
+        # a slot only ever references pages its own device owns, which is
+        # what keeps the sharded decode step collective-free.
+        if max_slots % allocator.partitions:
+            raise ValueError(
+                f"max_slots={max_slots} must split evenly over "
+                f"{allocator.partitions} pool partitions")
+        self._slots_per_part = max_slots // allocator.partitions
+
+    def partition_of_slot(self, slot: int) -> int:
+        return slot // self._slots_per_part
 
     # -- intake --------------------------------------------------------------
 
@@ -193,10 +206,11 @@ class Scheduler:
         req.t_submit = time.time()
         self.bucket_for(req.prompt_len)       # validate early
         need = self.lifetime_blocks(req)
-        if need > self.allocator.num_blocks:
+        if need > self.allocator.partition_blocks:
             raise ValueError(
                 f"request needs {need} pages but the pool only has "
-                f"{self.allocator.num_blocks} — it could never be admitted")
+                f"{self.allocator.partition_blocks} per partition — it "
+                "could never be admitted")
         self.queue.append(req)
         return req
 
@@ -208,7 +222,7 @@ class Scheduler:
         req.rid = rid
         req.t_submit = time.time()
         self.bucket_for(req.prompt_len)
-        if self.lifetime_blocks(req) > self.allocator.num_blocks:
+        if self.lifetime_blocks(req) > self.allocator.partition_blocks:
             raise ValueError("replayed request no longer fits the pool")
         self.queue.append(req)
         return req
@@ -221,11 +235,25 @@ class Scheduler:
     def _head(self) -> Optional[Request]:
         return min(self.queue, key=_order_key) if self.queue else None
 
-    def _pick_victim(self) -> Optional[Request]:
-        """The least-important running request: largest (priority, rid)."""
-        if not self.running:
-            return None
-        return max(self.running.values(), key=_order_key)
+    def _pick_victim(self, part: Optional[int] = None) -> Optional[Request]:
+        """The least-important running request: largest (priority, rid).
+        With `part` set, only requests whose slot lives in that pool
+        partition qualify — reclaiming pages a different device shard
+        owns could never satisfy this allocation."""
+        pool = [r for r in self.running.values()
+                if part is None or self.partition_of_slot(r.slot) == part]
+        return max(pool, key=_order_key) if pool else None
+
+    def _slot_index_for(self, need: int) -> int:
+        """Index into `_free_slots` of the slot to admit into: the pop-
+        order (last) slot unless another free slot's partition can already
+        satisfy the page allocation. Single-partition pools always take
+        the last slot — identical to the pre-partition behavior."""
+        for i in range(len(self._free_slots) - 1, -1, -1):
+            part = self.partition_of_slot(self._free_slots[i])
+            if self.allocator.num_free_in(part) >= need:
+                return i
+        return len(self._free_slots) - 1
 
     def preempt(self, req: Request,
                 on_preempt: Optional[Callable[[Request], None]] = None
@@ -258,20 +286,29 @@ class Scheduler:
         while self.queue:
             req = self._head()
             need = self.initial_blocks(req)
-            while not self._free_slots or self.allocator.num_free < need:
-                victim = self._pick_victim()
+            while True:
+                if self._free_slots:
+                    idx = self._slot_index_for(need)
+                    part = self.partition_of_slot(self._free_slots[idx])
+                    if self.allocator.num_free_in(part) >= need:
+                        break
+                else:
+                    part = None      # need a slot first: any victim works
+                victim = self._pick_victim(part)
                 if (self.policy != "preempt" or victim is None
                         or _order_key(victim) <= _order_key(req)):
                     break
                 self.preempt(victim, on_preempt)
             if not self._free_slots:
                 break
-            blocks = self.allocator.alloc(need)
+            idx = self._slot_index_for(need)
+            part = self.partition_of_slot(self._free_slots[idx])
+            blocks = self.allocator.alloc(need, part)
             if blocks is None:       # pool exhausted: backpressure
                 break
             self.queue.remove(req)
             req.blocks = blocks
-            req.slot = self._free_slots.pop()
+            req.slot = self._free_slots.pop(idx)
             req.state = "running"
             self.running[req.slot] = req
             admitted.append(req)
@@ -291,8 +328,9 @@ class Scheduler:
         if total_blocks > self.max_blocks_per_slot:
             raise ValueError(f"request {req.rid} grew past "
                              f"max_blocks_per_slot={self.max_blocks_per_slot}")
+        part = self.partition_of_slot(req.slot)
         while len(req.blocks) < total_blocks:
-            got = self.allocator.alloc(total_blocks - len(req.blocks))
+            got = self.allocator.alloc(total_blocks - len(req.blocks), part)
             if got is not None:
                 req.blocks.extend(got)
                 return True
@@ -301,7 +339,7 @@ class Scheduler:
                     f"page pool exhausted growing request {req.rid} under "
                     "reserve policy — lifetime reservation should have "
                     "covered this (allocator accounting bug)")
-            victim = self._pick_victim()
+            victim = self._pick_victim(part)
             if victim is None or victim is req:
                 # req is the least-important running request (or an
                 # injected alloc fault fired with nothing to reclaim):

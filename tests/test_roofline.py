@@ -112,3 +112,56 @@ def test_collective_bytes_on_sharded_compile():
     # contraction over the sharded dim => all-reduce of the (128, 256) out
     assert "all-reduce" in data["coll"]
     assert data["coll"]["all-reduce"] >= 128 * 256 * 4
+
+
+# ---------------------------------------------------------------------------
+# bytes-per-decode-token model (roofline/kv_bytes.py, DESIGN.md §11.4)
+# ---------------------------------------------------------------------------
+
+def test_kv_bytes_model_terms():
+    from repro.configs import get_smoke_config
+    from repro.models import BuildPlan
+    from repro.roofline.kv_bytes import decode_kv_bytes, pool_elem_bytes
+    cfg = get_smoke_config("qwen2-7b")
+    plan_b = BuildPlan(remat=False, cache_dtype=jnp.float32)
+    plan_q = plan_b.replace(kv_bits=8)
+    assert pool_elem_bytes(plan_b) == 4.0
+    assert pool_elem_bytes(plan_q) == 1.0
+    assert pool_elem_bytes(plan_b.replace(kv_bits=4)) == 0.5
+    kw = dict(max_slots=4, block_size=16, max_blocks_per_slot=8,
+              num_blocks=32)
+    for mode in ("xla", "pallas"):
+        b = decode_kv_bytes(cfg, plan_b, mode=mode, **kw)
+        q = decode_kv_bytes(cfg, plan_q, mode=mode, **kw)
+        # quantized codes are exactly storage-ratio smaller; scales only
+        # exist on the quantized side and stay a small fraction of codes
+        assert q["codes"] == b["codes"] / 4.0
+        assert b["scales"] == 0.0 and 0 < q["scales"] < 0.2 * q["codes"]
+        assert q["kv_total"] < b["kv_total"]
+    # pallas mode bounds live pages by live_tokens
+    short = decode_kv_bytes(cfg, plan_q, mode="pallas", live_tokens=16, **kw)
+    full = decode_kv_bytes(cfg, plan_q, mode="pallas", **kw)
+    assert short["codes"] == full["codes"] / 8   # 1 of 8 pages live
+    # xla mode needs the scatter output extent
+    with pytest.raises(ValueError):
+        decode_kv_bytes(cfg, plan_q, max_slots=4, block_size=16,
+                        max_blocks_per_slot=8, mode="xla")
+
+
+def test_kv_bytes_step_totals_and_weights():
+    from repro.configs import get_smoke_config
+    from repro.models import BuildPlan, count_params
+    from repro.roofline.kv_bytes import (decode_step_bytes,
+                                         weight_stream_bytes)
+    cfg = get_smoke_config("qwen2-7b")
+    plan = BuildPlan(remat=False, cache_dtype=jnp.float32)
+    params = jax.eval_shape(
+        lambda: __import__("repro.models", fromlist=["init_params"])
+        .init_params(jax.random.PRNGKey(0), cfg, plan))
+    w = weight_stream_bytes(params)
+    assert w == 4 * count_params(cfg, plan)      # f32 master weights
+    out = decode_step_bytes(params, cfg, plan, max_slots=4, block_size=16,
+                            max_blocks_per_slot=8, num_blocks=32)
+    assert out["total"] == pytest.approx(
+        w + out["kv_total"] + out["logits"])
+    assert out["per_token"] == pytest.approx(out["total"] / 4)
